@@ -1,0 +1,106 @@
+"""Assemble EXPERIMENTS.md §Dry-run and §Roofline tables from artifacts.
+
+    PYTHONPATH=src:. python -m benchmarks.make_experiments
+prints the markdown tables; the narrative sections live in EXPERIMENTS.md
+directly.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .roofline import ARTIFACT_DIR, load_cells, terms_of
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load_all() -> tuple[list[dict], list[dict]]:
+    single, multi = [], []
+    for p in sorted(ARTIFACT_DIR.glob("*.json")):
+        if any(p.stem.endswith(s) for s in
+               ("_scatter", "_triangular", "_noremat", "_nofsdp")):
+            continue
+        c = json.loads(p.read_text())
+        (multi if "multipod" in p.name else single).append(c)
+    return single, multi
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}µs"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table() -> str:
+    single, multi = load_all()
+    mp = {(c["arch"], c["shape"]): c for c in multi}
+    lines = [
+        "| arch | shape | 16×16 compile | peak GB/chip | fits 16GB | "
+        "2×16×16 compile | collective schedule (AG/AR/RS/A2A/CP) |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for c in single:
+        key = (c["arch"], c["shape"])
+        m = mp.get(key)
+        if c.get("skipped"):
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | — | "
+                         f"SKIP: sub-quadratic required |")
+            continue
+        ma = c["memory_analysis"]
+        cs = c.get("collective_schedule", {})
+        sched = "/".join(str(cs.get(k, 0)) for k in (
+            "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+            "collective-permute"))
+        mp_t = f"{m['timing']['compile_s']:.0f}s" if m and not m.get("skipped") else "—"
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['timing']['compile_s']:.0f}s | "
+            f"{ma['peak_estimate_bytes']/2**30:.2f} | "
+            f"{'✓' if ma['fits_16gb'] else '✗'} | {mp_t} | {sched} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    single, _ = load_all()
+    lines = [
+        "| arch | shape | compute | memory (analytic) | collective | "
+        "dominant | bound | MODEL/HLO flops | HLO-bytes term (CPU pipeline) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in single:
+        if c.get("skipped") or "roofline" not in c:
+            continue
+        t = terms_of(c)
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{t['dominant'].replace('_s','')} | {fmt_s(t['bound_s'])} | "
+            f"{t['useful_ratio']:.3f} | {fmt_s(t['memory_s_hlo_cpu'])} |")
+    return "\n".join(lines)
+
+
+def summary() -> str:
+    single, multi = load_all()
+    live_s = [c for c in single if not c.get("skipped")]
+    live_m = [c for c in multi if not c.get("skipped")]
+    fits = sum(c["memory_analysis"]["fits_16gb"] for c in live_s)
+    return (f"single-pod cells compiled: {len(live_s)} "
+            f"(+{len(single)-len(live_s)} long_500k skips); "
+            f"multi-pod cells compiled: {len(live_m)}; "
+            f"fits-16GB: {fits}/{len(live_s)}")
+
+
+def main() -> None:
+    print("## Dry-run table\n")
+    print(dryrun_table())
+    print("\n## Roofline table\n")
+    print(roofline_table())
+    print("\n## Summary\n")
+    print(summary())
+
+
+if __name__ == "__main__":
+    main()

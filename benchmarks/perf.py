@@ -1,0 +1,109 @@
+"""Performance benchmarks: the paper-faithful scalar decision path vs the
+beyond-paper vectorized JAX engine (§Perf of EXPERIMENTS.md).
+
+Measured on this host (CPU): the ratio, not the absolute numbers, is the
+portable result; on TPU the batched path additionally fuses with the
+serving step.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.batch_decision import (
+    batch_evaluate,
+    batch_implied_lambda,
+    batch_posterior_update,
+    counterfactual_grid,
+)
+from repro.core.decision import speculation_decision
+from repro.core.posterior import BetaPosterior
+
+A_C = 0.0135
+RNG = np.random.default_rng(7)
+
+
+def bench_scalar_decision(n: int = 20_000) -> float:
+    """us per D4 decision, paper-faithful scalar path (§6.5 pseudocode)."""
+    Ps = RNG.uniform(0, 1, n)
+    t0 = time.perf_counter()
+    for p in Ps:
+        speculation_decision(float(p), 0.5, 0.08, 500, 800, 3e-6, 15e-6, 0.8)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_batch_decision(n: int = 1_000_000) -> float:
+    """us per decision through the jit'd batch engine."""
+    Ps = RNG.uniform(0, 1, n)
+    # warm up compile
+    batch_evaluate(Ps[:16], 0.5, 0.08, 0.8, 500, 800, 3e-6, 15e-6)[0].block_until_ready()
+    t0 = time.perf_counter()
+    out = batch_evaluate(Ps, 0.5, 0.08, 0.8, 500, 800, 3e-6, 15e-6)
+    out[0].block_until_ready()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_scalar_replay_grid(n_logs: int = 2_000) -> float:
+    """us per (row x grid-point) for the §12.1 counterfactual grid, scalar."""
+    lat = RNG.uniform(0.5, 3.0, n_logs)
+    cost = np.full(n_logs, A_C)
+    alphas = [0.0, 0.25, 0.5, 0.75, 1.0]
+    lambdas = [0.005, 0.01, 0.05, 0.1]
+    t0 = time.perf_counter()
+    for a in alphas:
+        for lam in lambdas:
+            for i in range(n_logs):
+                ev = 0.7 * lat[i] * lam - 0.3 * cost[i]
+                _ = ev >= (1 - a) * cost[i]
+    cells = len(alphas) * len(lambdas) * n_logs
+    return (time.perf_counter() - t0) / cells * 1e6
+
+
+def bench_batch_replay_grid(n_logs: int = 1_000_000) -> float:
+    """us per (row x grid-point) through the single-XLA-call grid."""
+    lat = RNG.uniform(0.5, 3.0, n_logs)
+    cost = np.full(n_logs, A_C)
+    alphas = [0.0, 0.25, 0.5, 0.75, 1.0]
+    lambdas = [0.005, 0.01, 0.05, 0.1]
+    counterfactual_grid(0.7, lat[:16], cost[:16], alphas, lambdas)  # warm
+    t0 = time.perf_counter()
+    counterfactual_grid(0.7, lat, cost, alphas, lambdas)
+    cells = len(alphas) * len(lambdas) * n_logs
+    return (time.perf_counter() - t0) / cells * 1e6
+
+
+def bench_scalar_posterior(n: int = 50_000) -> float:
+    post = BetaPosterior.from_prior_mean(0.5)
+    outcomes = RNG.random(n) < 0.6
+    t0 = time.perf_counter()
+    for o in outcomes:
+        post.update(bool(o))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def bench_batch_posterior(edges: int = 4096, n: int = 256) -> float:
+    a0 = np.full(edges, 1.0)
+    b0 = np.full(edges, 1.0)
+    outcomes = (RNG.random((edges, n)) < 0.6).astype(np.float32)
+    batch_posterior_update(a0[:4], b0[:4], outcomes[:4])  # warm
+    t0 = time.perf_counter()
+    batch_posterior_update(a0, b0, outcomes)
+    return (time.perf_counter() - t0) / (edges * n) * 1e6
+
+
+def benchmarks() -> list[tuple[str, float, str]]:
+    rows = []
+    scalar = bench_scalar_decision()
+    batch = bench_batch_decision()
+    rows.append(("decision_scalar_paper", scalar, "per-decision"))
+    rows.append(("decision_batch_jax", batch, f"speedup={scalar / batch:.0f}x"))
+    sg = bench_scalar_replay_grid()
+    bg = bench_batch_replay_grid()
+    rows.append(("replay_grid_scalar", sg, "per-cell"))
+    rows.append(("replay_grid_batch_jax", bg, f"speedup={sg / bg:.0f}x"))
+    sp = bench_scalar_posterior()
+    bp = bench_batch_posterior()
+    rows.append(("posterior_scalar", sp, "per-update"))
+    rows.append(("posterior_batch_jax", bp, f"speedup={sp / bp:.0f}x"))
+    return rows

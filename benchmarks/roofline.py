@@ -1,0 +1,76 @@
+"""Roofline benchmark: reads the dry-run artifacts and prints the
+per-(arch x shape) three-term table (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    if not ARTIFACT_DIR.exists():
+        return cells
+    for p in sorted(ARTIFACT_DIR.glob("*.json")):
+        if "multipod" in p.name:
+            continue
+        if tag and not p.stem.endswith(f"_{tag}"):
+            continue
+        if not tag and any(p.stem.endswith(s) for s in ("_scatter", "_triangular", "_nofsdp", "_noremat", "_absorbed")):
+            continue
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def terms_of(cell: dict) -> dict:
+    """Recompute the three roofline terms from the raw artifact numbers
+    (memory term = analytic TPU traffic; the CPU-pipeline HLO bytes are kept
+    as a secondary column — see EXPERIMENTS.md §Roofline caveat)."""
+    r = cell["roofline"]
+    peak, hbm, ici = 197e12, 819e9, 50e9
+    flops_dev = r["compute_s"] * peak            # invert stored term
+    coll_s = r["collective_s"]
+    mem_analytic_s = r.get("memory_s_analytic_tpu",
+                           r["hbm_bytes_analytic_per_device"] / hbm
+                           if "hbm_bytes_analytic_per_device" in r else r["memory_s"])
+    mem_hlo_s = r.get("memory_s_hlo_cpu", r["memory_s"])
+    terms = {"compute_s": r["compute_s"], "memory_s": mem_analytic_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    return {**terms, "memory_s_hlo_cpu": mem_hlo_s, "dominant": dom,
+            "bound_s": bound, "useful_ratio": r["useful_flops_ratio"],
+            "flops_dev": flops_dev}
+
+
+def table(tag: str = "") -> str:
+    rows = ["arch,shape,dominant,compute_s,memory_s,collective_s,"
+            "useful_ratio,fits_16gb,skipped"]
+    for c in load_cells(tag):
+        if c.get("skipped"):
+            rows.append(f"{c['arch']},{c['shape']},skip,,,,,,{c['reason'][:40]}")
+            continue
+        if "roofline" not in c:
+            continue
+        t = terms_of(c)
+        rows.append(
+            f"{c['arch']},{c['shape']},{t['dominant']},{t['compute_s']:.4g},"
+            f"{t['memory_s']:.4g},{t['collective_s']:.4g},"
+            f"{t['useful_ratio']:.3f},"
+            f"{c['memory_analysis']['fits_16gb']},"
+        )
+    return "\n".join(rows)
+
+
+def benchmarks() -> list[tuple[str, float, str]]:
+    cells = [c for c in load_cells() if not c.get("skipped") and "roofline" in c]
+    if not cells:
+        return [("roofline_table", 0.0, "no dry-run artifacts yet")]
+    n_fit = sum(c["memory_analysis"]["fits_16gb"] for c in cells)
+    worst = min(cells, key=lambda c: c["roofline"]["useful_flops_ratio"])
+    return [(
+        "roofline_table", float(len(cells)),
+        f"cells={len(cells)} fit={n_fit} worst_ratio="
+        f"{worst['arch']}/{worst['shape']}:{worst['roofline']['useful_flops_ratio']:.3f}",
+    )]

@@ -1,0 +1,24 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark).
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import appendix_d, paper_tables, perf, roofline, workflow_sim
+
+    rows: list[tuple[str, float, str]] = []
+    for mod in (paper_tables, appendix_d, workflow_sim, perf, roofline):
+        rows.extend(mod.benchmarks())
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

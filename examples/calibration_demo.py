@@ -1,0 +1,110 @@
+"""The full §12 calibration lifecycle on one edge, end to end:
+
+  offline replay -> shadow mode -> canary (alpha sweep + implied-lambda
+  audit) -> online calibration -> drift kill-switch.
+
+    PYTHONPATH=src python examples/calibration_demo.py
+"""
+import numpy as np
+
+from repro.core.calibration import (
+    SequentialLogRecord,
+    canary,
+    offline_replay,
+    online_calibration,
+    shadow_mode,
+)
+from repro.core.decision import decision_threshold, expected_value
+from repro.core.drift import DriftMonitor
+from repro.core.posterior import BetaPosterior
+from repro.core.predictor import HistoricalModalPredictor
+from repro.core.telemetry import SpeculationDecision, TelemetryLog
+
+EDGE = ("intent-classifier", "reply-drafter")
+INTENTS = ["billing", "support", "sales", "spam", "other"]
+PROBS = [0.62, 0.12, 0.10, 0.09, 0.07]
+C_SPEC, L_UP, LAM = 0.0135, 0.8, 0.08
+
+
+def main() -> None:
+    rng = np.random.default_rng(20260531)
+
+    # ---- stage 1: offline replay on sequential logs (§12.1)
+    intents = rng.choice(INTENTS, p=PROBS, size=500)
+    logs = [SequentialLogRecord("email", i, "draft-req", "draft", L_UP, C_SPEC)
+            for i in intents]
+    pred = HistoricalModalPredictor()
+    pred.observe_many([("email", i) for i in intents])
+    replay = offline_replay(EDGE, logs, {"modal": pred})
+    print(f"[replay]  k_raw={replay.k_raw} p_mode={replay.p_mode:.2f} "
+          f"k_eff={replay.k_eff:.2f} dep_type={replay.dep_type.value}")
+    print(f"[replay]  seeded prior P={replay.seeded_prior.mean:.3f} "
+          f"go={replay.go} default_alpha={replay.default_alpha}")
+
+    # ---- stage 2: shadow mode (§12.2)
+    trials = [("billing", "billing") if rng.random() < replay.p_mode
+              else (rng.choice(INTENTS[1:]), "billing") for _ in range(150)]
+    shadow = shadow_mode(EDGE, replay.seeded_prior.copy(), trials,
+                         graded_subset=[("refund", "refund", True),
+                                        ("refund", "weather", False)] * 15,
+                         output_token_counts=list(rng.normal(800, 30, 40)),
+                         cancel_fractions=list(rng.uniform(0.2, 0.5, 20)))
+    print(f"[shadow]  {shadow.trials} trials, converged={shadow.converged}, "
+          f"P={shadow.posterior.mean:.3f}, tier2_thr={shadow.best_tier2_threshold}, "
+          f"rho={shadow.rho_mean:.2f}")
+
+    # ---- stage 3: canary with alpha sweep + implied-lambda (§12.3)
+    P = shadow.posterior.mean
+    sweep = {}
+    for a in (0.1, 0.3, 0.5, 0.7, 0.9):
+        spec = expected_value(P, L_UP * LAM, C_SPEC) >= decision_threshold(a, C_SPEC)
+        lat = L_UP * (1 - P) + 0.8 if spec else 1.6        # drafter is 0.8s
+        cost = 0.0165 + (1 - P) * C_SPEC * shadow.rho_mean if spec else 0.0165
+        sweep[a] = (lat, cost)
+    rep = canary(1.6, 0.0165, sweep, chosen_alpha=0.9, P=P, C_spec=C_SPEC,
+                 L_upstream_s=L_UP, lambda_declared=LAM)
+    print(f"[canary]  pareto_alphas={rep.pareto_alphas} "
+          f"lambda_implied={rep.lambda_implied:.4f} vs declared {LAM} "
+          f"-> audit: {rep.audit}; promote={rep.promote}")
+
+    # ---- stage 4: online calibration (§12.4)
+    log = TelemetryLog()
+    for i in range(300):
+        ok = bool(rng.random() < P)
+        log.emit(SpeculationDecision(
+            decision_id=f"d{i}", trace_id=f"t{i}", edge=EDGE,
+            dep_type="router_k_way", tenant="acme", model_version=("m", "v1"),
+            alpha=0.5, lambda_usd_per_s=LAM, P_mean=P, P_lower_bound=None,
+            C_spec_est_usd=C_SPEC, L_est_s=L_UP, input_tokens_est=500,
+            output_tokens_est=800, input_price=3e-6, output_price=15e-6,
+            EV_usd=expected_value(P, L_UP * LAM, C_SPEC),
+            threshold_usd=decision_threshold(0.5, C_SPEC),
+            decision="SPECULATE", phase="runtime", overrode="none",
+            i_hat_source="modal", uncertain_cost_flag=False, enabled=True,
+            budget_remaining_usd=None, i_actual="billing" if ok else "spam",
+            tier1_match=ok, tier2_match=None,
+            tier3_accept=(True if ok else False) if i % 20 == 0 else None,
+            C_spec_actual_usd=C_SPEC if ok else C_SPEC * 0.5,
+            tokens_generated_before_cancel=800 if ok else 296,
+            latency_actual_s=L_UP, committed_speculative=ok,
+        ))
+    online = online_calibration(log)
+    print(f"[online]  buckets={[(b.midpoint, round(b.empirical_rate, 2))
+                                for b in online.buckets]} "
+          f"tier2_far={online.tier2_false_accept_rate} cov={online.token_cov:.3f}")
+
+    # ---- stage 5: drift kill-switch (§12.5)
+    mon = DriftMonitor(monthly_budget_usd=50.0)
+    for _ in range(500):
+        mon.observe_posterior_mean(EDGE, 0.62)
+    for _ in range(100):
+        ev = mon.observe_posterior_mean(EDGE, 0.35)
+    print(f"[drift]   trigger={ev.kind.value}: {ev.action}")
+    slo = mon.check_cost_slo(75.0)
+    print(f"[drift]   trigger={slo.kind.value}: {slo.action}")
+    print(f"[drift]   effective alpha for {EDGE} now: "
+          f"{mon.effective_alpha(EDGE, 0.9)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Quickstart: one speculation decision + one speculative workflow run.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import (
+    BetaPosterior,
+    DependencyType,
+    Edge,
+    ExecutorConfig,
+    Operation,
+    PlannerParams,
+    Workflow,
+    execute,
+    plan_workflow,
+    speculation_decision,
+)
+from repro.core.predictor import HistoricalModalPredictor
+
+
+def single_decision() -> None:
+    """The paper's §10.1 worked example, through the §6.5 API."""
+    decision = speculation_decision(
+        P=0.733,                      # posterior mean (App. A.4)
+        alpha=0.5,                    # balanced latency/cost preference
+        lambda_dollars_per_sec=0.01,  # deployment latency value
+        input_tokens=500, output_tokens=1000,
+        input_price=3e-6, output_price=15e-6,   # $3/M in, $15/M out
+        latency_seconds=5.0,          # reclaimable upstream wait
+    )
+    print(f"§10.1 worked example -> {decision}")   # SPECULATE
+
+
+def speculative_workflow() -> None:
+    """Document-analyzer -> topic-researcher with D1 speculation."""
+    wf = Workflow("doc-pipeline")
+    wf.add_op(Operation(
+        "analyzer", run=lambda doc: "quantum-computing",
+        latency_est_s=5.0, metadata={"input": "whitepaper.pdf"},
+    ))
+    wf.add_op(Operation(
+        "researcher", run=lambda topic: f"research-notes[{topic}]",
+        latency_est_s=5.0, input_tokens_est=500, output_tokens_est=1000,
+    ))
+    wf.add_edge(Edge("analyzer", "researcher",
+                     dep_type=DependencyType.LIST_OUTPUT_VARIABLE_LENGTH))
+    wf.freeze()
+
+    params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+    plan, candidates = plan_workflow(wf, params)       # Phase 1
+    print(f"plan: concurrency={plan.concurrency} "
+          f"E[latency]={plan.expected_latency_s:.2f}s "
+          f"E[cost]=${plan.expected_cost_usd:.4f} "
+          f"speculated={plan.speculated_edges()}")
+
+    predictor = HistoricalModalPredictor()
+    predictor.observe("whitepaper.pdf", "quantum-computing")  # logged history
+    cfg = ExecutorConfig(params=params,
+                         predictors={("analyzer", "researcher"): predictor})
+    report = execute(wf, plan, cfg)                    # Phase 2
+    print(f"executed: makespan={report.makespan_s:.2f}s "
+          f"(sequential would be {wf.sequential_latency():.2f}s) "
+          f"cost=${report.total_cost_usd:.4f} waste=${report.waste_usd:.4f}")
+    print(f"outputs: {report.outputs}")
+    post = params.posteriors[("analyzer", "researcher")]
+    print(f"posterior after run: mean={post.mean:.3f} "
+          f"({post.successes}s/{post.failures}f)")
+
+
+if __name__ == "__main__":
+    single_decision()
+    speculative_workflow()

@@ -1,0 +1,4 @@
+"""repro — cost-aware speculative execution for LLM-agent workflows on a
+multi-pod JAX substrate (paper: Fareed, CS.DC 2026)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+"""repro.checkpoint — sharded atomic checkpoints with async save + reshard."""
+from .io import AsyncSaver, available_steps, latest_step, load_pytree, save_pytree
+
+__all__ = ["save_pytree", "load_pytree", "AsyncSaver", "latest_step", "available_steps"]

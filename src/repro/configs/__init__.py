@@ -1,0 +1,16 @@
+"""repro.configs — assigned architectures, shapes, and scenario configs."""
+from .archs import REGISTRY, get_config
+from .base import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SHAPES,
+    ShapeConfig,
+    SSMConfig,
+    shape_for,
+)
+
+__all__ = [
+    "REGISTRY", "get_config", "ModelConfig", "MoEConfig", "MLAConfig",
+    "SSMConfig", "ShapeConfig", "SHAPES", "shape_for",
+]

@@ -1,0 +1,218 @@
+"""The 10 assigned architectures, exact configs from the assignment table.
+
+Each entry records its source tag.  ``REGISTRY`` maps --arch ids to
+ModelConfig; per-arch modules (qwen2_vl_72b.py etc.) re-export for the
+one-file-per-arch convention.
+"""
+from __future__ import annotations
+
+from .base import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+
+__all__ = ["REGISTRY", "get_config"]
+
+
+# [vlm] 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064 — M-RoPE,
+# dynamic resolution [arXiv:2409.12191; hf]
+QWEN2_VL_72B = ModelConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    qkv_bias=True,                      # qwen2 family QKV bias
+    rope_theta=1_000_000.0,
+    mrope_sections=(16, 24, 24),        # sums to head_dim/2
+    vision_tokens=256,                  # stub frontend supplies patch embeds
+)
+
+# [dense] 16L d_model=2048 32H (GQA kv=8) d_ff=8192 vocab=128256
+# [hf:meta-llama/Llama-3.2-1B; unverified]
+LLAMA3_2_1B = ModelConfig(
+    name="llama3.2-1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500_000.0,
+    tie_embeddings=True,
+)
+
+# [dense] 60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+# [arXiv:2403.04652; hf]
+YI_34B = ModelConfig(
+    name="yi-34b",
+    family="dense",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5_000_000.0,
+)
+
+# [dense] 64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064 — QKV bias
+# [hf:Qwen/Qwen2.5-0.5B; hf]
+QWEN2_5_32B = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    num_layers=64,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+)
+
+# [dense] 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152 — code
+# [arXiv:2405.04324; hf]
+GRANITE_34B = ModelConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,                     # MQA
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+)
+
+# [moe] 35L d_model=7168 56H (GQA kv=8) d_ff=4864 vocab=32000, MoE 128e top-2
+# + dense residual [hf:Snowflake/snowflake-arctic-base; hf]
+ARCTIC_480B = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,                          # dense-residual FFN width
+    vocab_size=32000,
+    moe=MoEConfig(
+        num_experts=128,
+        top_k=2,
+        d_ff_expert=4864,
+        dense_residual=True,            # Arctic's dense-MoE hybrid
+    ),
+)
+
+# [moe] 61L d_model=7168 128H d_ff=2048 vocab=129280, MoE 256e top-8 — MLA,
+# 1 shared + 256 routed top-8, MTP [arXiv:2412.19437; hf]
+DEEPSEEK_V3_671B = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,                   # MLA: per-head latent, no GQA grouping
+    head_dim=128,
+    d_ff=2048,                          # routed-expert width
+    vocab_size=129280,
+    attn_type="mla",
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_ff_expert=2048,
+        num_shared_experts=1,
+        first_dense_layers=3,           # DSv3: first 3 layers dense
+        dense_d_ff=18432,
+    ),
+    mtp_depth=1,                        # multi-token prediction aux head
+)
+
+# [hybrid] 38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000 —
+# RG-LRU + local attn, 1:2 [arXiv:2402.19427; unverified]
+RECURRENTGEMMA_9B = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,                     # MQA
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    layer_pattern=("rglru", "rglru", "attn"),   # 1 attn : 2 recurrent
+    local_window=2048,
+    lru_width=4096,
+    tie_embeddings=True,
+    sub_quadratic=True,                 # runs long_500k
+)
+
+# [audio] 48L d_model=1536 24H (kv=24, MHA) d_ff=6144 vocab=2048 —
+# decoder-only over EnCodec tokens [arXiv:2306.05284; hf]
+MUSICGEN_MEDIUM = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    num_codebooks=4,                    # EnCodec RVQ codebooks, delay pattern
+)
+
+# [ssm] 48L d_model=2048 (attn-free) d_ff=0 vocab=50280, ssm_state=128 —
+# SSD (state-space duality) [arXiv:2405.21060; unverified]
+MAMBA2_1_3B = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab_size=50280,
+    attn_type="none",
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk_size=256),
+    tie_embeddings=True,
+    sub_quadratic=True,                 # runs long_500k
+)
+
+
+REGISTRY: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        QWEN2_VL_72B,
+        LLAMA3_2_1B,
+        YI_34B,
+        QWEN2_5_32B,
+        GRANITE_34B,
+        ARCTIC_480B,
+        DEEPSEEK_V3_671B,
+        RECURRENTGEMMA_9B,
+        MUSICGEN_MEDIUM,
+        MAMBA2_1_3B,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}") from None

@@ -1,0 +1,51 @@
+"""The paper's canonical scenario parameters (DESIGN.md 'Canonical
+parameters'): the §10 worked example and the Appendix D AutoReply setup.
+
+Everything in the benchmarks/tests that reproduces a paper number reads
+from here, so the two parameter sets exist in exactly one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["ScenarioParams", "WORKED_EXAMPLE", "AUTOREPLY", "SEED"]
+
+SEED = 20260531  # Appendix D fixed seed
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioParams:
+    input_tokens: int
+    output_tokens: int
+    input_price: float          # USD/token
+    output_price: float
+    latency_savings_s: float    # reclaimable upstream wait L
+    lambda_usd_per_s: float
+
+    @property
+    def C_spec(self) -> float:
+        return (self.input_tokens * self.input_price
+                + self.output_tokens * self.output_price)
+
+    @property
+    def L_value(self) -> float:
+        return self.latency_savings_s * self.lambda_usd_per_s
+
+
+# §10.1 worked example: C_spec = $0.0165, L_value = $0.05
+WORKED_EXAMPLE = ScenarioParams(
+    input_tokens=500, output_tokens=1000,
+    input_price=3e-6, output_price=15e-6,
+    latency_savings_s=5.0, lambda_usd_per_s=0.01,
+)
+
+# Appendix D AutoReply: C_spec = $0.0135, L_value = $0.064
+AUTOREPLY = ScenarioParams(
+    input_tokens=500, output_tokens=800,
+    input_price=3e-6, output_price=15e-6,
+    latency_savings_s=0.8, lambda_usd_per_s=0.08,
+)
+
+assert abs(WORKED_EXAMPLE.C_spec - 0.0165) < 1e-12
+assert abs(AUTOREPLY.C_spec - 0.0135) < 1e-12
+assert abs(AUTOREPLY.L_value - 0.064) < 1e-12

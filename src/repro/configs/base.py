@@ -1,0 +1,230 @@
+"""Model/shape configuration system.
+
+One ``ModelConfig`` per assigned architecture (exact numbers from the
+assignment table), plus reduced smoke variants and the four assigned input
+shapes.  The FULL configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation); smoke tests use ``reduced()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = [
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "ModelConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "shape_for",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0          # deepseek: 1 shared
+    dense_residual: bool = False         # arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0          # deepseek: first 3 layers are dense FFN
+    dense_d_ff: Optional[int] = None     # d_ff of those dense layers
+    router_aux_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk_size: int = 256
+    conv_width: int = 4
+    ngroups: int = 1
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def num_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | hybrid | ssm | audio | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention
+    attn_type: str = "gqa"           # gqa | mla | none
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    mrope_sections: Optional[tuple[int, int, int]] = None  # qwen2-vl M-RoPE
+    local_window: Optional[int] = None                     # sliding-window attn
+    # hybrid pattern: per-layer kinds, cycled; e.g. ("rglru","rglru","attn")
+    layer_pattern: Optional[tuple[str, ...]] = None
+    lru_width: Optional[int] = None
+
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+
+    # audio (musicgen): decoder over K EnCodec codebooks
+    num_codebooks: int = 1
+    # vlm (qwen2-vl): stub frontend supplies this many patch embeddings
+    vision_tokens: int = 0
+
+    mtp_depth: int = 0               # deepseek multi-token prediction heads
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    # True when the architecture has a sub-quadratic sequence mixer and can
+    # serve the long_500k shape (DESIGN.md §5 skip table)
+    sub_quadratic: bool = False
+    scan_layers: bool = True
+    remat: bool = True
+    attn_impl: str = "xla"           # xla | pallas (TPU only)
+
+    # ------------------------------------------------------------- derived
+    @property
+    def q_dim(self) -> int:
+        return self.num_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.num_kv_heads * self.head_dim
+
+    def param_count(self) -> int:
+        """Approximate parameter count (embeddings + layers + head)."""
+        d, V, L = self.d_model, self.vocab_size, self.num_layers
+        emb = V * d * self.num_codebooks
+        head = 0 if self.tie_embeddings else V * d * max(1, self.num_codebooks)
+        per_layer = 0
+        if self.attn_type == "gqa":
+            per_layer += d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+        elif self.attn_type == "mla":
+            m = self.mla
+            qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+            per_layer += d * m.q_lora_rank + m.q_lora_rank * self.num_heads * qk_dim
+            per_layer += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            per_layer += m.kv_lora_rank * self.num_heads * (
+                m.qk_nope_head_dim + m.v_head_dim
+            )
+            per_layer += self.num_heads * m.v_head_dim * d
+        if self.moe is not None:
+            moe_layers = L - self.moe.first_dense_layers
+            dense_layers = self.moe.first_dense_layers
+            e = self.moe.num_experts + self.moe.num_shared_experts
+            moe_ffn = 3 * d * self.moe.d_ff_expert * e
+            if self.moe.dense_residual:
+                moe_ffn += 3 * d * self.d_ff
+            dense_ffn = 3 * d * (self.moe.dense_d_ff or self.d_ff)
+            total_ffn = moe_layers * moe_ffn + dense_layers * dense_ffn
+            return emb + head + L * per_layer + total_ffn
+        if self.ssm is not None:
+            s = self.ssm
+            din = s.d_inner(d)
+            nh = s.num_heads(d)
+            per_layer += d * (2 * din + 2 * s.ngroups * s.d_state + nh)
+            per_layer += din * d + 2 * nh  # out proj + A, D
+        elif self.family == "hybrid":
+            lru = self.lru_width or d
+            # mix of recurrent + attention layers; count the cycled pattern
+            pat = self.layer_pattern or ("attn",)
+            n_attn = sum(1 for i in range(L) if pat[i % len(pat)] == "attn")
+            n_rec = L - n_attn
+            rec = 2 * d * lru + lru * d + 3 * lru  # gates + convs approx
+            att = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            ffn = 3 * d * self.d_ff
+            return emb + head + n_rec * (rec + ffn) + n_attn * (att + ffn)
+        if self.d_ff:
+            per_layer += 3 * d * self.d_ff
+        return emb + head + L * per_layer
+
+    # ------------------------------------------------------------ reductions
+    def reduced(self) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests: few layers, narrow
+        width, few experts, tiny vocab."""
+        kw: dict = dict(
+            name=self.name + "-smoke",
+            num_layers=min(self.num_layers, 2 if self.layer_pattern is None
+                           else len(self.layer_pattern)),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads > 1 else 1,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            vocab_size=512,
+            lru_width=128 if self.lru_width else None,
+            vision_tokens=min(self.vision_tokens, 8),
+            dtype="float32",
+            scan_layers=self.scan_layers,
+            remat=False,
+            sub_quadratic=self.sub_quadratic,
+        )
+        if self.moe is not None:
+            kw["moe"] = dataclasses.replace(
+                self.moe,
+                num_experts=4,
+                top_k=min(self.moe.top_k, 2),
+                d_ff_expert=64,
+                dense_d_ff=256 if self.moe.dense_d_ff else None,
+                first_dense_layers=min(self.moe.first_dense_layers, 1),
+                # dropless at smoke scale: capacity dropping is batch-
+                # composition-dependent, which would make decode-vs-forward
+                # comparisons flaky (GShard drops differ between the full
+                # batch and the decode path)
+                capacity_factor=8.0,
+            )
+        if self.mla is not None:
+            kw["mla"] = MLAConfig(
+                q_lora_rank=64, kv_lora_rank=32,
+                qk_nope_head_dim=32, qk_rope_head_dim=16, v_head_dim=32,
+            )
+        if self.ssm is not None:
+            kw["ssm"] = dataclasses.replace(self.ssm, d_state=32, head_dim=32,
+                                            chunk_size=32)
+        if self.local_window:
+            kw["local_window"] = 64
+        if self.mrope_sections:
+            kw["mrope_sections"] = (4, 6, 6)  # sums to head_dim/2 = 16
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_for(name: str) -> ShapeConfig:
+    try:
+        return SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}") from None

@@ -1,0 +1,4 @@
+"""--arch config module (one file per assigned architecture)."""
+from .archs import DEEPSEEK_V3_671B as CONFIG
+
+__all__ = ["CONFIG"]

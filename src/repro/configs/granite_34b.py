@@ -1,0 +1,4 @@
+"""--arch config module (one file per assigned architecture)."""
+from .archs import GRANITE_34B as CONFIG
+
+__all__ = ["CONFIG"]

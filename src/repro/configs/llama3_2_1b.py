@@ -1,0 +1,4 @@
+"""--arch config module (one file per assigned architecture)."""
+from .archs import LLAMA3_2_1B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""--arch config module (one file per assigned architecture)."""
+from .archs import MAMBA2_1_3B as CONFIG
+
+__all__ = ["CONFIG"]

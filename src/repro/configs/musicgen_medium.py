@@ -1,0 +1,4 @@
+"""--arch config module (one file per assigned architecture)."""
+from .archs import MUSICGEN_MEDIUM as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,68 @@
+"""repro.core — the paper's contribution: cost-aware speculative execution
+for LLM-agent workflows (five dimensions D1-D5 + auxiliary mechanisms)."""
+
+from .admissibility import AdmissibilityTag, CommitBarrier, NonSpeculableError
+from .decision import (
+    Decision,
+    DecisionInputs,
+    DecisionResult,
+    LambdaDerivation,
+    critical_k,
+    decision_threshold,
+    evaluate,
+    expected_value,
+    implied_lambda,
+    p_break_even,
+    p_threshold_crossing,
+    speculation_decision,
+)
+from .posterior import BetaPosterior
+from .pricing import (
+    PRICING_MAP,
+    GpuHourCost,
+    PricingEntry,
+    TpuChipHourCost,
+    TwoRateTokenCost,
+    get_pricing,
+    register_pricing,
+    speculation_cost,
+)
+from .success import TierPolicy, check_success
+from .taxonomy import DependencyType, auto_assign, effective_k, structural_prior
+from .telemetry import SpeculationDecision, TelemetryLog
+from .workflow import Edge, Operation, Workflow
+from .planner import Plan, PlannerParams, plan_workflow
+from .executor import ExecutionReport, ExecutorConfig, execute
+from .streaming import (
+    RhoEstimator,
+    StreamingReestimator,
+    expected_speculation_waste,
+    fractional_waste,
+)
+
+__all__ = [
+    # D1 / DAG
+    "Workflow", "Operation", "Edge",
+    # D2
+    "PricingEntry", "PRICING_MAP", "TwoRateTokenCost", "GpuHourCost",
+    "TpuChipHourCost", "speculation_cost", "get_pricing", "register_pricing",
+    # D3/D4
+    "Decision", "DecisionInputs", "DecisionResult", "evaluate",
+    "speculation_decision", "expected_value", "decision_threshold",
+    "critical_k", "p_break_even", "p_threshold_crossing", "implied_lambda",
+    "LambdaDerivation",
+    # D5
+    "BetaPosterior", "DependencyType", "structural_prior", "auto_assign",
+    "effective_k",
+    # §7.4 / §3.3
+    "TierPolicy", "check_success", "AdmissibilityTag", "CommitBarrier",
+    "NonSpeculableError",
+    # §8
+    "Plan", "PlannerParams", "plan_workflow",
+    "ExecutorConfig", "ExecutionReport", "execute",
+    # §9
+    "StreamingReestimator", "RhoEstimator", "fractional_waste",
+    "expected_speculation_waste",
+    # App. C
+    "SpeculationDecision", "TelemetryLog",
+]

@@ -1,0 +1,92 @@
+"""§3.3 — the admissibility precondition.
+
+A speculation is rolled back by *re-execution*, which refunds wasted tokens
+but cannot un-send an irreversible side effect.  A downstream op is
+admissible for speculation only if at least one of:
+
+  1. side-effect-free   (pure generation / read-only tool)
+  2. idempotent         (effect keyed so speculative + corrected collapse)
+  3. commit-barrier     (effect staged; released only after tier-1/2 pass)
+
+Ops failing all three are tagged NON_SPECULABLE and the EV gate never runs
+on them.  This is a hard precondition, not a tuning knob.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Callable, Optional
+
+__all__ = ["AdmissibilityTag", "CommitBarrier", "check_admissible", "NonSpeculableError"]
+
+
+class AdmissibilityTag(str, enum.Enum):
+    SIDE_EFFECT_FREE = "side_effect_free"
+    IDEMPOTENT = "idempotent"
+    COMMIT_BARRIER = "commit_barrier"
+    NON_SPECULABLE = "non_speculable"
+
+
+class NonSpeculableError(RuntimeError):
+    """Raised when the runtime is asked to speculate a non-admissible op."""
+
+
+def check_admissible(tag: AdmissibilityTag) -> bool:
+    """True iff speculation is permitted on an op with this tag (§3.3)."""
+    return tag != AdmissibilityTag.NON_SPECULABLE
+
+
+@dataclasses.dataclass
+class CommitBarrier:
+    """Route 3: buffer an externally-visible effect; release only after the
+    tier-1/2 check passes, drop on failure (a draft, an uncommitted txn, an
+    outbound message held in a queue)."""
+
+    release: Callable[[Any], None]
+    _staged: list[Any] = dataclasses.field(default_factory=list)
+    _released: bool = False
+    _dropped: bool = False
+
+    def stage(self, effect: Any) -> None:
+        if self._released or self._dropped:
+            raise RuntimeError("barrier already resolved")
+        self._staged.append(effect)
+
+    def commit(self) -> int:
+        """Tier check passed: release everything staged.  Returns count."""
+        if self._dropped:
+            raise RuntimeError("cannot commit a dropped barrier")
+        for effect in self._staged:
+            self.release(effect)
+        n = len(self._staged)
+        self._staged.clear()
+        self._released = True
+        return n
+
+    def drop(self) -> int:
+        """Tier check failed: discard staged effects; downstream re-runs
+        before anything is released.  Returns count dropped."""
+        if self._released:
+            raise RuntimeError("cannot drop a committed barrier")
+        n = len(self._staged)
+        self._staged.clear()
+        self._dropped = True
+        return n
+
+    @property
+    def pending(self) -> int:
+        return len(self._staged)
+
+
+@dataclasses.dataclass
+class IdempotencyKey:
+    """Route 2 helper: an upsert keyed on a deterministic id — the
+    speculative write is overwritten, not duplicated."""
+
+    key_fn: Callable[[Any], str]
+    store: dict = dataclasses.field(default_factory=dict)
+
+    def upsert(self, value: Any) -> str:
+        k = self.key_fn(value)
+        self.store[k] = value
+        return k

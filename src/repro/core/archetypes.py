@@ -1,0 +1,192 @@
+"""§13 — workload fit and the archetype catalog.
+
+The four-point fit rubric, the eight production archetypes, the four
+explicit non-fit shapes, and the pilot-picking scorer.  These are
+machine-checkable: ``fit_rubric`` evaluates a WorkloadProfile and
+``pilot_score`` ranks candidates, so a deployment can run the §13.4 rubric
+programmatically against §12.1 offline-replay statistics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+__all__ = [
+    "WorkloadProfile",
+    "FitResult",
+    "fit_rubric",
+    "pilot_score",
+    "ARCHETYPES",
+    "NON_FIT_SHAPES",
+    "Archetype",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadProfile:
+    """What §12.1 offline replay measures about a candidate workload."""
+
+    name: str
+    num_stages: int                   # LLM/tool calls on the critical path
+    k_raw: int                        # raw upstream branching factor
+    p_mode: float                     # dominant-mode probability
+    output_tokens_est: float          # downstream generation size
+    input_tokens_est: float
+    lambda_defensible: bool           # someone can defend a USD/s figure
+    latency_pain: bool = True         # §13.4 point 1
+    observable_before_enable: bool = True  # §13.4 point 4 (replay/shadow possible)
+
+    @property
+    def k_eff(self) -> float:
+        return 1.0 / self.p_mode if self.p_mode > 0 else float("inf")
+
+    @property
+    def output_heavy(self) -> bool:
+        return self.output_tokens_est >= self.input_tokens_est
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    fits: bool
+    points: dict[str, bool]
+
+    @property
+    def failures(self) -> list[str]:
+        return [k for k, v in self.points.items() if not v]
+
+
+def fit_rubric(w: WorkloadProfile) -> FitResult:
+    """§13.1 four-point rubric — a workload is a good fit when ALL hold."""
+    points = {
+        "multi_stage_with_upstream_latency": w.num_stages >= 2,
+        "small_effective_branching": w.k_raw <= 5 or w.p_mode >= 0.5,
+        "output_heavy_downstream": w.output_heavy,
+        "defensible_lambda": w.lambda_defensible,
+    }
+    return FitResult(fits=all(points.values()), points=points)
+
+
+def pilot_score(w: WorkloadProfile) -> int:
+    """§13.4 pilot-picking rubric: 0-4 points."""
+    return sum(
+        [
+            w.latency_pain,
+            w.p_mode >= 0.5,                       # single mode above 50%
+            w.output_heavy,                        # two-rate pricing moves the decision
+            w.observable_before_enable,            # replay/shadow instrumentable
+        ]
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class Archetype:
+    name: str
+    domain: str
+    shape: str
+    speculate: str
+    k_eff_range: tuple[float, float]
+    stakes: str
+    watch_out: str
+    needs_streaming_cancel: bool = False
+    needs_credible_bound_day_one: bool = False
+
+    def profile(self) -> WorkloadProfile:
+        k_mid = sum(self.k_eff_range) / 2
+        return WorkloadProfile(
+            name=self.name,
+            num_stages=3,
+            k_raw=min(5, max(2, int(round(k_mid)) + 2)),
+            p_mode=1.0 / k_mid,
+            output_tokens_est=800,
+            input_tokens_est=500,
+            lambda_defensible=True,
+        )
+
+
+ARCHETYPES: dict[str, Archetype] = {
+    a.name: a
+    for a in [
+        Archetype(
+            "voice_bot_ivr", "customer-facing",
+            "STT -> intent classifier -> response synthesizer -> TTS",
+            "response synthesizer with the modal intent's template while the classifier runs",
+            (1.5, 2.0),
+            "each additional 400 ms raises call abandonment; telcos pay per minute",
+            "tier-2 equivalence must accept paraphrases (invest in the semantic-match predicate)",
+        ),
+        Archetype(
+            "ide_autocomplete", "customer-facing",
+            "context classifier -> generator",
+            "generator with the modal intent while the classifier inspects surrounding code",
+            (1.4, 1.4),
+            "sub-200 ms feel is the product; aggregate GPU hours are real",
+            "operators run alpha near 1 and rely on streaming cancellation (§9)",
+            needs_streaming_cancel=True,
+        ),
+        Archetype(
+            "insurance_claims_triage", "enterprise",
+            "OCR + claim-type classifier -> next-action drafter",
+            "drafter for the modal next-action per claim type",
+            (2.0, 3.0),
+            "adjuster time at $50-100/hr; 20% cycle-time reduction scales to seven figures",
+            "tier-3 offline validation mandatory (regulatory); credible-bound gating day one",
+            needs_credible_bound_day_one=True,
+        ),
+        Archetype(
+            "content_moderation", "enterprise",
+            "safety classifier -> action drafter (allow/warn/remove/escalate)",
+            "the 'allow' path with its user-facing message",
+            (1.05, 1.05),
+            "billions of items/day; unit wins compound",
+            "rare non-allow paths are where quality matters most; never soften tier-2 for them",
+        ),
+        Archetype(
+            "medical_prior_auth", "enterprise",
+            "document extraction -> procedure-code classifier -> policy retrieval -> drafter",
+            "retrieval + drafter path for the modal code",
+            (3.0, 5.0),
+            "prior-auth backlogs delay hospital revenue; each day shaved is monetizable",
+            "cold-start on new payers is high-risk; credible-bound gating + shadow runway per payer",
+            needs_credible_bound_day_one=True,
+        ),
+        Archetype(
+            "pr_review_bot", "developer-tooling",
+            "diff analyzer -> change-type classifier -> review-strategy selector -> reviewer prompt",
+            "reviewer prompt for the modal change type per repo",
+            (2.0, 2.0),
+            "reviewer wait time is engineering velocity; multi-million-dollar lever at org scale",
+            "cross-repo generalization is weak; rely on per-repo posteriors (default behavior)",
+        ),
+        Archetype(
+            "rag_pipeline", "developer-tooling",
+            "intent classifier -> retriever strategy -> answer synthesizer",
+            "synthesizer with the most-likely intent's retrieval path",
+            (1.5, 2.0),
+            "user-facing latency drives engagement; output-heavy synthesis is the expensive stage",
+            "the retriever is itself a tool call and may be slow; consider separate speculation there",
+            needs_streaming_cancel=True,
+        ),
+        Archetype(
+            "security_triage", "high-stakes",
+            "alert enricher -> alert-type classifier -> runbook selector -> remediation drafter",
+            "remediation drafter for the most-likely runbook",
+            (2.0, 3.0),
+            "MTTR has dollar value in breach exposure; incident-minutes are expensive",
+            "low volume per unique alert -> posterior converges slowly; lean on the structural prior",
+            needs_credible_bound_day_one=True,
+        ),
+    ]
+}
+
+
+# §13.3 — where the method does not fit (no amount of tuning helps)
+NON_FIT_SHAPES: dict[str, str] = {
+    "open_ended_creative": "single-call long-form generation: the downstream IS the workflow; "
+    "no upstream to speculate against (fails rubric point 1)",
+    "runtime_determined_topology": "reflection loops / dynamic spawning: each expansion requires "
+    "re-planning and the §8.1 planner assumptions do not hold (out of scope, §1.4)",
+    "high_k_flat": "high k_eff with flat distribution: single-shot EV collapses below threshold "
+    "(§7.6); remedies are richer conditioning, top-m multi-shot, or not speculating",
+    "cheap_downstream": "C_spec and L*lambda both small: EV is small by construction and rarely "
+    "clears (1-alpha)*C_spec; the rule correctly WAITs but instrumentation has no payoff",
+}

@@ -1,0 +1,118 @@
+"""Vectorized JAX decision engine — the beyond-paper fast path.
+
+The paper's D4 rule is a handful of multiplies per decision (§6.5).  At
+fleet scale the hot paths are *batched*: the §12.1 counterfactual replay
+over millions of logged decisions x an (alpha, lambda) grid, per-chunk
+streaming re-evaluation across thousands of in-flight edges, and bulk
+posterior updates.  This module jit-compiles those as single XLA calls.
+
+Recorded in EXPERIMENTS.md §Perf as the optimized implementation next to
+the paper-faithful scalar path (repro.core.decision), with identical
+numerics (tests assert bitwise-comparable float64 results).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "batch_evaluate",
+    "counterfactual_grid",
+    "batch_posterior_update",
+    "batch_implied_lambda",
+    "critical_k_grid",
+]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _batch_evaluate(P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price):
+    C_spec = in_tok * in_price + out_tok * out_price
+    L_value = latency_s * lam
+    EV = P * L_value - (1.0 - P) * C_spec
+    threshold = (1.0 - alpha) * C_spec
+    return EV, threshold, EV >= threshold, C_spec, L_value
+
+
+def _f(x):
+    """float array at the widest enabled precision (f64 under jax_enable_x64,
+    f32 otherwise) — keeps numerics comparable to the scalar path."""
+    return jnp.asarray(x, dtype=jnp.result_type(float))
+
+
+def batch_evaluate(
+    P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
+):
+    """Vectorized D4 gate.  All inputs broadcastable arrays.  Returns
+    (EV, threshold, speculate_mask, C_spec, L_value)."""
+    args = [_f(x) for x in (
+        P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
+    )]
+    return _batch_evaluate(*args)
+
+
+@functools.partial(jax.jit, static_argnames=("rho",))
+def _grid(P, lat, cost, alphas, lams, rho):
+    # decisions[a, l, n] for n log rows at each (alpha, lambda) grid point
+    L_value = lat[None, None, :] * lams[None, :, None]
+    EV = P * L_value - (1.0 - P) * cost[None, None, :]
+    thr = (1.0 - alphas[:, None, None]) * cost[None, None, :]
+    spec = EV >= thr
+    frac = spec.mean(axis=-1)
+    exp_lat = jnp.where(spec, lat[None, None, :] * (1.0 - P), lat[None, None, :]).mean(-1)
+    waste = (spec * (1.0 - P) * cost[None, None, :] * rho).sum(-1)
+    exp_cost = cost.sum() + waste
+    return frac, exp_lat, exp_cost, waste
+
+
+def counterfactual_grid(P, latencies, costs, alphas, lambdas, rho=0.5):
+    """§12.1 counterfactual EV grid as one XLA call.
+
+    Returns dict of (len(alphas), len(lambdas)) arrays:
+    speculate_fraction, expected_latency, expected_cost, expected_waste.
+    """
+    frac, exp_lat, exp_cost, waste = _grid(
+        _f(P), _f(latencies), _f(costs), _f(alphas), _f(lambdas), float(rho),
+    )
+    return {
+        "speculate_fraction": np.asarray(frac),
+        "expected_latency_s": np.asarray(exp_lat),
+        "expected_cost_usd": np.asarray(exp_cost),
+        "expected_waste_usd": np.asarray(waste),
+    }
+
+
+@jax.jit
+def _post_update(alpha0, beta0, successes):
+    # successes: (E, N) in {0, 1}; returns per-edge running posterior params
+    s = successes.sum(-1)
+    n = successes.shape[-1]
+    return alpha0 + s, beta0 + (n - s)
+
+
+def batch_posterior_update(alpha0, beta0, outcomes):
+    """Bulk conjugate update for E edges at once: Beta(a0+s, b0+f)."""
+    a, b = _post_update(_f(alpha0), _f(beta0), _f(outcomes))
+    return np.asarray(a), np.asarray(b)
+
+
+@jax.jit
+def _implied(P, C, alpha_star, L_up):
+    return ((1.0 - alpha_star) * C + (1.0 - P) * C) / (P * L_up)
+
+
+def batch_implied_lambda(P, C_spec, alpha_star, L_upstream_s):
+    """§12.3 implied-lambda over arrays of observed operating points."""
+    return np.asarray(_implied(_f(P), _f(C_spec), _f(alpha_star), _f(L_upstream_s)))
+
+
+@jax.jit
+def _kcrit(L_value, C_spec, alphas):
+    return (L_value + C_spec) / ((2.0 - alphas) * C_spec)
+
+
+def critical_k_grid(L_value, C_spec, alphas):
+    """k_crit(alpha) over an alpha grid (§7.6) in one call."""
+    return np.asarray(_kcrit(_f(L_value), _f(C_spec), _f(alphas)))

@@ -1,0 +1,262 @@
+"""D3 + D4 — the expected-value decision rule with the alpha dial.
+
+Paper §5 and §6:
+
+    L_value   = L * lambda                                       (USD)
+    C_spec    = in_tok * in_price + out_tok * out_price          (USD)
+    EV        = P * L_value - (1 - P) * C_spec                   (USD)
+    threshold = (1 - alpha) * C_spec                             (USD)
+    decision  = SPECULATE iff EV >= threshold  (tie -> SPECULATE, §6.1)
+
+alpha is a runtime-mutable dimensionless preference dial; lambda is a
+deployment-level USD/s conversion.  They are deliberately separate (§5.3).
+
+Closed forms (§7.6 / Appendix D):
+
+    k_crit(alpha) = (L_value + C_spec) / ((2 - alpha) * C_spec)
+    EV == 0           at P = C_spec / (L_value + C_spec)
+    EV == threshold   at P = (2 - alpha) * C_spec / (L_value + C_spec)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from .posterior import BetaPosterior
+from .pricing import CostModel, TwoRateTokenCost
+
+__all__ = [
+    "Decision",
+    "DecisionInputs",
+    "DecisionResult",
+    "LatencyValue",
+    "expected_value",
+    "decision_threshold",
+    "evaluate",
+    "speculation_decision",
+    "critical_k",
+    "p_break_even",
+    "p_threshold_crossing",
+    "implied_lambda",
+    "LambdaDerivation",
+]
+
+
+class Decision(str, enum.Enum):
+    SPECULATE = "SPECULATE"
+    WAIT = "WAIT"
+
+
+# --------------------------------------------------------------------- D3: λ
+@dataclasses.dataclass(frozen=True)
+class LambdaDerivation:
+    """§5.3 standard derivations of the latency-value ratio (USD/s)."""
+
+    @staticmethod
+    def user_value_of_time(dollars: float, seconds: float) -> float:
+        """Operator sets directly, e.g. '1 minute saved = $1' -> $0.0167/s."""
+        return dollars / seconds
+
+    @staticmethod
+    def labor_cost(hourly_wage: float) -> float:
+        """lambda = hourly_wage / 3600."""
+        return hourly_wage / 3600.0
+
+    @staticmethod
+    def workflow_value(value: float, expected_duration_s: float) -> float:
+        """lambda = value / expected_duration."""
+        return value / expected_duration_s
+
+    @staticmethod
+    def budget_deadline(B: float, C0: float, T0: float, T: float) -> float:
+        """lambda = (B - C0) / (T0 - T): willingness to spend B to hit T."""
+        if T0 <= T:
+            raise ValueError("T0 must exceed the deadline T")
+        return (B - C0) / (T0 - T)
+
+
+def _validate_alpha(alpha: float) -> None:
+    if not (0.0 <= alpha <= 1.0):
+        raise ValueError(f"alpha must be in [0, 1], got {alpha}")
+
+
+def _validate_p(p: float) -> None:
+    if not (0.0 <= p <= 1.0):
+        raise ValueError(f"P must be in [0, 1], got {p}")
+
+
+# ------------------------------------------------------------------- D4 rule
+def expected_value(P: float, L_value: float, C_spec: float) -> float:
+    """EV = P * L_value - (1 - P) * C_spec (§6.1).
+
+    The (1-P) failure weighting is the paper's principled form under
+    pay-per-use billing: on success the op would have been paid either way;
+    on failure C_spec is pure waste (§6.2).
+    """
+    _validate_p(P)
+    return P * L_value - (1.0 - P) * C_spec
+
+
+def decision_threshold(alpha: float, C_spec: float) -> float:
+    """threshold = (1 - alpha) * C_spec (§6.3): scales with cost magnitude."""
+    _validate_alpha(alpha)
+    return (1.0 - alpha) * C_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionInputs:
+    """Everything the D4 gate consumes, at one evaluation instant."""
+
+    P: float
+    alpha: float
+    lambda_usd_per_s: float
+    latency_seconds: float          # estimated latency savings L on success
+    input_tokens: int
+    output_tokens: float
+    input_price: float
+    output_price: float
+    P_lower_bound: Optional[float] = None  # §7.5 credible gating, if enabled
+
+    def cost_model(self) -> CostModel:
+        return TwoRateTokenCost(self.input_price, self.output_price)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecisionResult:
+    decision: Decision
+    EV_usd: float
+    threshold_usd: float
+    C_spec_usd: float
+    L_value_usd: float
+    P_used: float                   # the P actually gated on (mean or lower bound)
+
+    @property
+    def margin_usd(self) -> float:
+        return self.EV_usd - self.threshold_usd
+
+
+def evaluate(inputs: DecisionInputs, *, use_lower_bound: bool = False) -> DecisionResult:
+    """Run the D4 gate.  With ``use_lower_bound`` the §7.5 credible-bound
+    variant gates on P_lower instead of the posterior mean."""
+    cm = inputs.cost_model()
+    C_spec = cm.cost(inputs.input_tokens, inputs.output_tokens)
+    L_value = inputs.latency_seconds * inputs.lambda_usd_per_s
+    P = inputs.P
+    if use_lower_bound:
+        if inputs.P_lower_bound is None:
+            raise ValueError("use_lower_bound=True requires P_lower_bound")
+        P = inputs.P_lower_bound
+    EV = expected_value(P, L_value, C_spec)
+    threshold = decision_threshold(inputs.alpha, C_spec)
+    # Tie -> SPECULATE: speculation has potential upside, waiting has none (§6.1).
+    decision = Decision.SPECULATE if EV >= threshold else Decision.WAIT
+    return DecisionResult(
+        decision=decision,
+        EV_usd=EV,
+        threshold_usd=threshold,
+        C_spec_usd=C_spec,
+        L_value_usd=L_value,
+        P_used=P,
+    )
+
+
+def speculation_decision(
+    P: float,
+    alpha: float,
+    lambda_dollars_per_sec: float,
+    input_tokens: int,
+    output_tokens: float,
+    input_price: float,
+    output_price: float,
+    latency_seconds: float,
+) -> str:
+    """Paper §6.5 pseudocode, verbatim signature.  Returns "SPECULATE"/"WAIT"."""
+    C_spec = input_tokens * input_price + output_tokens * output_price
+    L_value = latency_seconds * lambda_dollars_per_sec
+    EV = P * L_value - (1 - P) * C_spec
+    threshold = (1 - alpha) * C_spec
+    _validate_p(P)
+    _validate_alpha(alpha)
+    return "SPECULATE" if EV >= threshold else "WAIT"
+
+
+def evaluate_posterior(
+    posterior: BetaPosterior,
+    alpha: float,
+    lambda_usd_per_s: float,
+    latency_seconds: float,
+    input_tokens: int,
+    output_tokens: float,
+    input_price: float,
+    output_price: float,
+    *,
+    use_lower_bound: bool = False,
+    gamma: float = 0.1,
+) -> DecisionResult:
+    """Convenience: gate directly on a BetaPosterior (D5 -> D4)."""
+    return evaluate(
+        DecisionInputs(
+            P=posterior.mean,
+            alpha=alpha,
+            lambda_usd_per_s=lambda_usd_per_s,
+            latency_seconds=latency_seconds,
+            input_tokens=input_tokens,
+            output_tokens=output_tokens,
+            input_price=input_price,
+            output_price=output_price,
+            P_lower_bound=posterior.lower_bound(gamma) if use_lower_bound else None,
+        ),
+        use_lower_bound=use_lower_bound,
+    )
+
+
+# ----------------------------------------------------------- §7.6 closed form
+def critical_k(L_value: float, C_spec: float, alpha: float) -> float:
+    """k_crit(alpha) = (L_value + C_spec) / ((2 - alpha) * C_spec).
+
+    Under a uniform-mode prior P = 1/k, the D4 rule SPECULATEs iff
+    k <= k_crit(alpha); above it the rule self-limits to WAIT (§7.6).
+    """
+    _validate_alpha(alpha)
+    if C_spec <= 0:
+        raise ValueError("C_spec must be positive for the critical-k form")
+    return (L_value + C_spec) / ((2.0 - alpha) * C_spec)
+
+
+def p_break_even(L_value: float, C_spec: float) -> float:
+    """P at which EV == 0:  P = C_spec / (L_value + C_spec)."""
+    return C_spec / (L_value + C_spec)
+
+
+def p_threshold_crossing(L_value: float, C_spec: float, alpha: float) -> float:
+    """P at which EV == threshold: P = (2 - alpha) * C_spec / (L_value + C_spec).
+
+    NOTE: paper Appendix D.2 prints P* = C_spec/(L_value + alpha*C_spec),
+    which matches neither EV==0 nor EV==threshold under the paper's own D4
+    rule; see DESIGN.md "Paper inconsistencies".  This function is the
+    decision-flip point implied by the rule as specified in §6.1.
+    """
+    _validate_alpha(alpha)
+    return (2.0 - alpha) * C_spec / (L_value + C_spec)
+
+
+def paper_d2_p_star(L_value: float, C_spec: float, alpha: float) -> float:
+    """The formula as printed in Appendix D.2 (reported for comparison)."""
+    return C_spec / (L_value + alpha * C_spec)
+
+
+# ----------------------------------------------------------- §12.3 implied λ
+def implied_lambda(
+    P: float, C_spec: float, alpha_star: float, L_upstream_s: float
+) -> float:
+    """§12.3 / D.5 implied-λ recovery.  At the chosen operating point α*, the
+    D4 rule equates P·L·λ − (1−P)·C = (1−α*)·C, giving
+
+        λ_implied = [(1 − α*)·C_spec + (1 − P)·C_spec] / (P · L_upstream).
+    """
+    _validate_p(P)
+    _validate_alpha(alpha_star)
+    if P <= 0 or L_upstream_s <= 0:
+        raise ValueError("implied lambda requires P > 0 and L > 0")
+    return ((1.0 - alpha_star) * C_spec + (1.0 - P) * C_spec) / (P * L_upstream_s)

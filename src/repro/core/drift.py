@@ -1,0 +1,201 @@
+"""§12.5 — drift detection and kill-switch.
+
+Automated triggers that flip the per-edge or global enable bit without
+human-in-the-loop approval.  The per-edge enable bit is the method's most
+consequential operational knob: §12.1 sets it at deployment time, this
+module flips it at runtime in response to evidence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import numpy as np
+
+from .posterior import BetaPosterior
+
+__all__ = ["TriggerKind", "TriggerEvent", "DriftMonitor", "EdgeState"]
+
+
+class TriggerKind(str, enum.Enum):
+    POSTERIOR_DROP = "posterior_drop"            # row 1 of the §12.5 table
+    CREDIBLE_BOUND_FLOOR = "credible_bound_floor"  # row 2
+    TIER2_FALSE_ACCEPT = "tier2_false_accept"    # row 3
+    COST_SLO = "cost_slo"                        # row 4 (global)
+    MODEL_VERSION_CHANGE = "model_version_change"  # row 5
+    TOKEN_COV = "token_cov"                      # row 6
+
+
+@dataclasses.dataclass
+class TriggerEvent:
+    kind: TriggerKind
+    scope: str                      # "edge" | "global" | "model"
+    edge: Optional[tuple[str, str]]
+    action: str
+    detail: str
+
+
+@dataclasses.dataclass
+class EdgeState:
+    enabled: bool = True
+    alpha_offset: float = 0.0       # POSTERIOR_DROP lowers alpha_edge by 0.2
+    needs_shadow_rerun: bool = False
+    page_oncall: bool = False
+    posterior_means: list = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class DriftMonitor:
+    """Stateful evaluator of the six §12.5 triggers.
+
+    Thresholds carry the paper's defaults; every one is overridable.
+    """
+
+    posterior_drop_frac: float = 0.20
+    recent_window: int = 100
+    baseline_window: int = 500
+    credible_consecutive_n: int = 5
+    tier2_false_accept_tol: float = 0.05
+    token_cov_threshold: float = 0.5
+    monthly_budget_usd: Optional[float] = None
+
+    edges: dict[tuple[str, str], EdgeState] = dataclasses.field(default_factory=dict)
+    global_alpha_zero: bool = False
+    model_versions: dict[str, str] = dataclasses.field(default_factory=dict)
+    _credible_breach_run: dict[tuple[str, str], int] = dataclasses.field(default_factory=dict)
+    events: list[TriggerEvent] = dataclasses.field(default_factory=list)
+
+    def state(self, edge: tuple[str, str]) -> EdgeState:
+        return self.edges.setdefault(edge, EdgeState())
+
+    # ------------------------------------------------------------ trigger 1
+    def observe_posterior_mean(self, edge: tuple[str, str], mean: float) -> Optional[TriggerEvent]:
+        """Posterior mean drops > 20% over a 100-trial window vs the prior 500
+        -> lower alpha_edge by 0.2 for the next hour."""
+        st = self.state(edge)
+        st.posterior_means.append(mean)
+        hist = st.posterior_means
+        if len(hist) < self.recent_window + 10:
+            return None
+        recent = float(np.mean(hist[-self.recent_window:]))
+        base_slice = hist[-(self.recent_window + self.baseline_window):-self.recent_window]
+        baseline = float(np.mean(base_slice)) if base_slice else recent
+        if baseline > 0 and (baseline - recent) / baseline > self.posterior_drop_frac:
+            st.alpha_offset = -0.2
+            ev = TriggerEvent(
+                TriggerKind.POSTERIOR_DROP, "edge", edge,
+                action="alpha_edge -= 0.2 for 1h",
+                detail=f"recent={recent:.3f} baseline={baseline:.3f}",
+            )
+            self.events.append(ev)
+            return ev
+        return None
+
+    # ------------------------------------------------------------ trigger 2
+    def check_credible_bound(
+        self,
+        edge: tuple[str, str],
+        posterior: BetaPosterior,
+        alpha: float,
+        C_spec: float,
+        L_value: float,
+        gamma: float = 0.1,
+    ) -> Optional[TriggerEvent]:
+        """P_lower < (1-alpha) * C / (L*lambda + C) for N consecutive decisions
+        -> disable edge; require a fresh shadow run to re-enable."""
+        floor = (1.0 - alpha) * C_spec / (L_value + C_spec)
+        breached = posterior.lower_bound(gamma) < floor
+        run = self._credible_breach_run.get(edge, 0)
+        run = run + 1 if breached else 0
+        self._credible_breach_run[edge] = run
+        if run >= self.credible_consecutive_n:
+            st = self.state(edge)
+            st.enabled = False
+            st.needs_shadow_rerun = True
+            ev = TriggerEvent(
+                TriggerKind.CREDIBLE_BOUND_FLOOR, "edge", edge,
+                action="disable; fresh shadow-mode run required to re-enable",
+                detail=f"P_lower below {floor:.4f} for {run} consecutive decisions",
+            )
+            self.events.append(ev)
+            self._credible_breach_run[edge] = 0
+            return ev
+        return None
+
+    # ------------------------------------------------------------ trigger 3
+    def check_tier2_false_accept(
+        self, edge: tuple[str, str], rate: Optional[float]
+    ) -> Optional[TriggerEvent]:
+        if rate is None or rate <= self.tier2_false_accept_tol:
+            return None
+        st = self.state(edge)
+        st.enabled = False
+        st.page_oncall = True
+        ev = TriggerEvent(
+            TriggerKind.TIER2_FALSE_ACCEPT, "edge", edge,
+            action="disable speculation; page on-call",
+            detail=f"false-accept rate {rate:.3f} > {self.tier2_false_accept_tol}",
+        )
+        self.events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------ trigger 4
+    def check_cost_slo(self, spend_usd: float) -> Optional[TriggerEvent]:
+        """Monthly cost SLO tripped -> alpha <- 0 for all edges until next cycle."""
+        if self.monthly_budget_usd is None or spend_usd <= self.monthly_budget_usd:
+            return None
+        self.global_alpha_zero = True
+        ev = TriggerEvent(
+            TriggerKind.COST_SLO, "global", None,
+            action="alpha <- 0 for all edges until next billing cycle",
+            detail=f"spend ${spend_usd:.2f} > budget ${self.monthly_budget_usd:.2f}",
+        )
+        self.events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------ trigger 5
+    def observe_model_version(
+        self, agent: str, version: str, edges_using: list[tuple[str, str]]
+    ) -> Optional[TriggerEvent]:
+        """New model version -> flip affected edges back to shadow for 24h and
+        re-run §12.1 auto-assignment on the shadow logs."""
+        old = self.model_versions.get(agent)
+        self.model_versions[agent] = version
+        if old is None or old == version:
+            return None
+        for e in edges_using:
+            st = self.state(e)
+            st.needs_shadow_rerun = True
+        ev = TriggerEvent(
+            TriggerKind.MODEL_VERSION_CHANGE, "model", None,
+            action="shadow mode 24h for all edges using the model; re-run auto-assignment",
+            detail=f"{agent}: {old} -> {version} ({len(edges_using)} edges)",
+        )
+        self.events.append(ev)
+        return ev
+
+    # ------------------------------------------------------------ trigger 6
+    def check_token_cov(
+        self, edge: tuple[str, str], cov: Optional[float]
+    ) -> Optional[TriggerEvent]:
+        if cov is None or cov <= self.token_cov_threshold:
+            return None
+        st = self.state(edge)
+        st.enabled = False
+        ev = TriggerEvent(
+            TriggerKind.TOKEN_COV, "edge", edge,
+            action="disable speculation until CoV drops below threshold",
+            detail=f"CoV {cov:.3f} > {self.token_cov_threshold}",
+        )
+        self.events.append(ev)
+        return ev
+
+    # --------------------------------------------------------------- queries
+    def effective_alpha(self, edge: tuple[str, str], alpha: float) -> float:
+        if self.global_alpha_zero:
+            return 0.0
+        return min(1.0, max(0.0, alpha + self.state(edge).alpha_offset))
+
+    def edge_enabled(self, edge: tuple[str, str]) -> bool:
+        return self.state(edge).enabled

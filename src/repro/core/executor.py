@@ -1,0 +1,441 @@
+"""§8.2 — Phase 2: runtime execution with bidirectional override.
+
+Immediately before launching any operation marked SPECULATE (and before
+WAIT-marked edges whose upstream is starting), the runtime re-runs the §6
+decision rule with *current* parameters: posterior-updated P, EMA latency
+estimates, possibly-changed alpha, recomputed C_spec.  The runtime decision
+can differ from the plan in either direction (upgrade and downgrade).
+
+This module implements a deterministic discrete-event executor: simulated
+time is advanced analytically along the DAG, operations have simulated (or
+measured) durations, upstream streams are delivered as chunks, and the §9
+machinery (re-estimation, mid-stream cancel, fractional waste) runs against
+them.  A wall-clock threaded executor backed by the serving engine lives in
+``repro.serving.spec_bridge``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+from .admissibility import AdmissibilityTag, CommitBarrier, NonSpeculableError
+from .decision import Decision, DecisionInputs, DecisionResult, evaluate
+from .planner import Plan, PlannerParams
+from .posterior import BetaPosterior
+from .predictor import InputPredictor, Prediction
+from .pricing import TwoRateTokenCost, get_pricing
+from .streaming import RhoEstimator, fractional_waste
+from .success import check_success
+from .telemetry import SpeculationDecision, TelemetryLog, new_decision_id
+from .workflow import Edge, Workflow
+
+__all__ = ["ExecutorConfig", "SpeculationOutcome", "ExecutionReport", "execute"]
+
+
+@dataclasses.dataclass
+class ExecutorConfig:
+    params: PlannerParams
+    telemetry: TelemetryLog = dataclasses.field(default_factory=TelemetryLog)
+    # i_hat predictors per edge (§3.2); edges without one cannot speculate
+    predictors: dict[tuple[str, str], InputPredictor] = dataclasses.field(default_factory=dict)
+    # streaming refiners per edge: (upstream_input, partial_chunks) -> (i_hat, P_k)
+    stream_refiners: dict[tuple[str, str], Callable[[Any, list], tuple[Any, float]]] = (
+        dataclasses.field(default_factory=dict)
+    )
+    # runtime-mutable alpha (§5.2): a function of simulated time
+    alpha_fn: Optional[Callable[[float], float]] = None
+    # §9.1 throttling: re-estimate every N chunks
+    throttle_every: int = 1
+    rho_estimators: dict[tuple[str, str], RhoEstimator] = dataclasses.field(default_factory=dict)
+    tenant: str = "default"
+    trace_id: str = "trace-0"
+    # chunk count for simulated streams
+    default_chunks: int = 10
+    use_lower_bound: bool = False
+    gamma: float = 0.1
+
+    def alpha_at(self, t: float) -> float:
+        return self.alpha_fn(t) if self.alpha_fn is not None else self.params.alpha
+
+
+@dataclasses.dataclass
+class SpeculationOutcome:
+    edge: tuple[str, str]
+    launched: bool
+    committed: bool
+    cancelled_mid_stream: bool
+    cancel_fraction: Optional[float]
+    waste_usd: float
+    latency_saved_s: float
+    i_hat: Any = None
+    i_actual: Any = None
+    decision_row: Optional[SpeculationDecision] = None
+
+
+@dataclasses.dataclass
+class ExecutionReport:
+    outputs: dict[str, Any]
+    finish_times_s: dict[str, float]
+    makespan_s: float
+    base_cost_usd: float
+    waste_usd: float
+    outcomes: list[SpeculationOutcome]
+    overrides: list[tuple[tuple[str, str], str]]  # (edge, "upgrade"/"downgrade")
+
+    @property
+    def total_cost_usd(self) -> float:
+        return self.base_cost_usd + self.waste_usd
+
+
+def _op_duration(wf: Workflow, name: str) -> float:
+    op = wf.ops[name]
+    return float(op.metadata.get("sim_latency_s", op.latency_est_s))
+
+
+def _op_cost(wf: Workflow, name: str) -> tuple[float, TwoRateTokenCost]:
+    op = wf.ops[name]
+    pricing = get_pricing(op.provider, op.model)
+    cm = TwoRateTokenCost.from_entry(pricing)
+    return cm.cost(op.input_tokens_est, op.output_tokens_est), cm
+
+
+def _decision_inputs(
+    wf: Workflow, edge: Edge, post: BetaPosterior, cfg: ExecutorConfig, t: float
+) -> DecisionInputs:
+    op = wf.ops[edge.downstream]
+    up = wf.ops[edge.upstream]
+    pricing = get_pricing(op.provider, op.model)
+    L = cfg.params.latency_savings_s.get(
+        edge.key, min(up.latency_est_s, op.latency_est_s)
+    )
+    return DecisionInputs(
+        P=post.mean,
+        alpha=cfg.alpha_at(t),
+        lambda_usd_per_s=cfg.params.lambda_usd_per_s,
+        latency_seconds=L,
+        input_tokens=op.input_tokens_est,
+        output_tokens=op.output_tokens_est,
+        input_price=pricing.input_price_per_token,
+        output_price=pricing.output_price_per_token,
+        P_lower_bound=post.lower_bound(cfg.gamma) if cfg.use_lower_bound else None,
+    )
+
+
+def _emit_row(
+    cfg: ExecutorConfig,
+    wf: Workflow,
+    edge: Edge,
+    post: BetaPosterior,
+    res: DecisionResult,
+    inputs: DecisionInputs,
+    phase: str,
+    overrode: str,
+    i_hat_source: str,
+) -> SpeculationDecision:
+    op = wf.ops[edge.downstream]
+    row = SpeculationDecision(
+        decision_id=new_decision_id(),
+        trace_id=cfg.trace_id,
+        edge=edge.key,
+        dep_type=edge.dep_type.value,
+        tenant=cfg.tenant,
+        model_version=(op.model, op.metadata.get("model_version", "v1")),
+        alpha=inputs.alpha,
+        lambda_usd_per_s=inputs.lambda_usd_per_s,
+        P_mean=post.mean,
+        P_lower_bound=inputs.P_lower_bound,
+        C_spec_est_usd=res.C_spec_usd,
+        L_est_s=inputs.latency_seconds,
+        input_tokens_est=inputs.input_tokens,
+        output_tokens_est=int(inputs.output_tokens),
+        input_price=inputs.input_price,
+        output_price=inputs.output_price,
+        EV_usd=res.EV_usd,
+        threshold_usd=res.threshold_usd,
+        decision=res.decision.value,
+        phase=phase,  # type: ignore[arg-type]
+        overrode=overrode,  # type: ignore[arg-type]
+        i_hat_source=i_hat_source,  # type: ignore[arg-type]
+        uncertain_cost_flag=bool(op.metadata.get("uncertain_cost", False)),
+        enabled=edge.enabled,
+        budget_remaining_usd=None,
+    )
+    return cfg.telemetry.emit(row)
+
+
+def execute(wf: Workflow, plan: Plan, cfg: ExecutorConfig) -> ExecutionReport:
+    """Run the workflow under the plan with Phase-2 re-evaluation.
+
+    Deterministic: same workflow + plan + config -> same report.
+    """
+    if not wf.frozen:
+        raise ValueError("execute requires a frozen workflow")
+    params = cfg.params
+    outputs: dict[str, Any] = {}
+    start: dict[str, float] = {}
+    finish: dict[str, float] = {}
+    base_cost = 0.0
+    waste = 0.0
+    outcomes: list[SpeculationOutcome] = []
+    overrides: list[tuple[tuple[str, str], str]] = []
+
+    # map: downstream op -> the edge the plan considered for speculation
+    plan_edges: dict[str, Edge] = {}
+    for key in plan.decisions:
+        plan_edges[key[1]] = wf.edges[key]
+
+    for name in wf.topo_order():
+        op = wf.ops[name]
+        parents = wf.parents(name)
+        dur = _op_duration(wf, name)
+        cost, cost_model = _op_cost(wf, name)
+
+        edge = plan_edges.get(name)
+        spec_edge: Optional[Edge] = None
+        if edge is not None and edge.enabled:
+            # Phase-2 re-evaluation at the moment u starts (launch point for v)
+            u = edge.upstream
+            t_eval = start[u]
+            post = params.posterior_for(edge)
+            inputs = _decision_inputs(wf, edge, post, cfg, t_eval)
+            res = evaluate(inputs, use_lower_bound=cfg.use_lower_bound)
+            plan_decision = plan.decisions[edge.key].decision
+            overrode = "none"
+            if res.decision != plan_decision:
+                overrode = (
+                    "upgrade" if res.decision == Decision.SPECULATE else "downgrade"
+                )
+                overrides.append((edge.key, overrode))
+            predictor = cfg.predictors.get(edge.key)
+            i_hat_source = "modal"
+            row = None
+            if res.decision == Decision.SPECULATE and predictor is not None:
+                if op.admissibility == AdmissibilityTag.NON_SPECULABLE:
+                    raise NonSpeculableError(
+                        f"edge {edge.key} tagged non_speculable reached launch"
+                    )
+                spec_edge = edge
+            if predictor is not None:
+                i_hat_source = getattr(predictor, "source", None) or "modal"
+            row = _emit_row(
+                cfg, wf, edge, post, res, inputs, "runtime", overrode,
+                i_hat_source if i_hat_source in (
+                    "modal", "regex", "historical", "stream_k", "auxiliary_model"
+                ) else "modal",
+            )
+
+        if spec_edge is None:
+            # plain execution: start when all parents finished
+            t0 = max((finish[p] for p in parents), default=0.0)
+            args = [outputs[p] for p in parents]
+            outputs[name] = op.run(*args) if args else op.run(op.metadata.get("input"))
+            start[name], finish[name] = t0, t0 + dur
+            base_cost += cost
+            _release_effect(op, outputs[name])
+            if edge is not None:
+                # WAIT decision resolved: record the realized i for replay and
+                # label the trial if a prediction existed (counterfactual).
+                row.i_actual = _safe(outputs[edge.upstream])
+                row.latency_actual_s = dur
+                row.committed_speculative = False
+            continue
+
+        # ---------------------------------------------------- speculative path
+        u = spec_edge.upstream
+        post = params.posterior_for(spec_edge)
+        predictor = cfg.predictors[spec_edge.key]
+        upstream_input = wf.ops[u].metadata.get("input")
+        prediction: Optional[Prediction] = predictor.predict(upstream_input)
+        other_ready = max(
+            (finish[p] for p in parents if p != u), default=0.0
+        )
+        if prediction is None:
+            # no i_hat available at launch time -> out of scope for this edge
+            # (§1.4); fall back to waiting.
+            t0 = max(finish[p] for p in parents)
+            outputs[name] = op.run(*[outputs[p] for p in parents])
+            start[name], finish[name] = t0, t0 + dur
+            base_cost += cost
+            _release_effect(op, outputs[name])
+            continue
+
+        t_launch = max(start[u] + predictor.cost_estimate_s, other_ready)
+        i_hat = prediction.i_hat
+        u_dur = finish[u] - start[u]
+        n_chunks = int(wf.ops[u].metadata.get("chunks", cfg.default_chunks))
+        refine = cfg.stream_refiners.get(spec_edge.key)
+
+        # run the speculative downstream against i_hat (staged if barriered)
+        spec_args = [i_hat if p == u else outputs[p] for p in parents]
+        barrier = _make_barrier(op)
+        spec_output = _run_maybe_staged(op, barrier, *spec_args)
+
+        # §9: streaming re-estimation while u generates
+        cancelled, cancel_t, cancel_frac = False, None, None
+        if wf.ops[u].streams and refine is not None and n_chunks > 0:
+            u_out = outputs[u] if u in outputs else None
+            chunks = _chunk(u_out, n_chunks)
+            partial: list[Any] = []
+            for ci, chunk in enumerate(chunks):
+                partial.append(chunk)
+                if ci % cfg.throttle_every != 0:
+                    continue
+                t_chunk = start[u] + (ci + 1) / n_chunks * u_dur
+                i_hat_k, P_k = refine(upstream_input, partial)
+                inputs_k = dataclasses.replace(
+                    _decision_inputs(wf, spec_edge, post, cfg, t_chunk), P=P_k
+                )
+                res_k = evaluate(inputs_k)
+                if res_k.decision == Decision.WAIT:
+                    cancelled, cancel_t = True, t_chunk
+                    elapsed = max(0.0, t_chunk - t_launch)
+                    cancel_frac = min(1.0, elapsed / dur) if dur > 0 else 1.0
+                    break
+                if i_hat_k is not None:
+                    i_hat = i_hat_k  # refined prediction carries forward
+
+        i_actual = outputs[u]
+        check = check_success(i_actual, i_hat, spec_edge.tier_policy)
+
+        out_tokens = op.output_tokens_est
+        if cancelled:
+            frac = cancel_frac if cancel_frac is not None else 1.0
+            w = fractional_waste(
+                cost_model, op.input_tokens_est, out_tokens, frac * out_tokens
+            )
+            if spec_edge.key in cfg.rho_estimators:
+                cfg.rho_estimators[spec_edge.key].observe(frac)
+            waste += w
+            if barrier is not None:
+                barrier.drop()
+            post.update(False)  # cancelled failures are real failures (§10.3)
+            t0 = finish[u]
+            outputs[name] = op.run(*[outputs[p] for p in parents])
+            start[name], finish[name] = t0, t0 + dur
+            base_cost += cost
+            _release_effect(op, outputs[name])
+            outcomes.append(
+                SpeculationOutcome(
+                    spec_edge.key, True, False, True, cancel_frac, w, 0.0,
+                    i_hat, _safe(i_actual), row,
+                )
+            )
+            _fill_row(row, i_actual, check, False, w, frac * out_tokens, dur)
+            continue
+
+        if check.success:
+            # commit: speculative result reused; cost would be paid either way
+            outputs[name] = spec_output
+            commit_t = max(t_launch + dur, finish[u])
+            saved = (finish[u] + dur) - commit_t
+            start[name], finish[name] = t_launch, commit_t
+            base_cost += cost
+            if barrier is not None:
+                barrier.commit()
+            else:
+                _release_effect(op, outputs[name])
+            post.update(True)
+            outcomes.append(
+                SpeculationOutcome(
+                    spec_edge.key, True, True, False, None, 0.0, saved,
+                    i_hat, _safe(i_actual), row,
+                )
+            )
+            _fill_row(row, i_actual, check, True, cost, out_tokens, commit_t - t_launch)
+        else:
+            # tier failure at u's completion: cancel + re-execute with i
+            elapsed = max(0.0, finish[u] - t_launch)
+            frac = min(1.0, elapsed / dur) if dur > 0 else 1.0
+            if not op.streams:
+                frac = 1.0  # no mid-stream cancel -> full C_spec (§14.1)
+            w = fractional_waste(
+                cost_model, op.input_tokens_est, out_tokens, frac * out_tokens
+            )
+            if spec_edge.key in cfg.rho_estimators and op.streams:
+                cfg.rho_estimators[spec_edge.key].observe(frac)
+            waste += w
+            if barrier is not None:
+                barrier.drop()
+            post.update(False)
+            t0 = finish[u]
+            outputs[name] = op.run(*[outputs[p] for p in parents])
+            start[name], finish[name] = t0, t0 + dur
+            base_cost += cost
+            _release_effect(op, outputs[name])
+            outcomes.append(
+                SpeculationOutcome(
+                    spec_edge.key, True, False, False, frac, w, 0.0,
+                    i_hat, _safe(i_actual), row,
+                )
+            )
+            _fill_row(row, i_actual, check, False, w, frac * out_tokens, dur)
+
+    makespan = max(finish.values(), default=0.0)
+    return ExecutionReport(
+        outputs=outputs,
+        finish_times_s=finish,
+        makespan_s=makespan,
+        base_cost_usd=base_cost,
+        waste_usd=waste,
+        outcomes=outcomes,
+        overrides=overrides,
+    )
+
+
+# --------------------------------------------------------------------- helpers
+def _chunk(output: Any, n: int) -> list[Any]:
+    if isinstance(output, str) and len(output) >= n:
+        size = max(1, len(output) // n)
+        return [output[i : i + size] for i in range(0, len(output), size)][:n]
+    if isinstance(output, (list, tuple)) and len(output) >= n:
+        return list(output)[:n]
+    return [output] * n  # opaque outputs: n identical progress ticks
+
+
+def _make_barrier(op) -> Optional[CommitBarrier]:
+    if op.admissibility != AdmissibilityTag.COMMIT_BARRIER:
+        return None
+    effect = op.metadata.get("effect")
+    sink = op.metadata.setdefault("released_effects", [])
+    release = effect if callable(effect) else sink.append
+    return CommitBarrier(release=release)
+
+
+def _run_maybe_staged(op, barrier: Optional[CommitBarrier], *args: Any) -> Any:
+    out = op.run(*args)
+    if barrier is not None:
+        barrier.stage(out)
+    return out
+
+
+def _release_effect(op, output: Any) -> None:
+    effect = op.metadata.get("effect")
+    if callable(effect):
+        effect(output)
+    elif op.admissibility == AdmissibilityTag.COMMIT_BARRIER:
+        op.metadata.setdefault("released_effects", []).append(output)
+
+
+def _safe(o: Any) -> Any:
+    return o
+
+
+def _fill_row(
+    row: Optional[SpeculationDecision],
+    i_actual: Any,
+    check,
+    committed: bool,
+    c_actual: float,
+    tokens_generated: float,
+    latency_s: float,
+) -> None:
+    if row is None:
+        return
+    row.i_actual = i_actual
+    row.tier1_match = check.tier1_match
+    row.tier2_match = check.tier2_match
+    row.tier3_accept = check.tier3_accept
+    row.committed_speculative = committed
+    row.C_spec_actual_usd = c_actual
+    row.tokens_generated_before_cancel = int(tokens_generated)
+    row.latency_actual_s = latency_s

@@ -1,0 +1,245 @@
+"""§8.1 — Phase 1: planning.
+
+Before execution, enumerate candidate parallelization plans over discrete
+concurrency settings (sequential / maximally parallel / intermediate), make
+a SPECULATE/WAIT decision per candidate edge with the §6 rule, and pick the
+plan minimizing
+
+    alpha * (Latency(plan) * lambda) + (1 - alpha) * MonetaryCost(plan)
+
+subject to   MonetaryCost <= max_budget      (if specified)
+             Latency      <= max_latency     (if specified)
+             |wave|       <= max_concurrency
+
+    MonetaryCost(plan) = sum_v cost(v) + sum_spec_v (1-P_v) * cost_actual(v)
+    Latency(plan)      = sum_waves max_{v in wave} latency(v)
+
+Concretization (the paper leaves the schedule model coarse): we compute the
+expected makespan event-wise.  A speculated edge (u, v) lets v start at
+u's *start* (with predicted input) instead of u's finish; on success
+(prob P) v commits at max(spec finish, u finish), on failure (prob 1-P)
+v re-executes after u.  Expected finish is the P-weighted mix.  Concurrency
+is enforced with c machine slots, list-scheduled in topological order.
+For small DAGs (5-20 ops) enumerating concurrency levels is tractable
+(paper: list scheduling / ILP substitute for larger DAGs without changing
+the rest of the method).
+
+Phase 1 outputs: (plan, per-candidate decisions, expected latency, expected
+cost) — the user-visible estimate (§8.3 "Visibility").
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Optional
+
+from .decision import Decision, DecisionInputs, DecisionResult, evaluate
+from .posterior import BetaPosterior
+from .pricing import TwoRateTokenCost, get_pricing
+from .streaming import DEFAULT_RHO, expected_speculation_waste
+from .workflow import Edge, Workflow
+
+__all__ = ["PlannerParams", "Plan", "plan_workflow", "enumerate_plans"]
+
+
+@dataclasses.dataclass
+class PlannerParams:
+    alpha: float = 0.5
+    lambda_usd_per_s: float = 0.01
+    max_budget_usd: Optional[float] = None
+    max_latency_s: Optional[float] = None
+    max_concurrency: Optional[int] = None
+    # per-edge posteriors (D5); missing edges fall back to the edge's
+    # structural prior.
+    posteriors: dict[tuple[str, str], BetaPosterior] = dataclasses.field(default_factory=dict)
+    # per-edge expected cancel fraction rho (§9.3)
+    rho: dict[tuple[str, str], float] = dataclasses.field(default_factory=dict)
+    use_lower_bound: bool = False      # §7.5 credible gating
+    gamma: float = 0.1
+    # per-edge latency-savings override; default = overlap = min(lat_u, lat_v)
+    latency_savings_s: dict[tuple[str, str], float] = dataclasses.field(default_factory=dict)
+
+    def posterior_for(self, edge: Edge) -> BetaPosterior:
+        post = self.posteriors.get(edge.key)
+        if post is None:
+            post = BetaPosterior.from_dependency_type(
+                edge.dep_type, k=edge.k, rare_event_p=edge.rare_event_p
+            )
+            self.posteriors[edge.key] = post
+        return post
+
+
+@dataclasses.dataclass
+class ScheduledOp:
+    name: str
+    start_s: float
+    finish_s: float
+    speculative: bool
+    wave: int
+
+
+@dataclasses.dataclass
+class Plan:
+    concurrency: int
+    decisions: dict[tuple[str, str], DecisionResult]
+    schedule: dict[str, ScheduledOp]
+    expected_latency_s: float
+    base_cost_usd: float
+    expected_waste_usd: float
+    feasible: bool
+    infeasibility: Optional[str] = None
+
+    @property
+    def expected_cost_usd(self) -> float:
+        return self.base_cost_usd + self.expected_waste_usd
+
+    def objective(self, alpha: float, lambda_usd_per_s: float) -> float:
+        return alpha * self.expected_latency_s * lambda_usd_per_s + (
+            1.0 - alpha
+        ) * self.expected_cost_usd
+
+    def speculated_edges(self) -> list[tuple[str, str]]:
+        return [k for k, d in self.decisions.items() if d.decision == Decision.SPECULATE]
+
+
+def _edge_decision(wf: Workflow, edge: Edge, params: PlannerParams) -> DecisionResult:
+    op = wf.ops[edge.downstream]
+    up = wf.ops[edge.upstream]
+    pricing = get_pricing(op.provider, op.model)
+    post = params.posterior_for(edge)
+    L = params.latency_savings_s.get(
+        edge.key, min(up.latency_est_s, op.latency_est_s)
+    )
+    inputs = DecisionInputs(
+        P=post.mean,
+        alpha=params.alpha,
+        lambda_usd_per_s=params.lambda_usd_per_s,
+        latency_seconds=L,
+        input_tokens=op.input_tokens_est,
+        output_tokens=op.output_tokens_est,
+        input_price=pricing.input_price_per_token,
+        output_price=pricing.output_price_per_token,
+        P_lower_bound=post.lower_bound(params.gamma) if params.use_lower_bound else None,
+    )
+    return evaluate(inputs, use_lower_bound=params.use_lower_bound)
+
+
+def _op_cost(wf: Workflow, name: str) -> float:
+    op = wf.ops[name]
+    pricing = get_pricing(op.provider, op.model)
+    return TwoRateTokenCost.from_entry(pricing).cost(
+        op.input_tokens_est, op.output_tokens_est
+    )
+
+
+def _expected_schedule(
+    wf: Workflow,
+    speculated: set[tuple[str, str]],
+    params: PlannerParams,
+    concurrency: int,
+) -> dict[str, ScheduledOp]:
+    """Expected-time list schedule with c slots and speculative early starts."""
+    topo = wf.topo_order()
+    slots: list[float] = [0.0] * concurrency  # machine-ready times (min-heap)
+    heapq.heapify(slots)
+    start: dict[str, float] = {}
+    finish: dict[str, float] = {}
+    sched: dict[str, ScheduledOp] = {}
+    for name in topo:
+        op = wf.ops[name]
+        spec_parents = {u for (u, v) in speculated if v == name}
+        dep_ready = 0.0
+        is_spec = bool(spec_parents)
+        for p in wf.parents(name):
+            if p in spec_parents:
+                dep_ready = max(dep_ready, start[p])  # launch at u's start (D1)
+            else:
+                dep_ready = max(dep_ready, finish[p])
+        slot_ready = heapq.heappop(slots)
+        t0 = max(dep_ready, slot_ready)
+        lat = op.latency_est_s
+        if is_spec:
+            # single speculated parent assumed dominant; P from its posterior
+            u = next(iter(spec_parents))
+            post = params.posterior_for(wf.edges[(u, name)])
+            P = post.mean
+            commit_ok = max(t0 + lat, finish[u])            # success path
+            commit_fail = finish[u] + lat                   # re-execute with i
+            t1 = P * commit_ok + (1.0 - P) * commit_fail    # expected finish
+        else:
+            t1 = t0 + lat
+        start[name], finish[name] = t0, t1
+        heapq.heappush(slots, t1)
+        sched[name] = ScheduledOp(name, t0, t1, is_spec, wave=-1)
+    # derive wave indices (for reporting / the paper's wave-sum view)
+    order = sorted(sched.values(), key=lambda s: (s.start_s, s.name))
+    wave, last_start = -1, None
+    for s in order:
+        if last_start is None or s.start_s > last_start + 1e-12:
+            wave += 1
+            last_start = s.start_s
+        s.wave = wave
+    return sched
+
+
+def _build_plan(wf: Workflow, params: PlannerParams, concurrency: int) -> Plan:
+    decisions: dict[tuple[str, str], DecisionResult] = {}
+    for edge in wf.speculation_candidates():
+        decisions[edge.key] = _edge_decision(wf, edge, params)
+    speculated = {
+        k for k, d in decisions.items() if d.decision == Decision.SPECULATE
+    }
+    if concurrency <= 1:
+        speculated = set()  # sequential plan cannot overlap anything
+    sched = _expected_schedule(wf, speculated, params, max(1, concurrency))
+    latency = max((s.finish_s for s in sched.values()), default=0.0)
+    base_cost = sum(_op_cost(wf, n) for n in wf.ops)
+    waste = 0.0
+    for (u, v) in speculated:
+        op = wf.ops[v]
+        pricing = get_pricing(op.provider, op.model)
+        post = params.posterior_for(wf.edges[(u, v)])
+        waste += expected_speculation_waste(
+            post.mean,
+            TwoRateTokenCost.from_entry(pricing),
+            op.input_tokens_est,
+            op.output_tokens_est,
+            rho=params.rho.get((u, v), DEFAULT_RHO),
+            streaming=op.streams,
+        )
+    plan = Plan(
+        concurrency=concurrency,
+        decisions=decisions,
+        schedule=sched,
+        expected_latency_s=latency,
+        base_cost_usd=base_cost,
+        expected_waste_usd=waste,
+        feasible=True,
+    )
+    if params.max_budget_usd is not None and plan.expected_cost_usd > params.max_budget_usd:
+        plan.feasible, plan.infeasibility = False, "budget"
+    if params.max_latency_s is not None and plan.expected_latency_s > params.max_latency_s:
+        plan.feasible, plan.infeasibility = False, "latency"
+    return plan
+
+
+def enumerate_plans(wf: Workflow, params: PlannerParams) -> list[Plan]:
+    """Candidate plans over discrete concurrency settings (§8.1):
+    sequential, powers of two, and maximally parallel."""
+    if not wf.frozen:
+        raise ValueError("plan_workflow requires a frozen workflow")
+    n = len(wf.ops)
+    cap = params.max_concurrency or n
+    levels = sorted({1, *(c for c in (2, 4, 8, 16) if c < min(n, cap)), min(n, cap)})
+    return [_build_plan(wf, params, c) for c in levels]
+
+
+def plan_workflow(wf: Workflow, params: PlannerParams) -> tuple[Plan, list[Plan]]:
+    """Phase 1 entry point.  Returns (best feasible plan, all candidates).
+    If no plan is feasible the least-violating plan is returned with
+    feasible=False (caller decides whether to proceed)."""
+    plans = enumerate_plans(wf, params)
+    feasible = [p for p in plans if p.feasible]
+    pool = feasible or plans
+    best = min(pool, key=lambda p: p.objective(params.alpha, params.lambda_usd_per_s))
+    return best, plans

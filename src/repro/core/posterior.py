@@ -1,0 +1,163 @@
+"""D5 — Bayesian Beta-Binomial posterior over speculation success P.
+
+Paper §7.3 + Appendix A.  Conjugate pair:
+
+    Prior:       P ~ Beta(alpha0, beta0)      (mean = p_structural, n0 = 2)
+    Observation: X_i ~ Bernoulli(P)           (success = "speculation useful", §7.4)
+    Posterior:   P | data ~ Beta(alpha0 + s, beta0 + f)
+
+Also implements: credible-interval gating (§7.5), data-seeded priors
+(§12.1), and an optional discounted (exponential-forgetting) update noted
+as the natural non-stationarity complement in §14.3.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from scipy import stats as _stats
+
+from .taxonomy import DEFAULT_N0, DependencyType, prior_params
+
+__all__ = ["BetaPosterior", "beta_lower_bound"]
+
+
+def beta_lower_bound(alpha: float, beta: float, gamma: float = 0.1) -> float:
+    """One-sided (1-gamma) lower credible bound: Beta^{-1}(gamma; alpha, beta)."""
+    if alpha <= 0 or beta <= 0:
+        raise ValueError("Beta parameters must be positive")
+    return float(_stats.beta.ppf(gamma, alpha, beta))
+
+
+@dataclasses.dataclass
+class BetaPosterior:
+    """Mutable Beta posterior for one dependency edge (one (u, v) pair).
+
+    Each (u, v) pair gets an independent belief (paper §14.3 notes joint /
+    hierarchical estimation as open).
+    """
+
+    alpha: float
+    beta: float
+    successes: int = 0
+    failures: int = 0
+    # exponential forgetting factor in (0, 1]; 1.0 = the paper's exact
+    # undiscounted conjugate update.  <1 down-weights older trials
+    # (paper §14.3 "discounted Beta update" complement).
+    discount: float = 1.0
+
+    # ------------------------------------------------------------------ ctor
+    @classmethod
+    def from_dependency_type(
+        cls,
+        dep_type: DependencyType,
+        *,
+        k: int | None = None,
+        rare_event_p: float | None = None,
+        n0: float = DEFAULT_N0,
+        discount: float = 1.0,
+    ) -> "BetaPosterior":
+        a0, b0 = prior_params(dep_type, k=k, rare_event_p=rare_event_p, n0=n0)
+        return cls(alpha=a0, beta=b0, discount=discount)
+
+    @classmethod
+    def from_prior_mean(
+        cls, p: float, n0: float = DEFAULT_N0, discount: float = 1.0
+    ) -> "BetaPosterior":
+        if not (0.0 < p < 1.0):
+            raise ValueError("prior mean must be in (0, 1)")
+        return cls(alpha=p * n0, beta=(1.0 - p) * n0, discount=discount)
+
+    @classmethod
+    def data_seeded(
+        cls,
+        dep_type: DependencyType,
+        s0: int,
+        f0: int,
+        *,
+        k: int | None = None,
+        n0: float = DEFAULT_N0,
+    ) -> "BetaPosterior":
+        """§12.1 data-seeded prior: start the posterior from logged (s, f)
+        so the edge opens production with P already close to truth."""
+        post = cls.from_dependency_type(dep_type, k=k, n0=n0)
+        post.alpha += s0
+        post.beta += f0
+        post.successes = s0
+        post.failures = f0
+        return post
+
+    # --------------------------------------------------------------- updates
+    def update(self, success: bool) -> "BetaPosterior":
+        """One Bernoulli observation.  Streaming-cancelled failures are still
+        real failures for P-estimation purposes (paper §10.3)."""
+        if self.discount != 1.0:
+            # discounted update: shrink pseudo-counts toward the scale of the
+            # prior before adding the new observation.
+            self.alpha *= self.discount
+            self.beta *= self.discount
+        if success:
+            self.alpha += 1.0
+            self.successes += 1
+        else:
+            self.beta += 1.0
+            self.failures += 1
+        return self
+
+    def update_batch(self, s: int, f: int) -> "BetaPosterior":
+        if s < 0 or f < 0:
+            raise ValueError("counts must be non-negative")
+        self.alpha += s
+        self.beta += f
+        self.successes += s
+        self.failures += f
+        return self
+
+    # --------------------------------------------------------------- queries
+    @property
+    def n(self) -> int:
+        return self.successes + self.failures
+
+    @property
+    def mean(self) -> float:
+        return self.alpha / (self.alpha + self.beta)
+
+    @property
+    def variance(self) -> float:
+        ab = self.alpha + self.beta
+        return (self.alpha * self.beta) / (ab * ab * (ab + 1.0))
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.variance)
+
+    def lower_bound(self, gamma: float = 0.1) -> float:
+        """§7.5 one-sided (1-gamma) lower credible bound."""
+        return beta_lower_bound(self.alpha, self.beta, gamma)
+
+    def credible_interval(self, level: float = 0.95) -> tuple[float, float]:
+        tail = (1.0 - level) / 2.0
+        lo = float(_stats.beta.ppf(tail, self.alpha, self.beta))
+        hi = float(_stats.beta.ppf(1.0 - tail, self.alpha, self.beta))
+        return lo, hi
+
+    def data_weight(self) -> float:
+        """Fraction of the posterior mean weighted by data vs prior.
+
+        Appendix A.4: with n0=2, after ~10 observations the posterior mean is
+        ~82% data-weighted, ~18% prior-weighted.
+        """
+        total = self.alpha + self.beta
+        return self.n / total if total > 0 else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "alpha": self.alpha,
+            "beta": self.beta,
+            "mean": self.mean,
+            "successes": self.successes,
+            "failures": self.failures,
+        }
+
+    def copy(self) -> "BetaPosterior":
+        return dataclasses.replace(self)

@@ -1,0 +1,133 @@
+"""§3.2 — where the predicted input i_hat comes from.
+
+Three sources in preference order:
+  1. context-conditioned prediction (cheap auxiliary model or template)
+  2. most-likely historical input (modal output for similar inputs)
+  3. streaming partial output (§9) — re-estimate as tokens arrive
+
+The method's correctness does not depend on *how* i_hat was produced, only
+that (a) a prediction exists at launch time and (b) §7.4 labels each trial.
+The predictor's own cost matters for latency economics (§14.2), so every
+predictor reports a ``cost_estimate_s``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+from typing import Any, Callable, Hashable, Optional, Protocol, Sequence
+
+__all__ = [
+    "InputPredictor",
+    "Prediction",
+    "TemplatePredictor",
+    "HistoricalModalPredictor",
+    "StreamingPredictor",
+    "AuxiliaryModelPredictor",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Prediction:
+    i_hat: Any
+    source: str          # telemetry i_hat_source: modal|regex|historical|stream_k|auxiliary_model
+    confidence: Optional[float] = None  # predictor-local P(i == i_hat), if available
+
+
+class InputPredictor(Protocol):
+    cost_estimate_s: float
+
+    def predict(self, upstream_input: Any, partial_output: Any = None) -> Optional[Prediction]:
+        ...
+
+
+@dataclasses.dataclass
+class TemplatePredictor:
+    """Source 1 (template flavor): a deterministic template/regex over the
+    upstream's input and partial state."""
+
+    template: Callable[[Any, Any], Any]
+    source: str = "regex"
+    cost_estimate_s: float = 0.0
+
+    def predict(self, upstream_input: Any, partial_output: Any = None) -> Optional[Prediction]:
+        out = self.template(upstream_input, partial_output)
+        return None if out is None else Prediction(out, self.source)
+
+
+@dataclasses.dataclass
+class AuxiliaryModelPredictor:
+    """Source 1 (model flavor): a cheap auxiliary model call.  ``model_fn``
+    may be an EngineOp decode on a small model; its latency cost is charged
+    against the reclaimable latency (§14.2)."""
+
+    model_fn: Callable[[Any, Any], Any]
+    cost_estimate_s: float = 0.05
+
+    def predict(self, upstream_input: Any, partial_output: Any = None) -> Optional[Prediction]:
+        out = self.model_fn(upstream_input, partial_output)
+        return None if out is None else Prediction(out, "auxiliary_model")
+
+
+@dataclasses.dataclass
+class HistoricalModalPredictor:
+    """Source 2: from logged (upstream_input, upstream_output) pairs, the
+    modal output for similar inputs.  ``bucket`` maps an input to a
+    similarity bucket (default: single global bucket)."""
+
+    bucket: Callable[[Any], Hashable] = lambda x: "__global__"
+    cost_estimate_s: float = 0.0
+    _history: dict = dataclasses.field(default_factory=lambda: defaultdict(Counter))
+
+    def observe(self, upstream_input: Any, upstream_output: Any) -> None:
+        self._history[self.bucket(upstream_input)][_freeze(upstream_output)] += 1
+
+    def observe_many(self, pairs: Sequence[tuple[Any, Any]]) -> None:
+        for i, o in pairs:
+            self.observe(i, o)
+
+    def predict(self, upstream_input: Any, partial_output: Any = None) -> Optional[Prediction]:
+        counts = self._history.get(self.bucket(upstream_input))
+        if not counts:
+            return None
+        (mode, n_mode), total = counts.most_common(1)[0], sum(counts.values())
+        return Prediction(_thaw(mode), "historical", confidence=n_mode / total)
+
+
+@dataclasses.dataclass
+class StreamingPredictor:
+    """Source 3: re-estimate i_hat from the upstream's streamed partial
+    output (§9.1).  ``refine`` maps (upstream_input, partial_output) to a
+    refined prediction + confidence; throttling (every N chunks) is the
+    executor's job (§9.1 'throttled ... not every token')."""
+
+    refine: Callable[[Any, Any], tuple[Any, float]]
+    cost_estimate_s: float = 0.001
+
+    def predict(self, upstream_input: Any, partial_output: Any = None) -> Optional[Prediction]:
+        if partial_output is None:
+            return None
+        i_hat, conf = self.refine(upstream_input, partial_output)
+        if i_hat is None:
+            return None
+        return Prediction(i_hat, "stream_k", confidence=conf)
+
+
+def _freeze(o: Any) -> Hashable:
+    if isinstance(o, dict):
+        return ("__dict__", tuple(sorted((k, _freeze(v)) for k, v in o.items())))
+    if isinstance(o, list):
+        return ("__list__", tuple(_freeze(x) for x in o))
+    if isinstance(o, tuple):
+        return ("__tuple__", tuple(_freeze(x) for x in o))
+    return o
+
+
+def _thaw(o: Any) -> Any:
+    if isinstance(o, tuple) and len(o) == 2 and o[0] in ("__dict__", "__list__", "__tuple__"):
+        tag, body = o
+        if tag == "__dict__":
+            return {k: _thaw(v) for k, v in body}
+        if tag == "__list__":
+            return [_thaw(x) for x in body]
+        return tuple(_thaw(x) for x in body)
+    return o

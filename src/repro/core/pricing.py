@@ -1,0 +1,189 @@
+"""D2 — Two-rate per-token monetary cost (paper §4).
+
+Every speculation decision is priced in real dollars at *separate* input
+and output token rates.  Commercial APIs bill output tokens at 3-8x the
+input rate (paper §4.1), so the two-rate form is the distinctive choice;
+single-rate reductions (GPU-hour amortization, §4.3) are supported as
+pluggable cost models that reduce to the same linear-per-token form.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+__all__ = [
+    "PricingEntry",
+    "PRICING_MAP",
+    "CostModel",
+    "TwoRateTokenCost",
+    "GpuHourCost",
+    "TpuChipHourCost",
+    "speculation_cost",
+    "register_pricing",
+    "get_pricing",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PricingEntry:
+    """Per-(provider, model) billing rates — paper §4.1 data structure."""
+
+    provider: str                  # e.g. "anthropic", "openai"
+    model: str                     # e.g. "claude-opus-4-7"
+    input_price_per_token: float   # USD per input token
+    output_price_per_token: float  # USD per output token
+
+    def __post_init__(self) -> None:
+        if self.input_price_per_token < 0 or self.output_price_per_token < 0:
+            raise ValueError("token prices must be non-negative")
+
+    @property
+    def rate_asymmetry(self) -> float:
+        """output/input rate ratio (3-8x for major APIs, paper §4.1)."""
+        if self.input_price_per_token == 0:
+            return float("inf")
+        return self.output_price_per_token / self.input_price_per_token
+
+
+# Representative 2026 frontier-API prices (USD/token).  The paper's worked
+# examples use $3/M input, $15/M output ("typical frontier-API prices",
+# §10.1); entries below are the canonical defaults used by examples/tests.
+PRICING_MAP: dict[tuple[str, str], PricingEntry] = {}
+
+
+def register_pricing(entry: PricingEntry) -> PricingEntry:
+    PRICING_MAP[(entry.provider, entry.model)] = entry
+    return entry
+
+
+def get_pricing(provider: str, model: str) -> PricingEntry:
+    try:
+        return PRICING_MAP[(provider, model)]
+    except KeyError:
+        raise KeyError(
+            f"no pricing registered for ({provider!r}, {model!r}); "
+            f"known: {sorted(PRICING_MAP)}"
+        ) from None
+
+
+for _e in [
+    # canonical worked-example tier (paper §10.1): $3/M in, $15/M out
+    PricingEntry("paper", "frontier-default", 3e-6, 15e-6),
+    PricingEntry("anthropic", "claude-opus-4-7", 15e-6, 75e-6),
+    PricingEntry("anthropic", "claude-sonnet-4-6", 3e-6, 15e-6),
+    PricingEntry("anthropic", "claude-haiku-4-5", 1e-6, 5e-6),
+    PricingEntry("openai", "gpt-5.2", 10e-6, 40e-6),
+    PricingEntry("openai", "gpt-5.2-mini", 1.5e-6, 6e-6),
+    PricingEntry("google", "gemini-3-pro", 2.5e-6, 15e-6),
+    PricingEntry("mistral", "mistral-large-3", 2e-6, 6e-6),
+]:
+    register_pricing(_e)
+
+
+class CostModel(Protocol):
+    """Pluggable C_spec model (paper §4.3): must be linear per token."""
+
+    def cost(self, input_tokens: int, output_tokens: float) -> float:
+        """USD cost of an operation with the given token counts."""
+        ...
+
+    def split(self, input_tokens: int, output_tokens: float) -> tuple[float, float]:
+        """(input-side USD, output-side USD) — needed for fractional waste (§9.3)."""
+        ...
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoRateTokenCost:
+    """The paper's distinctive D2 form: input and output billed separately."""
+
+    input_price: float   # USD / input token
+    output_price: float  # USD / output token
+
+    @classmethod
+    def from_entry(cls, entry: PricingEntry) -> "TwoRateTokenCost":
+        return cls(entry.input_price_per_token, entry.output_price_per_token)
+
+    def cost(self, input_tokens: int, output_tokens: float) -> float:
+        c_in, c_out = self.split(input_tokens, output_tokens)
+        return c_in + c_out
+
+    def split(self, input_tokens: int, output_tokens: float) -> tuple[float, float]:
+        if input_tokens < 0 or output_tokens < 0:
+            raise ValueError("token counts must be non-negative")
+        return input_tokens * self.input_price, output_tokens * self.output_price
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuHourCost:
+    """Paper §4.3 self-hosted form:
+
+        C_spec = (unit_price * num_gpus * output_tokens) / (throughput * utilization)
+
+    Reduces to linear-per-token with a single blended rate, so the decision
+    rule is unchanged.  Input tokens are priced at the prefill throughput.
+    """
+
+    unit_price_per_hour: float       # USD per GPU-hour
+    num_gpus: int
+    decode_tokens_per_hour: float    # aggregate decode throughput
+    prefill_tokens_per_hour: float   # aggregate prefill throughput
+    utilization: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not (0 < self.utilization <= 1):
+            raise ValueError("utilization must be in (0, 1]")
+
+    @property
+    def _out_rate(self) -> float:
+        return (self.unit_price_per_hour * self.num_gpus) / (
+            self.decode_tokens_per_hour * self.utilization
+        )
+
+    @property
+    def _in_rate(self) -> float:
+        return (self.unit_price_per_hour * self.num_gpus) / (
+            self.prefill_tokens_per_hour * self.utilization
+        )
+
+    def cost(self, input_tokens: int, output_tokens: float) -> float:
+        c_in, c_out = self.split(input_tokens, output_tokens)
+        return c_in + c_out
+
+    def split(self, input_tokens: int, output_tokens: float) -> tuple[float, float]:
+        return input_tokens * self._in_rate, output_tokens * self._out_rate
+
+
+@dataclasses.dataclass(frozen=True)
+class TpuChipHourCost:
+    """TPU-native adaptation of §4.3: chip-hour amortization at per-chip
+    $/hr.  Same linear-per-token reduction as GpuHourCost (DESIGN.md §3)."""
+
+    chip_price_per_hour: float
+    num_chips: int
+    decode_tokens_per_hour: float
+    prefill_tokens_per_hour: float
+    utilization: float = 1.0
+
+    def _rates(self) -> tuple[float, float]:
+        denom_in = self.prefill_tokens_per_hour * self.utilization
+        denom_out = self.decode_tokens_per_hour * self.utilization
+        scale = self.chip_price_per_hour * self.num_chips
+        return scale / denom_in, scale / denom_out
+
+    def cost(self, input_tokens: int, output_tokens: float) -> float:
+        c_in, c_out = self.split(input_tokens, output_tokens)
+        return c_in + c_out
+
+    def split(self, input_tokens: int, output_tokens: float) -> tuple[float, float]:
+        r_in, r_out = self._rates()
+        return input_tokens * r_in, output_tokens * r_out
+
+
+def speculation_cost(
+    input_tokens: int,
+    output_tokens: float,
+    input_price: float,
+    output_price: float,
+) -> float:
+    """C_spec = input_tokens*input_price + output_tokens*output_price (§4.1)."""
+    return TwoRateTokenCost(input_price, output_price).cost(input_tokens, output_tokens)

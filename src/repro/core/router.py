@@ -1,0 +1,81 @@
+"""§6.6 — multi-provider routing under alpha.
+
+An operation may be routed to different provider/model tiers based on
+alpha: cost-sensitive preferences favor cheaper models; latency-sensitive
+preferences favor faster ones.  Routing evaluates the decision rule
+independently per (operation, provider, model) candidate and selects the
+best per alpha.  Sits at the boundary of D2 (pricing) and D3 (alpha).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .decision import DecisionInputs, DecisionResult, evaluate
+from .pricing import PricingEntry, get_pricing
+
+__all__ = ["RouteCandidate", "RoutedChoice", "route"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteCandidate:
+    """One (provider, model) tier an operation could be served by."""
+
+    provider: str
+    model: str
+    latency_est_s: float          # expected operation latency on this tier
+    output_tokens_est: float      # tier-specific verbosity estimate
+    input_tokens_est: int
+    P: float                      # success probability on this tier
+
+    def pricing(self) -> PricingEntry:
+        return get_pricing(self.provider, self.model)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutedChoice:
+    candidate: RouteCandidate
+    result: DecisionResult
+    score: float                  # alpha-weighted objective (lower is better)
+
+
+def route(
+    candidates: list[RouteCandidate],
+    alpha: float,
+    lambda_usd_per_s: float,
+    baseline_latency_s: Optional[float] = None,
+) -> RoutedChoice:
+    """Pick the tier minimizing the alpha-weighted latency/cost objective
+
+        score = alpha * latency * lambda + (1 - alpha) * expected_cost
+
+    where expected_cost = C_spec + (1-P) * C_spec (the failure-weighted
+    waste the D4 rule charges).  Ties broken toward lower latency.
+    The D4 decision itself is evaluated per candidate against the slowest
+    tier's latency as the savings baseline (latency saved by *this* tier
+    relative to the worst), matching "evaluating the decision rule
+    independently per candidate" (§6.6).
+    """
+    if not candidates:
+        raise ValueError("no routing candidates")
+    base = baseline_latency_s or max(c.latency_est_s for c in candidates)
+    scored: list[RoutedChoice] = []
+    for c in candidates:
+        pr = c.pricing()
+        latency_saved = max(0.0, base - c.latency_est_s)
+        res = evaluate(
+            DecisionInputs(
+                P=c.P,
+                alpha=alpha,
+                lambda_usd_per_s=lambda_usd_per_s,
+                latency_seconds=latency_saved,
+                input_tokens=c.input_tokens_est,
+                output_tokens=c.output_tokens_est,
+                input_price=pr.input_price_per_token,
+                output_price=pr.output_price_per_token,
+            )
+        )
+        expected_cost = res.C_spec_usd + (1.0 - c.P) * res.C_spec_usd
+        score = alpha * c.latency_est_s * lambda_usd_per_s + (1.0 - alpha) * expected_cost
+        scored.append(RoutedChoice(c, res, score))
+    return min(scored, key=lambda rc: (rc.score, rc.candidate.latency_est_s))

@@ -1,0 +1,157 @@
+"""§9 — streaming re-estimation, mid-stream cancellation, fractional waste.
+
+If the upstream streams tokens, the runtime re-estimates i_hat (and hence
+P) as chunks arrive, re-runs the D4 rule, and cancels the speculative
+downstream mid-execution when P_k falls below the speculation threshold.
+Cancellation matters for billing: waste is
+
+    C_spec_actual = C_input + f * C_output,   f in [0, 1]
+
+not the full C_spec.  The planner's pessimism is reduced accordingly:
+
+    Expected_Speculation_Waste_v = (1 - P_v) * (C_input + rho_v * C_output)
+
+with rho the expected cancel fraction (EMA from streaming history; default
+0.5 with no history, §9.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional
+
+from .decision import Decision, DecisionInputs, evaluate
+from .pricing import CostModel
+
+__all__ = [
+    "fractional_waste",
+    "expected_speculation_waste",
+    "RhoEstimator",
+    "StreamingReestimator",
+    "ChunkVerdict",
+]
+
+DEFAULT_RHO = 0.5
+
+
+def fractional_waste(
+    cost_model: CostModel,
+    input_tokens: int,
+    output_tokens_planned: float,
+    output_tokens_generated: float,
+) -> float:
+    """C_spec_actual for a cancelled speculation (§9.3): full input cost
+    (the prompt was sent) plus only the output tokens actually emitted."""
+    if output_tokens_generated > output_tokens_planned:
+        # generation ran past the plan before cancellation; bill actuals
+        output_tokens_planned = output_tokens_generated
+    c_in, _ = cost_model.split(input_tokens, 0)
+    _, c_out = cost_model.split(0, output_tokens_generated)
+    return c_in + c_out
+
+
+def expected_speculation_waste(
+    P: float,
+    cost_model: CostModel,
+    input_tokens: int,
+    output_tokens: float,
+    rho: float = DEFAULT_RHO,
+    *,
+    streaming: bool = True,
+) -> float:
+    """(1-P) * (C_input + rho * C_output); rho=1 (full C_spec) when the
+    provider does not stream / cannot cancel (§14.1 fallback)."""
+    if not streaming:
+        rho = 1.0
+    if not (0.0 <= rho <= 1.0):
+        raise ValueError("rho must be in [0, 1]")
+    c_in, c_out = cost_model.split(input_tokens, output_tokens)
+    return (1.0 - P) * (c_in + rho * c_out)
+
+
+@dataclasses.dataclass
+class RhoEstimator:
+    """EMA of the cancel fraction f over streaming history (§9.3)."""
+
+    ema: float = DEFAULT_RHO
+    decay: float = 0.2      # same alpha_EMA convention as §4.2 token EMA
+    n: int = 0
+
+    def observe(self, f: float) -> float:
+        if not (0.0 <= f <= 1.0):
+            raise ValueError("cancel fraction must be in [0, 1]")
+        if self.n == 0:
+            self.ema = f
+        else:
+            self.ema = self.decay * f + (1.0 - self.decay) * self.ema
+        self.n += 1
+        return self.ema
+
+    @property
+    def rho(self) -> float:
+        return self.ema if self.n > 0 else DEFAULT_RHO
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkVerdict:
+    """Outcome of re-running the D4 rule at one streamed chunk."""
+
+    chunk_index: int
+    P_k: float
+    decision: Decision
+    cancel: bool            # True when a running speculation should stop
+    i_hat_k: Any
+    EV_usd: float
+    threshold_usd: float
+
+
+class StreamingReestimator:
+    """§9.1 per-chunk loop.  ``predict`` maps (upstream_input, partial) ->
+    (i_hat_k, P_k); ``throttle_every`` implements the §9.1 throttling
+    recommendation (re-estimate every N chunks, not every token)."""
+
+    def __init__(
+        self,
+        predict: Callable[[Any, Any], tuple[Any, float]],
+        base_inputs: DecisionInputs,
+        *,
+        throttle_every: int = 1,
+    ) -> None:
+        if throttle_every < 1:
+            raise ValueError("throttle_every must be >= 1")
+        self.predict = predict
+        self.base = base_inputs
+        self.throttle_every = throttle_every
+        self.verdicts: list[ChunkVerdict] = []
+
+    def on_chunk(
+        self, chunk_index: int, upstream_input: Any, partial_output: Any
+    ) -> Optional[ChunkVerdict]:
+        """Process one streamed chunk; returns None on throttled chunks."""
+        if chunk_index % self.throttle_every != 0:
+            return None
+        i_hat_k, P_k = self.predict(upstream_input, partial_output)
+        res = evaluate(dataclasses.replace(self.base, P=P_k))
+        verdict = ChunkVerdict(
+            chunk_index=chunk_index,
+            P_k=P_k,
+            decision=res.decision,
+            cancel=res.decision == Decision.WAIT,
+            i_hat_k=i_hat_k,
+            EV_usd=res.EV_usd,
+            threshold_usd=res.threshold_usd,
+        )
+        self.verdicts.append(verdict)
+        return verdict
+
+    def run(
+        self, upstream_input: Any, chunks: Iterable[Any]
+    ) -> tuple[Optional[ChunkVerdict], list[ChunkVerdict]]:
+        """Feed a whole stream; stop at the first cancel verdict.  Returns
+        (first_cancel_or_None, all_verdicts)."""
+        partial: list[Any] = []
+        for idx, chunk in enumerate(chunks):
+            partial.append(chunk)
+            verdict = self.on_chunk(idx, upstream_input, partial)
+            if verdict is not None and verdict.cancel:
+                return verdict, self.verdicts
+        return None, self.verdicts

@@ -1,0 +1,180 @@
+"""§7.4 — the three-tier "speculation useful" success criterion.
+
+    Tier 1: exact match                  i == i_hat
+    Tier 2: semantic equivalence         equiv(i, i_hat) per domain predicate
+            - text:        normalized-embedding cosine similarity >= 0.95
+            - code:        AST equality modulo formatting
+            - structured:  semantic_json equality
+    Tier 3: downstream-output validation (opt-in, offline)
+
+Default policy is Tier 1 + Tier 2.  The tier-2 embedding must be *cheap*
+because it runs on the critical path at commit time (§9.1 / §14.2): here a
+deterministic hashed character-n-gram embedding (no model call) serves as
+the small-embedder stand-in; deployments plug their own via
+``TierPolicy(embed=...)``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import re
+import zlib
+from typing import Callable, Optional
+
+import numpy as np
+
+__all__ = [
+    "SuccessTier",
+    "TierPolicy",
+    "check_success",
+    "hashed_ngram_embedding",
+    "cosine_similarity",
+    "text_equivalent",
+    "code_equivalent",
+    "json_equivalent",
+]
+
+DEFAULT_SIMILARITY_THRESHOLD = 0.95
+_EMBED_DIM = 256
+
+
+def _normalize_text(s: str) -> str:
+    return re.sub(r"\s+", " ", s.strip().lower())
+
+
+def hashed_ngram_embedding(text: str, dim: int = _EMBED_DIM, n: int = 3) -> np.ndarray:
+    """Deterministic, model-free text embedding: hashed character n-grams,
+    L2-normalized.  O(len(text)) — cheap enough for the commit-time critical
+    path (§14.2 'recommend small tier-2 models')."""
+    s = _normalize_text(text)
+    vec = np.zeros(dim, dtype=np.float64)
+    if not s:
+        return vec
+    padded = f"^{s}$"
+    for i in range(max(1, len(padded) - n + 1)):
+        gram = padded[i : i + n].encode("utf-8")
+        h = zlib.crc32(gram)  # stable across processes (unlike builtin hash)
+        sign = 1.0 if (h >> 16) & 1 else -1.0  # signed hashing kernel
+        vec[h % dim] += sign
+    norm = np.linalg.norm(vec)
+    return vec / norm if norm > 0 else vec
+
+
+def cosine_similarity(a: np.ndarray, b: np.ndarray) -> float:
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    if na == 0 or nb == 0:
+        return 1.0 if na == nb else 0.0
+    return float(np.dot(a, b) / (na * nb))
+
+
+def text_equivalent(
+    i: str,
+    i_hat: str,
+    threshold: float = DEFAULT_SIMILARITY_THRESHOLD,
+    embed: Callable[[str], np.ndarray] = hashed_ngram_embedding,
+) -> bool:
+    """Tier-2 text predicate: normalized-embedding cosine >= threshold."""
+    if _normalize_text(i) == _normalize_text(i_hat):
+        return True
+    return cosine_similarity(embed(i), embed(i_hat)) >= threshold
+
+
+def code_equivalent(i: str, i_hat: str) -> bool:
+    """Tier-2 code predicate: AST equality modulo formatting."""
+    try:
+        return ast.dump(ast.parse(i)) == ast.dump(ast.parse(i_hat))
+    except SyntaxError:
+        return False
+
+
+def _canonical_json(obj: object) -> object:
+    if isinstance(obj, dict):
+        return {k: _canonical_json(v) for k, v in sorted(obj.items())}
+    if isinstance(obj, (list, tuple)):
+        return [_canonical_json(v) for v in obj]
+    if isinstance(obj, float) and obj.is_integer():
+        return int(obj)
+    return obj
+
+
+def json_equivalent(i: object, i_hat: object) -> bool:
+    """Tier-2 structured predicate: semantic_json equality (key order,
+    int/float coercion, tuple/list coercion are immaterial)."""
+    try:
+        a = _canonical_json(i if not isinstance(i, str) else json.loads(i))
+        b = _canonical_json(i_hat if not isinstance(i_hat, str) else json.loads(i_hat))
+    except (json.JSONDecodeError, TypeError):
+        return False
+    return a == b
+
+
+class SuccessTier:
+    NONE = 0
+    TIER1_EXACT = 1
+    TIER2_SEMANTIC = 2
+    TIER3_DOWNSTREAM = 3
+
+
+@dataclasses.dataclass
+class TierPolicy:
+    """Per-dependency success policy.  Default: Tier 1 + Tier 2 (§7.4).
+
+    ``domain`` selects the tier-2 predicate; ``tier3`` is opt-in because it
+    requires running the real downstream and comparing post-hoc (fine
+    offline, defeats latency online).
+    """
+
+    domain: str = "text"  # "text" | "code" | "json" | "custom"
+    similarity_threshold: float = DEFAULT_SIMILARITY_THRESHOLD
+    embed: Callable[[str], np.ndarray] = hashed_ngram_embedding
+    custom_equiv: Optional[Callable[[object, object], bool]] = None
+    tier3_validator: Optional[Callable[[object, object], bool]] = None
+    enable_tier2: bool = True
+    enable_tier3: bool = False
+
+    def tier2(self, i: object, i_hat: object) -> bool:
+        if self.custom_equiv is not None:
+            return bool(self.custom_equiv(i, i_hat))
+        if self.domain == "code":
+            return code_equivalent(str(i), str(i_hat))
+        if self.domain == "json":
+            return json_equivalent(i, i_hat)
+        return text_equivalent(
+            str(i), str(i_hat), self.similarity_threshold, self.embed
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class SuccessResult:
+    success: bool
+    tier: int                      # SuccessTier.* of the first tier that passed
+    tier1_match: bool
+    tier2_match: Optional[bool]    # None when tier-2 disabled or short-circuited
+    tier3_accept: Optional[bool]   # None unless tier-3 opted in
+
+
+def check_success(
+    i: object,
+    i_hat: object,
+    policy: TierPolicy | None = None,
+    *,
+    downstream_output_from_i_hat: object = None,
+) -> SuccessResult:
+    """Label one speculation trial per §7.4.  ``success`` feeds the D5
+    posterior as one Bernoulli observation."""
+    policy = policy or TierPolicy()
+    tier1 = i == i_hat
+    if tier1:
+        return SuccessResult(True, SuccessTier.TIER1_EXACT, True, None, None)
+    tier2: Optional[bool] = None
+    if policy.enable_tier2:
+        tier2 = policy.tier2(i, i_hat)
+        if tier2:
+            return SuccessResult(True, SuccessTier.TIER2_SEMANTIC, False, True, None)
+    tier3: Optional[bool] = None
+    if policy.enable_tier3 and policy.tier3_validator is not None:
+        tier3 = bool(policy.tier3_validator(i, downstream_output_from_i_hat))
+        if tier3:
+            return SuccessResult(True, SuccessTier.TIER3_DOWNSTREAM, False, tier2, True)
+    return SuccessResult(False, SuccessTier.NONE, False, tier2, tier3)

@@ -1,0 +1,153 @@
+"""D5 structural priors — the dependency-type taxonomy (paper §7.2).
+
+Each DAG edge (u, v) carries a *dependency type* describing the structural
+relationship between u's output and v's usability of a predicted input.
+The type selects the Beta prior mean for the success probability P.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import Counter
+from typing import Iterable, Sequence
+
+__all__ = [
+    "DependencyType",
+    "structural_prior",
+    "prior_params",
+    "auto_assign",
+    "effective_k",
+    "DEFAULT_N0",
+]
+
+# Prior strength n0 = alpha0 + beta0.  Appendix A.2: the smallest integer
+# that retains the structural prior as a tie-breaker without overwhelming
+# early observations.
+DEFAULT_N0: float = 2.0
+
+
+class DependencyType(str, enum.Enum):
+    ALWAYS_PRODUCES_OUTPUT = "always_produces_output"
+    LIST_OUTPUT_VARIABLE_LENGTH = "list_output_variable_length"
+    CONDITIONAL_OUTPUT = "conditional_output"
+    ROUTER_K_WAY = "router_k_way"
+    RARE_EVENT_TRIGGER = "rare_event_trigger"
+
+
+# §7.2 prior means.  router_k_way is derived (1/k); rare_event_trigger is a
+# narrow range [0.1, 0.2] pinned per deployment (we default to its midpoint).
+_FIXED_PRIORS: dict[DependencyType, float] = {
+    DependencyType.ALWAYS_PRODUCES_OUTPUT: 0.9,
+    DependencyType.LIST_OUTPUT_VARIABLE_LENGTH: 0.7,
+    DependencyType.CONDITIONAL_OUTPUT: 0.5,
+}
+RARE_EVENT_RANGE: tuple[float, float] = (0.1, 0.2)
+
+
+def structural_prior(
+    dep_type: DependencyType,
+    *,
+    k: int | None = None,
+    rare_event_p: float | None = None,
+) -> float:
+    """Prior mean p_structural for a dependency type (paper §7.2)."""
+    if dep_type == DependencyType.ROUTER_K_WAY:
+        if k is None or k < 1:
+            raise ValueError("router_k_way requires branching factor k >= 1")
+        return 1.0 / k
+    if dep_type == DependencyType.RARE_EVENT_TRIGGER:
+        lo, hi = RARE_EVENT_RANGE
+        if rare_event_p is None:
+            return (lo + hi) / 2.0
+        if not (lo <= rare_event_p <= hi):
+            raise ValueError(
+                f"rare_event_trigger prior must be pinned within {RARE_EVENT_RANGE}"
+            )
+        return rare_event_p
+    return _FIXED_PRIORS[dep_type]
+
+
+def prior_params(
+    dep_type: DependencyType,
+    *,
+    k: int | None = None,
+    rare_event_p: float | None = None,
+    n0: float = DEFAULT_N0,
+) -> tuple[float, float]:
+    """(alpha0, beta0) with alpha0+beta0 = n0 and mean = p_structural.
+
+    Appendix A.3 verification table: always_produces_output -> (1.8, 0.2),
+    list_output_variable_length -> (1.4, 0.6), conditional_output -> (1, 1),
+    router_k_way(k=3) -> (0.667, 1.333).
+    """
+    p = structural_prior(dep_type, k=k, rare_event_p=rare_event_p)
+    return p * n0, (1.0 - p) * n0
+
+
+@dataclasses.dataclass(frozen=True)
+class EffectiveK:
+    """§7.6 effective branching factor under skew."""
+
+    k_raw: int
+    p_mode: float
+    mode: object
+
+    @property
+    def k_eff(self) -> float:
+        return 1.0 / self.p_mode if self.p_mode > 0 else float("inf")
+
+
+def effective_k(outputs: Sequence[object]) -> EffectiveK:
+    """Fit the empirical upstream-output distribution; k_eff = 1/p_mode (§7.6,
+    §12.1 'effective branching factor')."""
+    if not outputs:
+        raise ValueError("need at least one observed output")
+    counts = Counter(_hashable(o) for o in outputs)
+    mode, n_mode = counts.most_common(1)[0]
+    return EffectiveK(k_raw=len(counts), p_mode=n_mode / len(outputs), mode=mode)
+
+
+def _hashable(o: object) -> object:
+    if isinstance(o, dict):
+        return tuple(sorted((k, _hashable(v)) for k, v in o.items()))
+    if isinstance(o, (list, tuple)):
+        return tuple(_hashable(x) for x in o)
+    if isinstance(o, set):
+        return frozenset(_hashable(x) for x in o)
+    return o
+
+
+def auto_assign(
+    outputs: Sequence[object],
+    *,
+    emits_list: bool | None = None,
+    flat_k_max: int = 5,
+) -> DependencyType:
+    """§12.1 dependency-type auto-assignment rule:
+
+      p_mode >= 0.8                     -> always_produces_output
+      upstream emits a list             -> list_output_variable_length
+      k <= 5 with flat distribution     -> router_k_way
+      p_mode <= 0.2                     -> rare_event_trigger
+      otherwise                         -> conditional_output
+    """
+    ek = effective_k(outputs)
+    if ek.p_mode >= 0.8:
+        return DependencyType.ALWAYS_PRODUCES_OUTPUT
+    if emits_list is None:
+        emits_list = all(isinstance(o, (list, tuple)) for o in outputs)
+    if emits_list:
+        return DependencyType.LIST_OUTPUT_VARIABLE_LENGTH
+    if ek.k_raw <= flat_k_max and _is_flat(outputs, ek.k_raw):
+        return DependencyType.ROUTER_K_WAY
+    if ek.p_mode <= 0.2:
+        return DependencyType.RARE_EVENT_TRIGGER
+    return DependencyType.CONDITIONAL_OUTPUT
+
+
+def _is_flat(outputs: Iterable[object], k: int, tol: float = 0.5) -> bool:
+    """Distribution counts within (1 +/- tol) of uniform."""
+    counts = Counter(_hashable(o) for o in outputs)
+    n = sum(counts.values())
+    uniform = n / k
+    return all(abs(c - uniform) <= tol * uniform for c in counts.values())

@@ -1,0 +1,234 @@
+"""Appendix C — the per-decision telemetry schema.
+
+Every calibration/evaluation stage of §12 consumes the same per-decision
+row; without it, none of the stages run.  §C.2 requires that *every*
+calibration signal be derivable from rows alone — the derivations live
+here and are exercised by tests.
+
+Field count note: the Appendix C listing has 32 named fields;
+``committed_speculative`` is referenced by the §C.2 derivations (tier-2
+false-accept rate, waste-per-failure) and counted by D.4's "33 fields", so
+it is included explicitly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import uuid
+from collections import defaultdict
+from typing import Literal, Optional
+
+from .decision import implied_lambda
+
+__all__ = ["SpeculationDecision", "TelemetryLog", "new_decision_id"]
+
+
+def new_decision_id() -> str:
+    return str(uuid.uuid4())
+
+
+@dataclasses.dataclass
+class SpeculationDecision:
+    """One per-decision row (Appendix C.1), emitted at decision time and
+    filled in when the upstream completes."""
+
+    # identity
+    decision_id: str                       # UUID, unique per candidate edge event
+    trace_id: str                          # workflow execution id
+    edge: tuple[str, str]                  # (upstream agent, downstream agent)
+    dep_type: Literal[
+        "always_produces_output",
+        "list_output_variable_length",
+        "conditional_output",
+        "router_k_way",
+        "rare_event_trigger",
+    ]
+    tenant: str                            # per-tenant posteriors require this key
+    model_version: tuple[str, str]         # (agent, version) for drift re-tag
+
+    # decision inputs (at evaluation time)
+    alpha: float                           # in [0, 1]
+    lambda_usd_per_s: float
+    P_mean: float                          # Beta posterior mean
+    P_lower_bound: Optional[float]         # gamma-credible lower bound, if gating
+    C_spec_est_usd: float
+    L_est_s: float                         # estimated latency savings on success
+    input_tokens_est: int
+    output_tokens_est: int
+    input_price: float                     # USD/token
+    output_price: float                    # USD/token
+
+    # decision outputs
+    EV_usd: float
+    threshold_usd: float
+    decision: Literal["SPECULATE", "WAIT"]
+    phase: Literal["plan", "runtime"]      # §8 two-phase model
+    overrode: Literal["none", "upgrade", "downgrade"]
+    i_hat_source: Literal["modal", "regex", "historical", "stream_k", "auxiliary_model"]
+
+    # guardrails / audit (set at decision time)
+    uncertain_cost_flag: bool              # set by §12.4 EMA monitor
+    enabled: bool                          # §12.5 kill-switch state at decision time
+    budget_remaining_usd: Optional[float]  # for cost SLO triggers
+
+    # realized outcomes (filled after upstream completes; default None)
+    i_actual: Optional[object] = None      # full upstream output for replay
+    tier1_match: Optional[bool] = None
+    tier2_match: Optional[bool] = None
+    tier3_accept: Optional[bool] = None    # filled offline, sampled (§12.4)
+    C_spec_actual_usd: Optional[float] = None   # §9.3 fractional waste
+    tokens_generated_before_cancel: Optional[int] = None
+    latency_actual_s: Optional[float] = None
+    committed_speculative: Optional[bool] = None  # §C.2 derivations key off this
+
+    # --------------------------------------------------------------- helpers
+    @property
+    def success(self) -> Optional[bool]:
+        """tier1 v tier2 — the Bernoulli label for the D5 posterior (§C.2)."""
+        if self.tier1_match is None and self.tier2_match is None:
+            return None
+        return bool(self.tier1_match) or bool(self.tier2_match)
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        d["edge"] = list(self.edge)
+        d["model_version"] = list(self.model_version)
+        if not _json_safe(d.get("i_actual")):
+            d["i_actual"] = repr(d["i_actual"])
+        return json.dumps(d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SpeculationDecision":
+        d = json.loads(s)
+        d["edge"] = tuple(d["edge"])
+        d["model_version"] = tuple(d["model_version"])
+        return cls(**d)
+
+
+def _json_safe(o: object) -> bool:
+    try:
+        json.dumps(o)
+        return True
+    except (TypeError, ValueError):
+        return False
+
+
+class TelemetryLog:
+    """An append-only in-memory/file-backed log of SpeculationDecision rows
+    plus the §C.2 signal derivations.  Rows are < 1 KB serialized (§C.3)."""
+
+    def __init__(self) -> None:
+        self.rows: list[SpeculationDecision] = []
+
+    def emit(self, row: SpeculationDecision) -> SpeculationDecision:
+        self.rows.append(row)
+        return row
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+    def __iter__(self):
+        return iter(self.rows)
+
+    # ------------------------------------------------------------ persistence
+    def save_jsonl(self, path: str) -> int:
+        with open(path, "w") as fh:
+            for r in self.rows:
+                fh.write(r.to_json() + "\n")
+        return len(self.rows)
+
+    @classmethod
+    def load_jsonl(cls, path: str) -> "TelemetryLog":
+        log = cls()
+        with open(path) as fh:
+            for line in fh:
+                if line.strip():
+                    log.rows.append(SpeculationDecision.from_json(line))
+        return log
+
+    # ------------------------------------------------- §C.2 signal derivations
+    def posterior_counts(self) -> dict[tuple[str, str], tuple[int, int]]:
+        """(s, f) per edge: (s,f) += (tier1 v tier2, not(tier1 v tier2))."""
+        out: dict[tuple[str, str], list[int]] = defaultdict(lambda: [0, 0])
+        for r in self.rows:
+            ok = r.success
+            if ok is None:
+                continue
+            out[r.edge][0 if ok else 1] += 1
+        return {k: (v[0], v[1]) for k, v in out.items()}
+
+    def effective_k(self) -> dict[tuple[tuple[str, str], str], float]:
+        """k_eff per (edge, tenant) from the empirical i_actual distribution."""
+        from .taxonomy import effective_k as _ek
+
+        buckets: dict[tuple[tuple[str, str], str], list[object]] = defaultdict(list)
+        for r in self.rows:
+            if r.i_actual is not None:
+                buckets[(r.edge, r.tenant)].append(r.i_actual)
+        return {k: _ek(v).k_eff for k, v in buckets.items()}
+
+    def tier2_false_accept_rate(self) -> Optional[float]:
+        """fraction of committed_speculative ∧ ¬tier3_accept over sampled rows."""
+        sampled = [
+            r for r in self.rows
+            if r.committed_speculative and r.tier3_accept is not None
+        ]
+        if not sampled:
+            return None
+        return sum(1 for r in sampled if not r.tier3_accept) / len(sampled)
+
+    def token_estimate_cov(self) -> Optional[float]:
+        """std(actual/est) over rows with realized token counts (§12.4).
+
+        On full-completion rows tokens_generated_before_cancel equals the
+        actual output count.
+        """
+        import numpy as np
+
+        ratios = [
+            r.tokens_generated_before_cancel / r.output_tokens_est
+            for r in self.rows
+            if r.tokens_generated_before_cancel is not None and r.output_tokens_est > 0
+        ]
+        if len(ratios) < 2:
+            return None
+        return float(np.std(ratios, ddof=1))
+
+    def implied_lambdas(self) -> list[float]:
+        """§12.3 implied-λ per SPECULATE row at its observed alpha*."""
+        out = []
+        for r in self.rows:
+            if r.decision != "SPECULATE" or r.P_mean <= 0 or r.L_est_s <= 0:
+                continue
+            out.append(implied_lambda(r.P_mean, r.C_spec_est_usd, r.alpha, r.L_est_s))
+        return out
+
+    def waste_per_failed_speculation(self) -> list[float]:
+        """C_spec_actual_usd when not committed (§9.3 realized waste)."""
+        return [
+            r.C_spec_actual_usd
+            for r in self.rows
+            if r.committed_speculative is False and r.C_spec_actual_usd is not None
+        ]
+
+    def cost_slo_burn(self) -> float:
+        """Σ C_spec_actual_usd over the log window."""
+        return sum(r.C_spec_actual_usd or 0.0 for r in self.rows)
+
+    def posterior_mean_series(self, edge: tuple[str, str]) -> list[float]:
+        """per-edge P_mean over time, for §12.5 drift triggers."""
+        return [r.P_mean for r in self.rows if r.edge == edge]
+
+    def calibration_buckets(self, width: float = 0.1) -> dict[float, tuple[float, int]]:
+        """§12.4 posterior calibration curve: bucket by predicted P, return
+        {bucket_midpoint: (empirical success rate, n)}."""
+        buckets: dict[float, list[bool]] = defaultdict(list)
+        for r in self.rows:
+            ok = r.success
+            if ok is None:
+                continue
+            mid = (int(r.P_mean / width + 1e-9) + 0.5) * width  # fp-robust floor
+            buckets[round(min(mid, 1.0 - width / 2), 6)].append(ok)
+        return {
+            mid: (sum(v) / len(v), len(v)) for mid, v in sorted(buckets.items())
+        }

@@ -1,0 +1,189 @@
+"""The workflow model: a static DAG of LLM operations (paper §2.1).
+
+W = (V, E): each vertex is an LLM call or tool invocation; each edge
+(u, v) means v consumes u's output.  The topology is fixed before
+execution (runtime-determined topologies are out of scope, §1.4 — mutation
+after freeze raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Iterable, Optional
+
+from .admissibility import AdmissibilityTag
+from .success import TierPolicy
+from .taxonomy import DependencyType
+
+__all__ = ["Operation", "Edge", "Workflow", "WorkflowError"]
+
+
+class WorkflowError(ValueError):
+    pass
+
+
+@dataclasses.dataclass
+class Operation:
+    """One vertex: an LLM call or tool invocation.
+
+    ``run`` executes the op given its (joined) upstream inputs and returns
+    the output; in simulation it is a deterministic function, in production
+    it is a serving-engine call (repro.serving.spec_bridge.EngineOp).
+    """
+
+    name: str
+    run: Callable[..., Any] = None  # type: ignore[assignment]
+    provider: str = "paper"
+    model: str = "frontier-default"
+    # estimates consumed by the decision rule / planner
+    input_tokens_est: int = 500
+    output_tokens_est: int = 1000
+    latency_est_s: float = 1.0
+    # admissibility (§3.3): default side-effect-free (pure generation /
+    # read-only tool).  Ops that fail all three routes are non-speculable.
+    admissibility: AdmissibilityTag = AdmissibilityTag.SIDE_EFFECT_FREE
+    # whether the op streams output tokens (enables §9 machinery)
+    streams: bool = True
+    metadata: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.run is None:
+            # default: identity-ish echo (useful for simulation-only DAGs)
+            self.run = lambda *inputs: inputs[0] if len(inputs) == 1 else tuple(inputs)
+
+
+@dataclasses.dataclass
+class Edge:
+    """One dependency (u, v) with its speculation-relevant annotations."""
+
+    upstream: str
+    downstream: str
+    dep_type: DependencyType = DependencyType.CONDITIONAL_OUTPUT
+    k: Optional[int] = None                 # for router_k_way priors
+    rare_event_p: Optional[float] = None    # for rare_event_trigger priors
+    tier_policy: TierPolicy = dataclasses.field(default_factory=TierPolicy)
+    # §12 per-edge enable bit — the method's most consequential operational
+    # knob; set by §12.1 go/no-go, flipped by §12.5 kill-switch.
+    enabled: bool = True
+
+    @property
+    def key(self) -> tuple[str, str]:
+        return (self.upstream, self.downstream)
+
+
+class Workflow:
+    """A static DAG.  Construction API then ``freeze()``; the planner and
+    executor only accept frozen workflows."""
+
+    def __init__(self, name: str = "workflow") -> None:
+        self.name = name
+        self.ops: dict[str, Operation] = {}
+        self.edges: dict[tuple[str, str], Edge] = {}
+        self._frozen = False
+
+    # ------------------------------------------------------------- building
+    def add_op(self, op: Operation) -> Operation:
+        self._check_mutable()
+        if op.name in self.ops:
+            raise WorkflowError(f"duplicate operation {op.name!r}")
+        self.ops[op.name] = op
+        return op
+
+    def add_edge(self, edge: Edge) -> Edge:
+        self._check_mutable()
+        for end in (edge.upstream, edge.downstream):
+            if end not in self.ops:
+                raise WorkflowError(f"edge references unknown op {end!r}")
+        if edge.upstream == edge.downstream:
+            raise WorkflowError("self-loops are not a DAG")
+        if edge.key in self.edges:
+            raise WorkflowError(f"duplicate edge {edge.key}")
+        self.edges[edge.key] = edge
+        return edge
+
+    def chain(self, *ops: Operation, dep_type=DependencyType.CONDITIONAL_OUTPUT) -> None:
+        """Convenience: a linear chain op1 -> op2 -> ... ."""
+        for op in ops:
+            if op.name not in self.ops:
+                self.add_op(op)
+        for u, v in zip(ops, ops[1:]):
+            self.add_edge(Edge(u.name, v.name, dep_type=dep_type))
+
+    def freeze(self) -> "Workflow":
+        """Validate acyclicity and lock the topology (§1.4 static-DAG scope)."""
+        self._topo_order()  # raises on cycles
+        self._frozen = True
+        return self
+
+    def _check_mutable(self) -> None:
+        if self._frozen:
+            raise WorkflowError(
+                "workflow topology is frozen; runtime-determined topologies "
+                "are out of scope (paper §1.4)"
+            )
+
+    # -------------------------------------------------------------- queries
+    @property
+    def frozen(self) -> bool:
+        return self._frozen
+
+    def parents(self, name: str) -> list[str]:
+        return [u for (u, v) in self.edges if v == name]
+
+    def children(self, name: str) -> list[str]:
+        return [v for (u, v) in self.edges if u == name]
+
+    def sources(self) -> list[str]:
+        return [n for n in self.ops if not self.parents(n)]
+
+    def sinks(self) -> list[str]:
+        return [n for n in self.ops if not self.children(n)]
+
+    def _topo_order(self) -> list[str]:
+        indeg = {n: len(self.parents(n)) for n in self.ops}
+        frontier = sorted(n for n, d in indeg.items() if d == 0)
+        order: list[str] = []
+        while frontier:
+            n = frontier.pop(0)
+            order.append(n)
+            for c in sorted(self.children(n)):
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    frontier.append(c)
+        if len(order) != len(self.ops):
+            raise WorkflowError("workflow graph has a cycle")
+        return order
+
+    def topo_order(self) -> list[str]:
+        return self._topo_order()
+
+    def speculation_candidates(self) -> list[Edge]:
+        """Edges eligible for the EV gate: enabled AND admissible (§3.3).
+
+        The admissibility precondition runs *before* the EV rule — a
+        non-speculable edge never reaches the gate.
+        """
+        out = []
+        for edge in self.edges.values():
+            op = self.ops[edge.downstream]
+            if edge.enabled and op.admissibility != AdmissibilityTag.NON_SPECULABLE:
+                out.append(edge)
+        return out
+
+    # ------------------------------------------------------ latency accounting
+    def critical_path_latency(self, overrides: dict[str, float] | None = None) -> float:
+        """Sequential-wave critical path: sum over waves of the max latency in
+        each wave (paper §8.1 Latency(plan) for the maximally-parallel plan)."""
+        overrides = overrides or {}
+        lat = lambda n: overrides.get(n, self.ops[n].latency_est_s)
+        finish: dict[str, float] = {}
+        for n in self._topo_order():
+            start = max((finish[p] for p in self.parents(n)), default=0.0)
+            finish[n] = start + lat(n)
+        return max(finish.values(), default=0.0)
+
+    def sequential_latency(self, overrides: dict[str, float] | None = None) -> float:
+        overrides = overrides or {}
+        return sum(overrides.get(n, op.latency_est_s) for n, op in self.ops.items())
+
+    def validate(self) -> None:
+        self._topo_order()

@@ -1,0 +1,14 @@
+"""repro.kernels — Pallas TPU kernels (validated under interpret=True on
+CPU against the pure-jnp oracles in ref.py)."""
+from .ops import (
+    decode_attention_op,
+    flash_attention,
+    on_tpu,
+    rglru_scan_op,
+    ssd_scan_op,
+)
+
+__all__ = [
+    "flash_attention", "decode_attention_op", "rglru_scan_op",
+    "ssd_scan_op", "on_tpu",
+]

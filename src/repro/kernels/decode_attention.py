@@ -1,0 +1,122 @@
+"""Pallas TPU decode attention: one query token against a (ring-buffered)
+KV cache, blocked over the cache dimension.
+
+Grid: (batch, q_heads, kv_blocks) — kv innermost/sequential; online-softmax
+running stats in VMEM scratch.  Masking is positional: the cache carries an
+absolute position per slot (-1 = empty), so ring buffers and sliding
+windows fall out of the same mask.  GQA via index-map head folding.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_kernel_call", "DEFAULT_BLOCK_KV"]
+
+DEFAULT_BLOCK_KV = 512
+_NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref, k_ref, v_ref, pos_ref, cur_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale: float, window: Optional[int], num_kv_blocks: int,
+):
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, _NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0]                    # (1, D) one token, one head
+    k = k_ref[0, 0]                    # (block_kv, D)
+    v = v_ref[0, 0]
+    pos = pos_ref[0]                   # (block_kv,)
+    cur = cur_ref[0]                   # scalar
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale                          # (1, block_kv)
+    mask = (pos >= 0) & (pos <= cur)
+    if window is not None:
+        mask &= (cur - pos) < window
+    s = jnp.where(mask[None, :], s, _NEG_INF)
+
+    m_prev = m_scratch[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, :], jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scratch[...] = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scratch[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scratch[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attention_kernel_call(
+    q: jax.Array,              # (B, H, D)
+    k_cache: jax.Array,        # (B, C, Hkv, D)
+    v_cache: jax.Array,
+    cache_positions: jax.Array,  # (B, C) int32
+    current_pos: jax.Array,      # (B,) int32
+    *,
+    window: Optional[int] = None,
+    block_kv: int = DEFAULT_BLOCK_KV,
+    interpret: bool = True,
+) -> jax.Array:
+    B, H, D = q.shape
+    C = k_cache.shape[1]
+    Hkv = k_cache.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_kv = min(block_kv, C)
+    nk = -(-C // block_kv)
+    if nk * block_kv != C:
+        pad = nk * block_kv - C
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cache_positions = jnp.pad(cache_positions, ((0, 0), (0, pad)),
+                                  constant_values=-1)
+
+    kt = k_cache.transpose(0, 2, 1, 3)   # (B, Hkv, C, D)
+    vt = v_cache.transpose(0, 2, 1, 3)
+    q3 = q[:, :, None, :]                # (B, H, 1, D)
+
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_kv, D), lambda b, h, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1,), lambda b, h, j: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, D), lambda b, h, j: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, 1, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q3, kt, vt, cache_positions, current_pos)
+    return out[:, :, 0, :]

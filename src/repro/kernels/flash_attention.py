@@ -1,0 +1,140 @@
+"""Pallas TPU flash-attention (forward) with explicit BlockSpec VMEM tiling.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the kv dimension is the
+innermost sequential axis; the online-softmax running max / normalizer /
+accumulator live in VMEM scratch that persists across kv iterations.
+GQA is handled in the k/v index maps (head h reads kv head h // G).
+
+TARGET is TPU (MXU-aligned block shapes, f32 accumulation in VMEM);
+in this CPU container the kernel is validated under interpret=True against
+``ref.reference_attention``.  The backward pass is a rematerialized
+reference VJP (custom_vjp) — standard for inference-first deployments;
+a fused bwd kernel is future work recorded in DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_fwd", "DEFAULT_BLOCK_Q", "DEFAULT_BLOCK_K"]
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+_NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, scale: float, block_q: int, block_k: int, seq_len: int,
+    causal: bool, window: Optional[int], num_kv_blocks: int,
+):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, _NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0]                                  # (block_q, d)
+    k = k_ref[0, 0]                                  # (block_k, d)
+    v = v_ref[0, 0]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                        # (block_q, block_k)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_scratch[...]                          # (block_q, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_scratch[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finalize():
+        l = l_scratch[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scratch[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(
+    q: jax.Array,            # (B, S, H, D)
+    k: jax.Array,            # (B, S, Hkv, D)
+    v: jax.Array,            # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+) -> jax.Array:
+    """Forward flash attention.  Returns (B, S, H, D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    nq = -(-S // block_q)
+    nk = -(-S // block_k)
+    Sp_q, Sp_k = nq * block_q, nk * block_k
+    if Sp_q != S:
+        q = jnp.pad(q, ((0, 0), (0, Sp_q - S), (0, 0), (0, 0)))
+    if Sp_k != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp_k - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp_k - S), (0, 0), (0, 0)))
+
+    # layout: (B, H, S, D) blocks of (1, 1, block, D)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _fwd_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        seq_len=S, causal=causal, window=window, num_kv_blocks=nk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp_q, D), q.dtype),
+        scratch_shapes=[
+            # VMEM accumulators persisting across the kv grid dimension
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)[:, :S]

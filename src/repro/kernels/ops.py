@@ -1,0 +1,85 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Backend dispatch: on TPU the kernels compile natively; elsewhere they run
+under interpret=True (Python evaluation of the kernel body — correctness
+validation on CPU).  ``flash_attention`` exposes a custom_vjp whose
+backward is the rematerialized reference (fused bwd kernel is future
+work); the scan kernels are forward-only ops used by serving paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .decode_attention import decode_attention_kernel_call
+from .flash_attention import flash_attention_fwd
+from .rglru_scan import rglru_scan_kernel_call
+from .ssd_scan import ssd_scan_kernel_call
+
+__all__ = [
+    "flash_attention",
+    "decode_attention_op",
+    "rglru_scan_op",
+    "ssd_scan_op",
+    "on_tpu",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None):
+    """Flash attention with Pallas fwd + reference-recompute bwd."""
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=_interpret())
+
+
+def _fa_fwd(q, k, v, causal, window):
+    out = flash_attention_fwd(q, k, v, causal=causal, window=window,
+                              interpret=_interpret())
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, window, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _ref.reference_attention(
+            q_, k_, v_, causal=causal, window=window),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+@jax.jit
+def decode_attention_op(q, k_cache, v_cache, cache_positions, current_pos):
+    """(B,H,D) x cache -> (B,H,D)."""
+    return decode_attention_kernel_call(
+        q, k_cache, v_cache, cache_positions, current_pos,
+        interpret=_interpret(),
+    )
+
+
+@jax.jit
+def rglru_scan_op(a, b, h0=None):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t, all t.  (B,T,C)."""
+    return rglru_scan_kernel_call(a, b, h0, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan_op(x, A, Bm, Cm, chunk: int = 128):
+    """Mamba-2 SSD chunk scan.  Returns y (B,S,H,P)."""
+    return ssd_scan_kernel_call(x, A, Bm, Cm, chunk=chunk,
+                                interpret=_interpret())

@@ -1,0 +1,114 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "reference_attention",
+    "reference_decode_attention",
+    "reference_rglru_scan",
+    "reference_ssd_scan",
+]
+
+
+def reference_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: Optional[int] = None,
+) -> jax.Array:
+    """Naive softmax attention with GQA repeat.  q: (B,S,H,D), k/v (B,S,Hkv,D)."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    if Hkv != H:
+        k = jnp.repeat(k, H // Hkv, axis=2)
+        v = jnp.repeat(v, H // Hkv, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bshd,bthd->bhst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window is not None:
+        mask &= (pos[:, None] - pos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[None, None].any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+
+
+def reference_decode_attention(
+    q: jax.Array,                # (B, H, D) one token per sequence
+    k_cache: jax.Array,          # (B, C, Hkv, D)
+    v_cache: jax.Array,
+    cache_positions: jax.Array,  # (B, C) absolute positions, -1 = empty
+    current_pos: jax.Array,      # (B,)
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    B, H, D = q.shape
+    Hkv = k_cache.shape[2]
+    if Hkv != H:
+        k_cache = jnp.repeat(k_cache, H // Hkv, axis=2)
+        v_cache = jnp.repeat(v_cache, H // Hkv, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhd,bchd->bhc", q, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    mask = (cache_positions >= 0) & (cache_positions <= current_pos[:, None])
+    if window is not None:
+        mask &= (current_pos[:, None] - cache_positions) < window
+    s = jnp.where(mask[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask[:, None, :].any(-1, keepdims=True), p, 0.0)
+    return jnp.einsum("bhc,bchd->bhd", p.astype(v_cache.dtype), v_cache)
+
+
+def reference_rglru_scan(
+    a: jax.Array,   # (B, T, C) decay in (0, 1)
+    b: jax.Array,   # (B, T, C) gated input
+    h0: Optional[jax.Array] = None,
+) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t, returned for every t.  (B, T, C)."""
+    a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+    if h0 is not None:
+        b32 = b32.at[:, 0].add(a32[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a32, b32), axis=1)
+    return h.astype(a.dtype)
+
+
+def reference_ssd_scan(
+    x: jax.Array,    # (B, S, H, P) pre-multiplied by dt
+    A: jax.Array,    # (B, S, H) A*dt (negative)
+    Bm: jax.Array,   # (B, S, N)  (ngroups = 1)
+    Cm: jax.Array,   # (B, S, N)
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Sequential SSD recurrence (the literal definition, O(S) steps):
+
+        h_t = exp(A_t) * h_{t-1} + x_t B_t^T ;  y_t = h_t C_t
+    """
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    h = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+         else h0.astype(jnp.float32))
+
+    def step(h, t):
+        decay = jnp.exp(A[:, t].astype(jnp.float32))             # (B,H)
+        upd = jnp.einsum("bhp,bn->bhpn", x[:, t].astype(jnp.float32),
+                         Bm[:, t].astype(jnp.float32))
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", h, Cm[:, t].astype(jnp.float32))
+        return h, y
+
+    h, ys = jax.lax.scan(step, h, jnp.arange(S))
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                   # (B,S,H,P)
+    return y, h

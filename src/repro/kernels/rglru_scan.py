@@ -1,0 +1,81 @@
+"""Pallas TPU RG-LRU linear-recurrence kernel.
+
+Computes h_t = a_t * h_{t-1} + b_t over time, blocked (batch, channel,
+time): grid = (B/bb, C/bc, T/bt) with time innermost/sequential; the
+carried state h lives in VMEM scratch and persists across time blocks.
+Inside a block the recurrence steps with a fori_loop over VMEM rows —
+the op is memory-bound, so the win is streaming (bb, bt, bc) tiles
+through VMEM once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rglru_scan_kernel_call"]
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, o_ref, h_scratch, *, block_t: int):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        h_scratch[...] = h0_ref[...].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)     # (bb, bt, bc)
+    b = b_ref[...].astype(jnp.float32)
+
+    def step(t, h):
+        h = a[:, t, :] * h + b[:, t, :]
+        o_ref[:, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_t, step, h_scratch[...])
+    h_scratch[...] = h
+
+
+def rglru_scan_kernel_call(
+    a: jax.Array,               # (B, T, C) decay
+    b: jax.Array,               # (B, T, C) gated input
+    h0: jax.Array | None = None,  # (B, C)
+    *,
+    block_b: int = 8,
+    block_t: int = 128,
+    block_c: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns h for every t: (B, T, C)."""
+    B, T, C = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, C), jnp.float32)
+    block_b = min(block_b, B)
+    block_t = min(block_t, T)
+    block_c = min(block_c, C)
+    nb, nt, nc = -(-B // block_b), -(-T // block_t), -(-C // block_c)
+    padded = (nb * block_b != B) or (nt * block_t != T) or (nc * block_c != C)
+    if padded:
+        a = jnp.pad(a, ((0, nb * block_b - B), (0, nt * block_t - T),
+                        (0, nc * block_c - C)), constant_values=1.0)
+        b = jnp.pad(b, ((0, nb * block_b - B), (0, nt * block_t - T),
+                        (0, nc * block_c - C)))
+        h0 = jnp.pad(h0, ((0, nb * block_b - B), (0, nc * block_c - C)))
+
+    kernel = functools.partial(_rglru_kernel, block_t=block_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nb, nc, nt),   # time innermost: h carries across t blocks
+        in_specs=[
+            pl.BlockSpec((block_b, block_t, block_c), lambda i, c, t: (i, t, c)),
+            pl.BlockSpec((block_b, block_t, block_c), lambda i, c, t: (i, t, c)),
+            pl.BlockSpec((block_b, block_c), lambda i, c, t: (i, c)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_t, block_c), lambda i, c, t: (i, t, c)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return out[:B, :T, :C]

@@ -1,0 +1,709 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape)
+# combination on the production meshes, and extract the roofline terms.
+#
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Do not import this module from library code.
+_DOC = """Multi-pod dry-run launcher.
+
+Per cell this produces a JSON artifact with:
+  - memory_analysis (per-device argument/output/temp/code bytes) and the
+    compile proof, from the FULL config (scan-over-layers, compact HLO);
+  - exact FLOPs / bytes / collective-bytes per device.  XLA's cost
+    analysis counts a while-loop body ONCE regardless of trip count, so
+    scanned models under-report by ~L x.  We therefore lower UNROLLED
+    variants at 1-2 layers per scanned group (with every inner chunk loop
+    statically unrolled: attention, MoE blocks, chunked CE) — those counts
+    are exact — and extrapolate linearly per group:
+        metric(L) = intercept + sum_g L_g * body_g
+  - the three roofline terms vs TPU v5e constants and the
+    MODEL_FLOPS = 6*N(_active)*D ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-34b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all          # every cell, both meshes
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import REGISTRY, get_config, shape_for
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import build_model
+from ..models.transformer import layer_plan
+from ..sharding import batch_spec, named_sharding_tree, param_rules
+from ..sharding.cache_specs import cache_pspecs
+from ..sharding.optstate import opt_state_pspecs
+from ..sharding.rules import shard_if_divisible
+from ..training.optimizer import OptimizerConfig, make_optimizer
+from .mesh import V5E, make_production_mesh
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Knobs:
+    """Hillclimb levers, exposed on the CLI."""
+
+    moe_impl: str = "einsum"
+    triangular: bool = False
+    fsdp: bool = True
+    remat: Optional[bool] = None   # None = per-config default
+    ce_chunk: int = 512
+
+    def apply(self, cfg: ModelConfig) -> ModelConfig:
+        if self.remat is not None:
+            cfg = dataclasses.replace(cfg, remat=self.remat)
+        return cfg
+
+
+# --------------------------------------------------------------------------
+# input specs
+# --------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this shape —
+    weak-type-correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        specs: dict[str, Any] = {}
+        if cfg.num_codebooks > 1:
+            specs["token"] = tok((B, 1, cfg.num_codebooks), jnp.int32)
+        else:
+            specs["token"] = tok((B, 1), jnp.int32)
+        specs["position"] = tok((B,), jnp.int32)
+        return specs
+    if cfg.num_codebooks > 1:
+        specs = {"tokens": tok((B, S, cfg.num_codebooks), jnp.int32)}
+    else:
+        specs = {"tokens": tok((B, S), jnp.int32)}
+    if cfg.vision_tokens:
+        specs["vision_embeds"] = tok((B, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+        specs["positions"] = tok((3, B, S), jnp.int32)
+    return specs
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh) -> dict[str, Any]:
+    B = shape.global_batch
+    out: dict[str, Any] = {}
+    for name, spec in input_specs(cfg, shape).items():
+        nd = len(spec.shape)
+        if name == "positions":                       # (3, B, S)
+            bs = batch_spec(mesh, B, extra_dims=1)
+            out[name] = NamedSharding(mesh, P(None, *tuple(bs)))
+        elif name == "position":                      # (B,)
+            out[name] = NamedSharding(mesh, batch_spec(mesh, B, extra_dims=0))
+        else:
+            out[name] = NamedSharding(mesh, batch_spec(mesh, B, extra_dims=nd - 1))
+    return out
+
+
+def optimizer_for(cfg: ModelConfig) -> OptimizerConfig:
+    """MoE giants use Adafactor (see repro.training.optimizer docstring)."""
+    kind = "adafactor" if cfg.moe is not None else "adamw"
+    return OptimizerConfig(kind=kind)
+
+
+def _act_specs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """(activation spec, logits spec): batch on data axes, vocab on model."""
+    B = shape.global_batch
+    bspec = batch_spec(mesh, B, extra_dims=0)
+    bdims = tuple(bspec)[0]
+    act_spec = P(bdims, None, None)
+    head_spec = P(bdims, None, "model", None)
+    extra = [cfg.num_codebooks] if cfg.num_codebooks > 1 else []
+    nlog = 4 if cfg.num_codebooks > 1 else 3
+    logits_spec = shard_if_divisible(
+        (B, 1, *extra, cfg.vocab_size),
+        P(bdims, *([None] * (nlog - 2)), "model"), mesh,
+    )
+    return act_spec, head_spec, logits_spec
+
+
+# --------------------------------------------------------------------------
+# step builders
+# --------------------------------------------------------------------------
+def build_train_step(cfg, knobs: Knobs, act_spec=None, head_spec=None,
+                     logits_spec=None, static: bool = False):
+    model = build_model(cfg)
+    opt = make_optimizer(optimizer_for(cfg))
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(
+                p, batch, moe_impl=knobs.moe_impl, triangular=knobs.triangular,
+                static=static, act_spec=act_spec, head_spec=head_spec,
+                logits_spec=logits_spec,
+                ce_chunk=knobs.ce_chunk, embed_chunk=knobs.ce_chunk,
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        return params, opt_state, {**metrics, **opt_metrics}
+
+    return model, opt, train_step
+
+
+def build_prefill_step(cfg, shape, knobs: Knobs, act_spec=None, head_spec=None,
+                       logits_spec=None, static: bool = False):
+    model = build_model(cfg)
+    B, S = shape.global_batch, shape.seq_len
+
+    def prefill_step(params, batch):
+        cache = model.init_cache(B, S, dtype=jnp.bfloat16)
+        logits, cache = model.prefill(
+            params, batch, cache, moe_impl=knobs.moe_impl,
+            triangular=knobs.triangular, static=static, act_spec=act_spec,
+            head_spec=head_spec, logits_spec=logits_spec,
+            embed_chunk=knobs.ce_chunk,
+        )
+        return jnp.argmax(logits, axis=-1), cache
+
+    return model, prefill_step
+
+
+def build_serve_step(cfg, knobs: Knobs, act_spec=None, logits_spec=None,
+                     static: bool = False):
+    model = build_model(cfg)
+
+    def serve_step(params, cache, token, position):
+        logits, cache = model.decode_step(
+            params, token, cache, position, moe_impl=knobs.moe_impl,
+            static=static, act_spec=act_spec, logits_spec=logits_spec,
+        )
+        return jnp.argmax(logits, axis=-1), cache
+
+    return model, serve_step
+
+
+# --------------------------------------------------------------------------
+# HLO collective parsing
+# --------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Per-collective byte totals from post-SPMD (per-device) HLO.
+    bytes per op = max(result, operand) bytes; async -done halves skipped."""
+    per_kind: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.endswith("-done"):
+            continue  # async pairs: count the -start only
+        kind = next((k for k in _COLLECTIVES if op == k or op.startswith(k + "-")), None)
+        if kind is None:
+            continue
+        result_bytes = _shape_bytes(m.group(1))
+        operand_bytes = _shape_bytes(s[m.end():])
+        per_kind[kind] += max(result_bytes, operand_bytes)
+        counts[kind] += 1
+    return {"per_kind_bytes": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+# --------------------------------------------------------------------------
+# model-FLOPs accounting
+# --------------------------------------------------------------------------
+def active_param_count(cfg: ModelConfig) -> int:
+    model = build_model(cfg)
+    total = model.param_count()
+    if cfg.moe is None:
+        return total
+    m = cfg.moe
+    expert_params_each = 3 * cfg.d_model * m.d_ff_expert
+    moe_layers = cfg.num_layers - m.first_dense_layers
+    routed_total = m.num_experts * expert_params_each * moe_layers
+    routed_active = m.top_k * expert_params_each * moe_layers
+    return total - routed_total + routed_active
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch
+
+
+def analytic_hbm_bytes(cfg: ModelConfig, shape: ShapeConfig, n_chips: int) -> float:
+    """Per-device HBM traffic estimate for a TPU-grade fusion pipeline.
+
+    The CPU XLA pipeline fuses far less than the TPU pipeline, so the
+    compiled module's 'bytes accessed' overcounts HBM traffic by an order
+    of magnitude.  This analytic model is the classic accounting: weights
+    are read once per pass (+optimizer state read/write for training),
+    activations cross HBM once per layer boundary, decode reads the KV
+    cache once per step.  Reported alongside the HLO number.
+    """
+    model = build_model(cfg)
+    p_bytes = model.param_count() * 2.0                      # bf16
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    L = cfg.num_layers
+    act = B * S * d * 2.0                                    # one (B,S,d) bf16
+    if shape.kind == "train":
+        # fwd read + bwd read + remat re-read; grads write+read; opt state r/w
+        opt_mult = 8.0 if cfg.moe is None else 2.0           # adamw f32 m,v vs adafactor
+        weights = p_bytes * (3.0 + 2.0) + p_bytes * opt_mult
+        acts = act * L * (2.0 + 2.0 + 2.0)                   # fwd w, bwd r, remat r/w
+        logits = B * S * cfg.vocab_size * 4.0 * 2.0 / 8.0    # chunked CE r+w, f32 (amortized)
+        total = weights + acts + logits
+    elif shape.kind == "prefill":
+        weights = p_bytes
+        acts = act * L * 2.0
+        cache = _cache_bytes(cfg, B, S)
+        total = weights + acts + cache
+    else:
+        weights = p_bytes                                    # the decode classic
+        cache = _cache_bytes(cfg, B, S) * 2.0                # read + write-back
+        acts = act * L * 2.0 / max(1, S)                     # single token
+        total = weights + cache + acts
+    return total / n_chips
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int) -> float:
+    if cfg.ssm is not None:
+        s = cfg.ssm
+        return B * s.num_heads(cfg.d_model) * s.head_dim * s.d_state * 4.0 * cfg.num_layers
+    if cfg.attn_type == "mla":
+        m = cfg.mla
+        return B * S * (m.kv_lora_rank + m.qk_rope_head_dim) * 2.0 * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.layer_pattern
+        n_attn = sum(1 for i in range(cfg.num_layers) if pat[i % len(pat)] == "attn")
+        n_rec = cfg.num_layers - n_attn
+        window = min(S, cfg.local_window or S)
+        attn = B * window * 2 * cfg.kv_dim * 2.0 * n_attn
+        rec = B * (cfg.lru_width or cfg.d_model) * 4.0 * n_rec
+        return attn + rec
+    cap = min(S, cfg.local_window) if cfg.local_window else S
+    return B * cap * 2 * cfg.kv_dim * 2.0 * cfg.num_layers
+
+
+# --------------------------------------------------------------------------
+# lower + compile one configuration
+# --------------------------------------------------------------------------
+def _compile_cell(cfg: ModelConfig, shape: ShapeConfig, mesh, knobs: Knobs,
+                  static: bool = False):
+    model = build_model(cfg)
+    rules = param_rules(cfg, fsdp=knobs.fsdp)
+    abstract = model.abstract()
+    pspecs = model.pspecs(rules)
+    param_sh = named_sharding_tree(abstract, pspecs, mesh)
+    act_spec, head_spec, logits_spec = _act_specs(cfg, shape, mesh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            model, opt, step = build_train_step(cfg, knobs, act_spec, head_spec, logits_spec, static)
+            opt_abstract = jax.eval_shape(opt.init, abstract)
+            opt_pspecs = opt_state_pspecs(opt_abstract, pspecs, opt.config.kind)
+            opt_pspecs = jax.tree.map(
+                lambda a, sp: shard_if_divisible(a.shape, sp, mesh),
+                opt_abstract, opt_pspecs,
+            )
+            opt_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), opt_pspecs)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, input_shardings(cfg, shape, mesh)),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            args = (abstract, opt_abstract, input_specs(cfg, shape))
+        elif shape.kind == "prefill":
+            model, step = build_prefill_step(cfg, shape, knobs, act_spec, head_spec, logits_spec, static)
+            cache_abstract = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         dtype=jnp.bfloat16)
+            )
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                cache_pspecs(cache_abstract, mesh),
+            )
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, input_shardings(cfg, shape, mesh)),
+                out_shardings=(None, cache_sh),
+            )
+            args = (abstract, input_specs(cfg, shape))
+        else:
+            model, step = build_serve_step(cfg, knobs, act_spec, logits_spec, static)
+            cache_abstract = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                         dtype=jnp.bfloat16)
+            )
+            cache_sh = jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                cache_pspecs(cache_abstract, mesh),
+            )
+            specs = input_specs(cfg, shape)
+            in_sh = input_shardings(cfg, shape, mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, in_sh["token"], in_sh["position"]),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(1,),
+            )
+            args = (abstract, cache_abstract, specs["token"], specs["position"])
+
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    return compiled, {"lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)}
+
+
+def _metrics_of(compiled) -> dict[str, Any]:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": float(coll["total_bytes"]),
+        "_coll_detail": coll,
+    }
+
+
+# --------------------------------------------------------------------------
+# layer-count variants for exact extrapolation
+# --------------------------------------------------------------------------
+def _variants(cfg: ModelConfig):
+    """Return (groups=[(name, full_count)], [(variant_cfg, {group: n})]).
+
+    Variant configs are UNROLLED (scan_layers=False) so cost analysis is
+    exact; inner chunk loops are static via the step builders.
+    """
+    base = dataclasses.replace(cfg, scan_layers=False)
+    plan = layer_plan(cfg)
+    groups = [(g, c) for (g, k, c) in plan
+              if k in ("attn_ffn", "attn_moe", "ssd", "pattern")]
+
+    def with_counts(**counts) -> ModelConfig:
+        if cfg.family == "hybrid":
+            b = counts["blocks"]
+            pat = len(cfg.layer_pattern)
+            t = cfg.num_layers % pat
+            return dataclasses.replace(base, num_layers=b * pat + t)
+        if cfg.moe is not None and cfg.moe.first_dense_layers:
+            d = counts["dense_layers"]
+            m = counts["moe_layers"]
+            return dataclasses.replace(
+                base, num_layers=d + m,
+                moe=dataclasses.replace(cfg.moe, first_dense_layers=d),
+            )
+        return dataclasses.replace(base, num_layers=counts["layers"])
+
+    if len(groups) == 1:
+        g = groups[0][0]
+        return groups, [
+            (with_counts(**{g: 1}), {g: 1}),
+            (with_counts(**{g: 2}), {g: 2}),
+        ]
+    return groups, [
+        (with_counts(dense_layers=1, moe_layers=1), {"dense_layers": 1, "moe_layers": 1}),
+        (with_counts(dense_layers=2, moe_layers=1), {"dense_layers": 2, "moe_layers": 1}),
+        (with_counts(dense_layers=1, moe_layers=2), {"dense_layers": 1, "moe_layers": 2}),
+    ]
+
+
+def _solve_layer_model(groups, measured, key):
+    """Solve metric = intercept + sum_g n_g * body_g from G+1 measurements."""
+    if len(groups) == 1:
+        g = groups[0][0]
+        f1, f2 = measured[0][1][key], measured[1][1][key]
+        body = f2 - f1
+        return f1 - body, {g: body}
+    f11, f21, f12 = (m[1][key] for m in measured)
+    bd, bm = f21 - f11, f12 - f11
+    return f11 - bd - bm, {"dense_layers": bd, "moe_layers": bm}
+
+
+def _moe_batch_levels(cfg: ModelConfig, shape: ShapeConfig) -> Optional[list[int]]:
+    """MoE archs with many dispatch blocks: compiling the unrolled variants
+    at full batch takes minutes per compile (O(100) static blocks).  Per-
+    layer cost is LINEAR in batch once T > MOE_BLOCK (block capacity is
+    fixed per block), so measure at two small batches and extrapolate."""
+    from ..models.moe import MOE_BLOCK
+
+    if cfg.moe is None or shape.kind == "decode":
+        return None
+    tokens = shape.global_batch * shape.seq_len
+    if tokens <= 2 * MOE_BLOCK:
+        return None
+    levels = [b for b in (16, 32) if b <= shape.global_batch]
+    return levels if len(levels) == 2 else None
+
+
+def extrapolated_metrics(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                         knobs: Knobs) -> dict[str, Any]:
+    """Exact per-device metrics at full depth via unrolled small-L compiles.
+
+    metric = intercept + sum_g L_g * body_g, with every coefficient
+    additionally linear in global batch for big-MoE train/prefill cells
+    (see _moe_batch_levels).
+    """
+    groups, variants = _variants(cfg)
+    full = {g: c for g, c in groups}
+    b_levels = _moe_batch_levels(cfg, shape)
+    out: dict[str, Any] = {}
+
+    if b_levels is None:
+        measured, timing = [], []
+        for vcfg, counts in variants:
+            compiled, t = _compile_cell(vcfg, shape, mesh, knobs, static=True)
+            measured.append((counts, _metrics_of(compiled)))
+            timing.append(t)
+        out["variant_timing"] = timing
+        for key in ("flops", "bytes", "coll_bytes"):
+            intercept, bodies = _solve_layer_model(groups, measured, key)
+            total = intercept + sum(full[g] * b for g, b in bodies.items())
+            out[key] = {
+                "total_per_device": max(0.0, total),
+                "intercept": intercept,
+                "per_group_body": bodies,
+            }
+        out["coll_detail_smallest"] = dict(measured[0][1]["_coll_detail"])
+        return out
+
+    # two batch levels x (G+1) layer variants; every coefficient linear in B
+    per_level: dict[int, list] = {}
+    timing = []
+    for b in b_levels:
+        vshape = dataclasses.replace(shape, global_batch=b)
+        measured = []
+        for vcfg, counts in variants:
+            compiled, t = _compile_cell(vcfg, vshape, mesh, knobs, static=True)
+            measured.append((counts, _metrics_of(compiled)))
+            timing.append(t)
+        per_level[b] = measured
+    out["variant_timing"] = timing
+    out["batch_levels"] = b_levels
+    b1, b2 = b_levels
+    B_full = shape.global_batch
+    for key in ("flops", "bytes", "coll_bytes"):
+        i1, bod1 = _solve_layer_model(groups, per_level[b1], key)
+        i2, bod2 = _solve_layer_model(groups, per_level[b2], key)
+
+        def lin(v1, v2):  # linear in B through (b1, v1), (b2, v2)
+            slope = (v2 - v1) / (b2 - b1)
+            return v1 + slope * (B_full - b1)
+
+        intercept = lin(i1, i2)
+        bodies = {g: lin(bod1[g], bod2[g]) for g in bod1}
+        total = intercept + sum(full[g] * bodies[g] for g in bodies)
+        out[key] = {
+            "total_per_device": max(0.0, total),
+            "intercept": intercept,
+            "per_group_body": bodies,
+        }
+    out["coll_detail_smallest"] = dict(per_level[b1][0][1]["_coll_detail"])
+    return out
+
+
+# --------------------------------------------------------------------------
+# the dry run for one cell
+# --------------------------------------------------------------------------
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    knobs: Knobs = Knobs(),
+    roofline: bool = True,
+    save: bool = True,
+    tag: str = "",
+) -> dict:
+    cfg = knobs.apply(get_config(arch))
+    shape = shape_for(shape_name)
+    suffix = ("_multipod" if multi_pod else "") + (f"_{tag}" if tag else "")
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        result = {
+            "arch": arch, "shape": shape_name, "skipped": True,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "reason": "pure full-attention arch; long_500k requires a "
+                      "sub-quadratic mixer (DESIGN.md §5)",
+        }
+        if save:
+            ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+            (ARTIFACT_DIR / f"{arch}_{shape_name}{suffix}.json").write_text(
+                json.dumps(result, indent=1))
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(mesh.devices.size)
+
+    compiled, timing = _compile_cell(cfg, shape, mesh, knobs)
+    mem = compiled.memory_analysis()
+    full_coll = collective_bytes(compiled.as_text())
+
+    result: dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "skipped": False,
+        "knobs": {
+            "moe_impl": knobs.moe_impl, "triangular": knobs.triangular,
+            "fsdp": knobs.fsdp, "remat": cfg.remat,
+            "optimizer": optimizer_for(cfg).kind, "ce_chunk": knobs.ce_chunk,
+        },
+        "timing": timing,
+        "memory_analysis": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+        # collective op schedule of the full (scanned) program; per-op bytes
+        # here count scan bodies once — exact totals come from extrapolation
+        "collective_schedule": full_coll["counts"],
+    }
+    ma = result["memory_analysis"]
+    peak = ma["argument_bytes"] + ma["temp_bytes"] + ma["output_bytes"] - ma["alias_bytes"]
+    ma["peak_estimate_bytes"] = int(peak)
+    ma["fits_16gb"] = bool(peak <= V5E.hbm_bytes)
+
+    if roofline and not multi_pod:
+        ex = extrapolated_metrics(cfg, shape, mesh, knobs)
+        flops_dev = ex["flops"]["total_per_device"]
+        bytes_dev = ex["bytes"]["total_per_device"]
+        coll_dev = ex["coll_bytes"]["total_per_device"]
+        mf = model_flops(cfg, shape)
+        bytes_analytic = analytic_hbm_bytes(cfg, shape, n_chips)
+        # memory term: the CPU XLA pipeline's 'bytes accessed' lacks TPU
+        # fusion and inflates HBM traffic by 1-3 orders of magnitude, so the
+        # bottleneck analysis uses the analytic TPU traffic model; the HLO
+        # number is recorded alongside (EXPERIMENTS.md §Roofline caveat).
+        terms = {
+            "compute_s": flops_dev / V5E.peak_bf16_flops,
+            "memory_s": bytes_analytic / V5E.hbm_bandwidth,
+            "collective_s": coll_dev / V5E.ici_link_bandwidth,
+        }
+        result["extrapolation"] = {
+            k: v for k, v in ex.items() if k != "coll_detail_smallest"
+        }
+        result["collectives_smallest_variant"] = ex["coll_detail_smallest"]
+        result["roofline"] = {
+            **terms,
+            "memory_s_hlo_cpu": bytes_dev / V5E.hbm_bandwidth,
+            "hbm_bytes_analytic_per_device": bytes_analytic,
+            "dominant": max(terms, key=terms.get),
+            "bound_s": max(terms.values()),
+            "model_flops_global": mf,
+            "hlo_flops_global": flops_dev * n_chips,
+            "useful_flops_ratio": mf / max(1.0, flops_dev * n_chips),
+            "hardware": V5E.name,
+        }
+
+    if save:
+        ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+        out = ARTIFACT_DIR / f"{arch}_{shape_name}{suffix}.json"
+        out.write_text(json.dumps(result, indent=1))
+        result["artifact"] = str(out)
+    return result
+
+
+# --------------------------------------------------------------------------
+def all_cells() -> list[tuple[str, str]]:
+    return [
+        (arch, s)
+        for arch in REGISTRY
+        for s in ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+    ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=_DOC)
+    ap.add_argument("--arch", choices=sorted(REGISTRY))
+    ap.add_argument("--shape", choices=["train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--moe-impl", default="einsum", choices=["einsum", "scatter"])
+    ap.add_argument("--triangular", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+
+    knobs = Knobs(
+        moe_impl=args.moe_impl,
+        triangular=args.triangular,
+        fsdp=not args.no_fsdp,
+        remat=False if args.no_remat else None,
+    )
+    kw = dict(knobs=knobs, roofline=not args.no_roofline, tag=args.tag)
+    if args.all:
+        ok = True
+        for arch, shape_name in all_cells():
+            for mp in (False, True):
+                t0 = time.time()
+                try:
+                    r = run_cell(arch, shape_name, multi_pod=mp, **kw)
+                    status = "SKIP" if r.get("skipped") else "OK"
+                    extra = ""
+                    if "roofline" in r:
+                        extra = (f" dom={r['roofline']['dominant']}"
+                                 f" bound={r['roofline']['bound_s']:.3f}s")
+                    print(f"[{status}] {arch} x {shape_name} "
+                          f"({'2x16x16' if mp else '16x16'}) "
+                          f"{time.time()-t0:.0f}s{extra}", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    ok = False
+                    print(f"[FAIL] {arch} x {shape_name} "
+                          f"({'2x16x16' if mp else '16x16'}): {e}", flush=True)
+        return 0 if ok else 1
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    r = run_cell(args.arch, args.shape, multi_pod=args.multi_pod, **kw)
+    print(json.dumps(r, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,47 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state.  The dry-run process
+sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax
+import; everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh", "HardwareSpec", "V5E"]
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    """Roofline constants for the target chip (TPU v5e)."""
+
+    name: str
+    peak_bf16_flops: float      # per chip, FLOP/s
+    hbm_bandwidth: float        # bytes/s
+    ici_link_bandwidth: float   # bytes/s per link
+    hbm_bytes: float            # per-chip capacity
+
+
+V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_bf16_flops=197e12,
+    hbm_bandwidth=819e9,
+    ici_link_bandwidth=50e9,
+    hbm_bytes=16 * 1024**3,
+)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi_pod adds a 2-pod 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (real or forced) host devices exist —
+    used by multi-device CPU tests, not the dry-run."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,63 @@
+"""Training launcher: --arch <id> against the synthetic pipeline with
+checkpoint/restart.  Full configs need the production mesh; on a CPU host
+use --smoke for the reduced config.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from ..configs import REGISTRY, get_config
+from ..training.data import DataConfig
+from ..training.optimizer import OptimizerConfig
+from ..training.trainer import Trainer, TrainerConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=sorted(REGISTRY))
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.reduced()
+    opt_kind = "adafactor" if cfg.moe is not None else "adamw"
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        checkpoint_every=args.ckpt_every,
+        checkpoint_dir=f"{args.ckpt_dir}/{cfg.name}",
+        grad_accum=args.grad_accum,
+        compress_grads=args.compress_grads,
+        optimizer=OptimizerConfig(kind=opt_kind, total_steps=args.steps),
+        data=DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                        global_batch=args.global_batch,
+                        num_codebooks=cfg.num_codebooks),
+    )
+    trainer = Trainer(cfg, tcfg)
+
+    def on_step(step, metrics):
+        if step % 10 == 0:
+            print(f"step {step:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+
+    report = trainer.run(resume=not args.no_resume, on_step=on_step)
+    print(f"done: step {report.final_step}, resumed_from={report.resumed_from}, "
+          f"checkpoints={report.checkpoints}, stragglers={report.straggler_steps}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

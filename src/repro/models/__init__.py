@@ -1,0 +1,4 @@
+"""repro.models — JAX model substrate for the assigned architectures."""
+from .model import Model, build_model, cross_entropy
+
+__all__ = ["Model", "build_model", "cross_entropy"]

@@ -1,0 +1,312 @@
+"""GQA/MQA/MHA attention with RoPE / M-RoPE, sliding-window, KV caches.
+
+Two XLA execution paths (the Pallas kernels in repro.kernels mirror both
+for TPU):
+
+  * ``chunked_attention`` — query-chunked with full-row softmax, bounded
+    VMEM/temp footprint at long sequence; used for train/prefill.
+  * ``decode_attention``  — one query token against a (possibly ring-
+    buffered) KV cache; used by serve_step.
+
+Causal masking is applied inside each query chunk.  The rectangular
+iteration computes masked positions too (~2x score FLOPs at full causal);
+the block-triangular variant used as a §Perf hillclimb lives in
+``chunked_attention(..., triangular=True)`` which skips fully-masked KV
+blocks for scores via unrolled static slicing.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .common import ParamDef, apply_rope
+
+__all__ = [
+    "attention_skel",
+    "attention_apply",
+    "chunked_attention",
+    "decode_attention",
+    "init_kv_cache",
+    "KV_CHUNK",
+]
+
+KV_CHUNK = 512  # query-chunk length for the chunked path
+
+
+# ------------------------------------------------------------------ skeleton
+def attention_skel(cfg: ModelConfig) -> dict:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    skel = {
+        "wq": ParamDef((d, qd), ("embed", "q_heads"), "scaled"),
+        "wk": ParamDef((d, kvd), ("embed", "kv_heads"), "scaled"),
+        "wv": ParamDef((d, kvd), ("embed", "kv_heads"), "scaled"),
+        "wo": ParamDef((qd, d), ("q_heads", "embed"), "scaled"),
+    }
+    if cfg.qkv_bias:
+        skel["bq"] = ParamDef((qd,), ("q_heads",), "zeros")
+        skel["bk"] = ParamDef((kvd,), ("kv_heads",), "zeros")
+        skel["bv"] = ParamDef((kvd,), ("kv_heads",), "zeros")
+    return skel
+
+
+# ------------------------------------------------------------ core attention
+def _grouped_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B, Sq, H, D), k: (B, Sk, Hkv, D) -> scores (B, Hkv, G, Sq, Sk)."""
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    return jnp.einsum("bskgd,btkd->bkgst", qg, k, preferred_element_type=jnp.float32)
+
+
+def _grouped_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B, Hkv, G, Sq, Sk), v: (B, Sk, Hkv, D) -> (B, Sq, H, D)."""
+    B, Hkv, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, Sq, Hkv * G, out.shape[-1])
+
+
+def _masked_softmax(scores: jax.Array, mask: jax.Array) -> jax.Array:
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    # fully-masked rows (can happen in ring buffers before fill) -> zeros
+    return jnp.where(mask.any(axis=-1, keepdims=True), probs, 0.0)
+
+
+def _causal_mask(
+    q_pos: jax.Array, k_pos: jax.Array, window: Optional[int]
+) -> jax.Array:
+    mask = k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    return mask
+
+
+def _repeat_kv(k: jax.Array, H: int) -> jax.Array:
+    """(B,S,Hkv,D) -> (B,S,H,D).  Full-H scores let GSPMD shard the head
+    dim over 'model' (the grouped (Hkv, G) factorization leaves both dims
+    smaller than the mesh axis); FLOPs are identical."""
+    Hkv = k.shape[2]
+    if Hkv == H:
+        return k
+    return jnp.repeat(k, H // Hkv, axis=2)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: Optional[int] = None,
+    chunk: int = KV_CHUNK,
+    triangular: bool = False,
+    static: bool = False,
+    head_spec=None,
+) -> jax.Array:
+    """Causal attention, query-chunked.  q: (B,S,H,D), k/v: (B,S,Hkv,D).
+
+    With ``triangular=True`` each query chunk only contracts against KV
+    blocks at or below its diagonal (static unrolled slicing) — removes the
+    ~2x masked-score waste at the price of a larger unrolled HLO.
+    ``static=True`` unrolls the rectangular query-chunk loop too (python
+    loop instead of lax.map) so XLA cost analysis counts every chunk —
+    required for exact dry-run FLOP accounting (lax.map bodies are counted
+    once).
+    """
+    B, S, H, D = q.shape
+    scale = 1.0 / math.sqrt(D)
+    k = _repeat_kv(k, H)
+    v = _repeat_kv(v, H)
+    if head_spec is not None:
+        q = lax.with_sharding_constraint(q, head_spec)
+        k = lax.with_sharding_constraint(k, head_spec)
+        v = lax.with_sharding_constraint(v, head_spec)
+
+    @jax.checkpoint
+    def attend(q_i, k_i, v_i, mask):
+        # remat per chunk: scores/probs/mask are recomputed in the backward
+        # instead of being stacked across chunks (GBs at long sequence)
+        scores = jnp.einsum("bshd,bthd->bhst", q_i, k_i,
+                            preferred_element_type=jnp.float32) * scale
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(mask[None, None].any(-1, keepdims=True), probs, 0.0)
+        return jnp.einsum("bhst,bthd->bshd", probs.astype(v_i.dtype), v_i)
+
+    if S <= chunk:
+        pos = jnp.arange(S)
+        return attend(q, k, v, _causal_mask(pos, pos, window))
+
+    n_chunks = -(-S // chunk)
+    if S % chunk:
+        pad = n_chunks * chunk - S
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    k_pos_full = jnp.arange(k.shape[1])
+
+    if triangular:
+        outs = []
+        for i in range(n_chunks):
+            q_i = lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+            hi = min((i + 1) * chunk, k.shape[1])
+            k_i = lax.slice_in_dim(k, 0, hi, axis=1)
+            v_i = lax.slice_in_dim(v, 0, hi, axis=1)
+            q_pos = i * chunk + jnp.arange(chunk)
+            outs.append(attend(q_i, k_i, v_i,
+                               _causal_mask(q_pos, k_pos_full[:hi], window)))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :S]
+
+    if static:
+        outs = []
+        for i in range(n_chunks):
+            q_i = lax.slice_in_dim(q, i * chunk, (i + 1) * chunk, axis=1)
+            q_pos = i * chunk + jnp.arange(chunk)
+            outs.append(attend(q_i, k, v, _causal_mask(q_pos, k_pos_full, window)))
+        out = jnp.concatenate(outs, axis=1)
+        return out[:, :S]
+
+    def body(i):
+        q_i = lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        q_pos = i * chunk + jnp.arange(chunk)
+        return attend(q_i, k, v, _causal_mask(q_pos, k_pos_full, window))
+
+    out = lax.map(body, jnp.arange(n_chunks))          # (n, B, chunk, H, D)
+    out = jnp.moveaxis(out, 0, 1).reshape(B, n_chunks * chunk, H, D)
+    return out[:, :S]
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_positions: jax.Array,
+    current_pos: jax.Array,
+    *,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: (B, 1, H, D); caches: (B, C, Hkv, D); cache_positions: (B, C) absolute
+    token positions per slot (-1 = empty); current_pos: (B,) int32.
+    """
+    D = q.shape[-1]
+    scale = 1.0 / math.sqrt(D)
+    scores = _grouped_scores(q, k_cache) * scale        # (B,Hkv,G,1,C)
+    valid = cache_positions >= 0
+    mask = valid & (cache_positions <= current_pos[:, None])
+    if window is not None:
+        mask &= (current_pos[:, None] - cache_positions) < window
+    probs = _masked_softmax(scores, mask[:, None, None, None, :])
+    return _grouped_out(probs.astype(v_cache.dtype), v_cache)
+
+
+# ---------------------------------------------------------------- KV caches
+def init_kv_cache(
+    batch: int, capacity: int, num_kv_heads: int, head_dim: int,
+    dtype=jnp.bfloat16,
+) -> dict:
+    """capacity = full seq for dense attention, = window for sliding-window
+    (ring buffer).  positions carry absolute indices for masking/rope."""
+    return {
+        "k": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "v": jnp.zeros((batch, capacity, num_kv_heads, head_dim), dtype),
+        "pos": -jnp.ones((batch, capacity), jnp.int32),
+    }
+
+
+def update_kv_cache(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                    position: jax.Array) -> dict:
+    """Insert one token (k_new/v_new: (B, 1, Hkv, D)) at ``position`` (B,),
+    ring-buffered over capacity.
+
+    The write is a masked elementwise select rather than a scatter: with a
+    capacity-sharded cache, scatters force GSPMD into full-tensor
+    rematerialization (replicate + repartition), while the select stays
+    local per shard.  On real TPUs the Pallas decode kernel performs the
+    slot write as an in-place VMEM DMA; the masked form is the XLA-path
+    equivalent (DESIGN.md §3)."""
+    C = cache["k"].shape[1]
+    slot = (position % C)[:, None]                        # (B, 1)
+    sel = jnp.arange(C)[None, :] == slot                  # (B, C)
+    k = jnp.where(sel[..., None, None], k_new, cache["k"])
+    v = jnp.where(sel[..., None, None], v_new, cache["v"])
+    pos = jnp.where(sel, position[:, None], cache["pos"])
+    return {"k": k, "v": v, "pos": pos}
+
+
+def fill_kv_cache(cache: dict, k_seq: jax.Array, v_seq: jax.Array) -> dict:
+    """Prefill: write S tokens at positions [0, S).  If S exceeds the cache
+    capacity (sliding-window ring buffer), keep the last ``capacity``."""
+    S, B, C = k_seq.shape[1], k_seq.shape[0], cache["k"].shape[1]
+    if S > C:
+        k_seq, v_seq = k_seq[:, -C:], v_seq[:, -C:]
+        positions = jnp.arange(S - C, S, dtype=jnp.int32)
+        S = C
+    else:
+        positions = jnp.arange(S, dtype=jnp.int32)
+    k = lax.dynamic_update_slice_in_dim(cache["k"], k_seq, 0, axis=1)
+    v = lax.dynamic_update_slice_in_dim(cache["v"], v_seq, 0, axis=1)
+    pos = lax.dynamic_update_slice_in_dim(
+        cache["pos"], jnp.broadcast_to(positions, (B, S)), 0, axis=1
+    )
+    return {"k": k, "v": v, "pos": pos}
+
+
+# -------------------------------------------------------------- full module
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    sin: jax.Array,
+    cos: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    position: Optional[jax.Array] = None,
+    window: Optional[int] = None,
+    triangular: bool = False,
+    static: bool = False,
+    head_spec=None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Project + rope + attend.  Returns (output, updated cache or None).
+
+    Training/prefill: cache=None -> chunked causal self-attention.
+    Decode: cache given, x is (B, 1, d) and position (B,) absolute index.
+    """
+    B, S, _ = x.shape
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, H, D)
+    k = k.reshape(B, S, Hkv, D)
+    v = v.reshape(B, S, Hkv, D)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, window=window, triangular=triangular,
+                                static=static, head_spec=head_spec)
+        new_cache = None
+    elif S > 1:
+        # prefill: full causal self-attention + populate the cache
+        out = chunked_attention(q, k, v, window=window, triangular=triangular,
+                                static=static, head_spec=head_spec)
+        new_cache = fill_kv_cache(cache, k, v)
+    else:
+        assert position is not None
+        new_cache = update_kv_cache(cache, k, v, position)
+        out = decode_attention(
+            q, new_cache["k"], new_cache["v"], new_cache["pos"], position,
+            window=window,
+        )
+    out = out.reshape(B, S, H * D)
+    return out @ params["wo"], new_cache

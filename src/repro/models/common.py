@@ -1,0 +1,177 @@
+"""Shared model machinery: parameter skeletons, norms, rotary embeddings.
+
+Parameters are plain dict pytrees.  Each module builds a *skeleton* — a
+pytree of ``ParamDef`` leaves carrying shape, logical axes, and init — from
+which three views derive mechanically (one source of truth):
+
+  * ``init_params(skel, key)``        -> materialized jnp arrays
+  * ``abstract_params(skel)``         -> ShapeDtypeStruct (dry-run, no alloc)
+  * ``partition_specs(skel, rules)``  -> PartitionSpec tree (GSPMD shardings)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ParamDef",
+    "init_params",
+    "abstract_params",
+    "partition_specs",
+    "prepend_axis",
+    "rms_norm",
+    "make_rope",
+    "apply_rope",
+    "make_mrope",
+    "count_params",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter leaf: shape + logical sharding axes + initializer."""
+
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]       # logical axis name per dim
+    init: str = "normal"                  # normal | zeros | ones | scaled
+    scale: Optional[float] = None         # stddev override
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} do not match shape {self.shape}")
+
+
+def _is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _init_leaf(d: ParamDef, key: jax.Array) -> jax.Array:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    if d.init == "scaled":
+        # fan-in scaled truncated normal (default for projections)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (std * jax.random.truncated_normal(key, -2.0, 2.0, d.shape)).astype(d.dtype)
+    std = d.scale if d.scale is not None else 0.02
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, d.shape)).astype(d.dtype)
+
+
+def _with_dtype(skel: Any, dtype: Any) -> Any:
+    if dtype is None:
+        return skel
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, dtype=dt), skel, is_leaf=_is_def
+    )
+
+
+def init_params(skel: Any, key: jax.Array, dtype: Any = None) -> Any:
+    """Materialize a skeleton into parameter arrays (smoke tests/training)."""
+    skel = _with_dtype(skel, dtype)
+    leaves, treedef = jax.tree.flatten(skel, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_leaf(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(skel: Any, dtype: Any = None) -> Any:
+    """ShapeDtypeStruct view — used by the dry-run; allocates nothing."""
+    skel = _with_dtype(skel, dtype)
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), skel, is_leaf=_is_def
+    )
+
+
+def partition_specs(skel: Any, rules: dict[Optional[str], Optional[Any]]) -> Any:
+    """Map logical axis names -> mesh axes via ``rules``.
+
+    rules values may be None (replicate), a mesh-axis name, or a tuple of
+    mesh-axis names (sharded over both).  Missing names replicate.
+    """
+
+    def spec(d: ParamDef) -> P:
+        return P(*(rules.get(a) for a in d.axes))
+
+    return jax.tree.map(spec, skel, is_leaf=_is_def)
+
+
+def prepend_axis(skel: Any, n: int, axis_name: Optional[str] = "layers") -> Any:
+    """Stack a skeleton n times along a new leading dim (scan-over-layers)."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(
+            d, shape=(n, *d.shape), axes=(axis_name, *d.axes)
+        ),
+        skel,
+        is_leaf=_is_def,
+    )
+
+
+def count_params(skel: Any) -> int:
+    total = 0
+    for d in jax.tree.leaves(skel, is_leaf=_is_def):
+        total += math.prod(d.shape)
+    return total
+
+
+# ----------------------------------------------------------------- numerics
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def make_rope(
+    positions: jax.Array, head_dim: int, theta: float
+) -> tuple[jax.Array, jax.Array]:
+    """(sin, cos) of shape positions.shape + (head_dim//2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x2 cos + x1 sin).
+
+    x: (B, S, H, D); sin/cos: (B, S, D/2) broadcast over heads.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]  # add head axis
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def make_mrope(
+    position_grid: jax.Array, head_dim: int, theta: float,
+    sections: tuple[int, int, int],
+) -> tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: the rotary half-dim is split into (t, h, w)
+    sections; each section takes its angle from the matching position grid.
+
+    position_grid: (3, B, S) int32 — temporal/height/width positions.
+    Returns (sin, cos) of shape (B, S, head_dim//2).
+    """
+    half = head_dim // 2
+    if sum(sections) != half:
+        raise ValueError(f"mrope sections {sections} must sum to head_dim/2={half}")
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # angles per grid: (3, B, S, half)
+    angles = position_grid.astype(jnp.float32)[..., None] * freqs
+    # section select: which of the 3 grids owns each of the half dims
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=angles.dtype)       # (half, 3)
+    picked = jnp.einsum("gbsd,dg->bsd", angles, onehot)
+    return jnp.sin(picked), jnp.cos(picked)

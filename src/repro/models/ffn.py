@@ -1,0 +1,22 @@
+"""SwiGLU feed-forward block (gate/up/down)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamDef
+
+__all__ = ["ffn_skel", "ffn_apply"]
+
+
+def ffn_skel(d_model: int, d_ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d_model, d_ff), ("embed", "ffn"), "scaled"),
+        "w_up": ParamDef((d_model, d_ff), ("embed", "ffn"), "scaled"),
+        "w_down": ParamDef((d_ff, d_model), ("ffn", "embed"), "scaled"),
+    }
+
+
+def ffn_apply(params: dict, x: jax.Array) -> jax.Array:
+    gate = jax.nn.silu(x @ params["w_gate"])
+    return (gate * (x @ params["w_up"])) @ params["w_down"]

@@ -1,0 +1,216 @@
+"""Multi-head Latent Attention (DeepSeek-V3, arXiv:2412.19437).
+
+Queries and KV are projected through low-rank latents; the rotary part is
+decoupled (a small per-head rope slice for q, a single shared rope slice
+for k).  The decode KV cache stores only the compressed latent
+(kv_lora_rank + qk_rope_head_dim per token) — the memory win that makes
+MLA serve long contexts cheaply.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .common import ParamDef, apply_rope, rms_norm
+
+__all__ = ["mla_skel", "mla_apply", "init_mla_cache"]
+
+
+def mla_skel(cfg: ModelConfig) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        # query path: d -> q_lora -> heads * (nope + rope)
+        "wq_a": ParamDef((d, m.q_lora_rank), ("embed", "q_lora"), "scaled"),
+        "q_a_norm": ParamDef((m.q_lora_rank,), ("q_lora",), "zeros"),
+        "wq_b": ParamDef((m.q_lora_rank, H * qk), ("q_lora", "q_heads"), "scaled"),
+        # kv path: d -> (kv_lora + shared k rope)
+        "wkv_a": ParamDef(
+            (d, m.kv_lora_rank + m.qk_rope_head_dim), ("embed", None), "scaled"
+        ),
+        "kv_a_norm": ParamDef((m.kv_lora_rank,), (None,), "zeros"),
+        "wkv_b": ParamDef(
+            (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim)),
+            (None, "q_heads"),
+            "scaled",
+        ),
+        "wo": ParamDef((H * m.v_head_dim, d), ("q_heads", "embed"), "scaled"),
+    }
+
+
+def init_mla_cache(batch: int, capacity: int, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, capacity, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, capacity, m.qk_rope_head_dim), dtype),
+        "pos": -jnp.ones((batch, capacity), jnp.int32),
+    }
+
+
+def _project_q(params, x, cfg, sin, cos):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_lat = rms_norm(x @ params["wq_a"], params["q_a_norm"], cfg.norm_eps)
+    q = (q_lat @ params["wq_b"]).reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, sin, cos)
+    return jnp.concatenate([q_nope, q_rope], axis=-1)
+
+
+def _expand_kv(params, ckv, cfg):
+    """latent (B,T,r) -> k_nope (B,T,H,dn), v (B,T,H,dv)."""
+    m = cfg.mla
+    B, T, _ = ckv.shape
+    H = cfg.num_heads
+    kv = (ckv @ params["wkv_b"]).reshape(B, T, H, m.qk_nope_head_dim + m.v_head_dim)
+    return kv[..., : m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim :]
+
+
+@jax.checkpoint
+def _attend(q, k, v, mask):
+    """q: (B,Sq,H,dk), k: (B,Sk,H,dk), v: (B,Sk,H,dv), mask (Sq,Sk) or (B,1,Sq,Sk).
+    Rematerialized per chunk (scores are recomputed in the backward)."""
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(mask.any(-1, keepdims=True), probs, 0.0)
+    return jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+
+
+def mla_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    sin: jax.Array,
+    cos: jax.Array,
+    *,
+    cache: Optional[dict] = None,
+    position: Optional[jax.Array] = None,
+    chunk: int = 512,
+    static: bool = False,
+    head_spec=None,
+    absorbed: bool = True,   # weight-absorbed decode (H5); False = naive
+) -> tuple[jax.Array, Optional[dict]]:
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = _project_q(params, x, cfg, sin, cos)                   # (B,S,H,dn+dr)
+    if head_spec is not None:
+        q = lax.with_sharding_constraint(q, head_spec)
+
+    kv_a = x @ params["wkv_a"]                                 # (B,S,r+dr)
+    ckv = rms_norm(kv_a[..., : m.kv_lora_rank], params["kv_a_norm"], cfg.norm_eps)
+    k_rope_shared = apply_rope(
+        kv_a[..., m.kv_lora_rank :][:, :, None, :], sin, cos
+    )                                                          # (B,S,1,dr)
+
+    if cache is None or S > 1:
+        k_nope, v = _expand_kv(params, ckv, cfg)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope_shared, (*k_nope.shape[:3], m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        if head_spec is not None:
+            k = lax.with_sharding_constraint(k, head_spec)
+            v = lax.with_sharding_constraint(v, head_spec)
+        # query-chunked causal attention to bound the score buffer
+        if S <= chunk:
+            pos = jnp.arange(S)
+            mask = (pos[None, :] <= pos[:, None])[None, None]
+            out = _attend(q, k, v, mask)
+        elif static:
+            outs = []
+            for i in range(-(-S // chunk)):
+                q_i = lax.slice_in_dim(q, i * chunk, min((i + 1) * chunk, S), axis=1)
+                q_pos = i * chunk + jnp.arange(q_i.shape[1])
+                mask = (jnp.arange(S)[None, :] <= q_pos[:, None])[None, None]
+                outs.append(_attend(q_i, k, v, mask))
+            out = jnp.concatenate(outs, axis=1)
+        else:
+            n = -(-S // chunk)
+
+            def body(i):
+                q_i = lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+                q_pos = i * chunk + jnp.arange(chunk)
+                mask = (jnp.arange(S)[None, :] <= q_pos[:, None])[None, None]
+                return _attend(q_i, k, v, mask)
+
+            out = lax.map(body, jnp.arange(n))
+            out = jnp.moveaxis(out, 0, 1).reshape(B, n * chunk, H, m.v_head_dim)[:, :S]
+        new_cache = None
+        if cache is not None:  # prefill: store latents
+            T = min(S, cache["ckv"].shape[1])
+            new_cache = {
+                "ckv": lax.dynamic_update_slice_in_dim(cache["ckv"], ckv[:, -T:], 0, 1),
+                "k_rope": lax.dynamic_update_slice_in_dim(
+                    cache["k_rope"], k_rope_shared[:, -T:, 0, :], 0, 1
+                ),
+                "pos": lax.dynamic_update_slice_in_dim(
+                    cache["pos"],
+                    jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T)), 0, 1
+                ),
+            }
+    else:
+        # decode: insert latent (masked write — see attention.update_kv_cache
+        # for why scatters are avoided), attend over the latent cache
+        assert position is not None
+        C = cache["ckv"].shape[1]
+        slot = (position % C)[:, None]
+        sel = jnp.arange(C)[None, :] == slot              # (B, C)
+        new_cache = {
+            "ckv": jnp.where(sel[..., None], ckv, cache["ckv"]),
+            "k_rope": jnp.where(sel[..., None], k_rope_shared[:, :, 0, :],
+                                cache["k_rope"]),
+            "pos": jnp.where(sel, position[:, None], cache["pos"]),
+        }
+        valid = new_cache["pos"] >= 0
+        mask_bc = valid & (new_cache["pos"] <= position[:, None])   # (B, C)
+        if absorbed:
+            # Weight absorption (the DeepSeek-V3 serving identity):
+            #   q_nope . (W_k c) == (W_k^T q_nope) . c
+            # scores and values run against the *latent* cache directly —
+            # O(C·r) per head instead of O(C·r·(dn+dv)) cache re-expansion
+            # per step.  EXPERIMENTS.md §Perf H5.
+            wkv = params["wkv_b"].reshape(
+                m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+            w_k = wkv[..., : m.qk_nope_head_dim]          # (r, H, dn)
+            w_v = wkv[..., m.qk_nope_head_dim :]          # (r, H, dv)
+            q_nope = q[..., : m.qk_nope_head_dim]         # (B,1,H,dn)
+            q_rope = q[..., m.qk_nope_head_dim :]         # (B,1,H,dr)
+            q_abs = jnp.einsum("bshd,rhd->bshr", q_nope, w_k)
+            scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+            scores = (
+                jnp.einsum("bshr,bcr->bhsc", q_abs.astype(jnp.float32),
+                           new_cache["ckv"].astype(jnp.float32))
+                + jnp.einsum("bshd,bcd->bhsc", q_rope.astype(jnp.float32),
+                             new_cache["k_rope"].astype(jnp.float32))
+            ) * scale
+            scores = jnp.where(mask_bc[:, None, None, :], scores, -1e30)
+            probs = jax.nn.softmax(scores, axis=-1)
+            probs = jnp.where(mask_bc[:, None, None, :].any(-1, keepdims=True),
+                              probs, 0.0)
+            ctx = jnp.einsum("bhsc,bcr->bshr", probs,
+                             new_cache["ckv"].astype(jnp.float32))
+            out = jnp.einsum("bshr,rhd->bshd", ctx,
+                             w_v.astype(jnp.float32)).astype(x.dtype)
+        else:
+            k_nope, v = _expand_kv(params, new_cache["ckv"], cfg)  # (B,C,H,*)
+            k_rope = jnp.broadcast_to(
+                new_cache["k_rope"][:, :, None, :],
+                (*k_nope.shape[:3], m.qk_rope_head_dim)
+            )
+            k = jnp.concatenate([k_nope, k_rope], axis=-1)
+            out = _attend(q, k, v, mask_bc[:, None, None, :])
+
+    out = out.reshape(B, S, H * m.v_head_dim)
+    return out @ params["wo"], new_cache

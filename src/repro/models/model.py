@@ -1,0 +1,340 @@
+"""Public model API: build, init, forward, loss, prefill, decode.
+
+A ``Model`` is a thin namespace bound to a ModelConfig; parameters live in
+plain dict pytrees derived from one skeleton (common.ParamDef), so init /
+abstract (dry-run) / partition-spec views never diverge.
+
+Batch formats
+  train/prefill:  {"tokens": (B, S) int32}          — LM families
+                  {"tokens": (B, S, K)}              — musicgen codebooks
+                  + {"positions": (3, B, S)}         — qwen2-vl M-RoPE
+                  + {"vision_embeds": (B, Nv, d)}    — qwen2-vl stub frontend
+  decode:         {"token": (B, 1[, K]), "position": (B,)} (+ mrope grid)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import (
+    ParamDef,
+    abstract_params,
+    count_params,
+    init_params,
+    make_mrope,
+    make_rope,
+    partition_specs,
+    rms_norm,
+)
+from .transformer import LayerCtx, stack_apply, stack_init_cache, stack_skel
+from . import transformer as _transformer
+from .ffn import ffn_skel
+from .mla import mla_skel
+
+__all__ = ["Model", "build_model", "cross_entropy"]
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token CE in float32.  logits (..., V), labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.clip(mask.sum(), 1)
+    return nll.mean()
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------- skeleton
+    def skeleton(self) -> dict:
+        cfg = self.cfg
+        d, V, K = cfg.d_model, cfg.vocab_size, cfg.num_codebooks
+        skel: dict[str, Any] = {}
+        if K > 1:
+            skel["embed"] = ParamDef((K, V, d), ("codebook", "vocab", "embed"))
+        else:
+            skel["embed"] = ParamDef((V, d), ("vocab", "embed"))
+        skel.update(stack_skel(cfg))
+        skel["final_norm"] = ParamDef((d,), ("embed",), "zeros")
+        if not cfg.tie_embeddings:
+            if K > 1:
+                skel["lm_head"] = ParamDef((K, d, V), ("codebook", "embed", "vocab"), "scaled")
+            else:
+                skel["lm_head"] = ParamDef((d, V), ("embed", "vocab"), "scaled")
+        if cfg.mtp_depth:
+            skel["mtp"] = {
+                "proj": ParamDef((2 * d, d), (None, "embed"), "scaled"),
+                "norm_h": ParamDef((d,), ("embed",), "zeros"),
+                "norm_e": ParamDef((d,), ("embed",), "zeros"),
+                "layer": {
+                    "norm1": ParamDef((d,), ("embed",), "zeros"),
+                    "mixer": mla_skel(cfg) if cfg.attn_type == "mla" else
+                    _transformer._mixer_skel(cfg, "attn"),
+                    "norm2": ParamDef((d,), ("embed",), "zeros"),
+                    "mlp": ffn_skel(d, cfg.moe.dense_d_ff if cfg.moe else cfg.d_ff),
+                },
+                "final_norm": ParamDef((d,), ("embed",), "zeros"),
+            }
+        return skel
+
+    def init(self, key: jax.Array) -> dict:
+        return init_params(self.skeleton(), key, dtype=self.cfg.dtype)
+
+    def abstract(self) -> dict:
+        return abstract_params(self.skeleton(), dtype=self.cfg.dtype)
+
+    def pspecs(self, rules: dict) -> dict:
+        return partition_specs(self.skeleton(), rules)
+
+    def param_count(self) -> int:
+        return count_params(self.skeleton())
+
+    # ------------------------------------------------------------ embedding
+    def _embed(self, params: dict, tokens: jax.Array, chunk: int = 0,
+               static: bool = False) -> jax.Array:
+        """Token embedding lookup.
+
+        With a vocab-sharded table GSPMD lowers the gather to a one-hot
+        matmul; unchunked that materializes a (B, S, V)-scale one-hot
+        (tens of GB at 4k x 256).  ``chunk`` bounds it to (B, chunk, V).
+        """
+        if self.cfg.num_codebooks > 1:
+            # tokens (B, S, K): sum of per-codebook embeddings (gather per book)
+            K = self.cfg.num_codebooks
+            parts = [params["embed"][k][tokens[..., k]] for k in range(K)]
+            return sum(parts)
+        table = params["embed"]
+        S = tokens.shape[1]
+        if not chunk or S <= chunk or tokens.ndim != 2:
+            return table[tokens]
+        n = -(-S // chunk)
+        pad = n * chunk - S
+        tk = jnp.pad(tokens, ((0, 0), (0, pad))) if pad else tokens
+        tk = jnp.moveaxis(tk.reshape(tk.shape[0], n, chunk), 1, 0)
+        if static:
+            outs = [table[tk[i]] for i in range(n)]
+            out = jnp.stack(outs)
+        else:
+            out = jax.lax.map(lambda t: table[t], tk)
+        out = jnp.moveaxis(out, 0, 1).reshape(tokens.shape[0], n * chunk, -1)
+        return out[:, :S]
+
+    def _unembed(self, params: dict, h: jax.Array,
+                 logits_spec=None) -> jax.Array:
+        cfg = self.cfg
+        if cfg.num_codebooks > 1:
+            if cfg.tie_embeddings:
+                logits = jnp.einsum("bsd,kvd->bskv", h, params["embed"])
+            else:
+                logits = jnp.einsum("bsd,kdv->bskv", h, params["lm_head"])
+        elif cfg.tie_embeddings:
+            logits = h @ params["embed"].T
+        else:
+            logits = h @ params["lm_head"]
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        return logits
+
+    def _rope(self, batch: dict, B: int, S: int,
+              position: Optional[jax.Array] = None):
+        cfg = self.cfg
+        if cfg.attn_type == "none":
+            z = jnp.zeros((B, S, 1), jnp.float32)
+            return z, z
+        if cfg.mrope_sections is not None:
+            grid = batch.get("positions")
+            if grid is None:
+                pos = (position[:, None] if position is not None
+                       else jnp.arange(S)[None, :] + jnp.zeros((B, 1), jnp.int32))
+                grid = jnp.broadcast_to(pos[None], (3, B, pos.shape[-1]))
+            return make_mrope(grid, cfg.head_dim, cfg.rope_theta, cfg.mrope_sections)
+        if position is not None:
+            pos = position[:, None]                     # (B, 1) decode
+        else:
+            pos = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        half = (cfg.mla.qk_rope_head_dim if cfg.attn_type == "mla"
+                else cfg.head_dim)
+        return make_rope(pos, half, cfg.rope_theta)
+
+    def _merge_vision(self, batch: dict, h: jax.Array) -> jax.Array:
+        ve = batch.get("vision_embeds")
+        if ve is None or self.cfg.vision_tokens == 0:
+            return h
+        n = ve.shape[1]
+        return jnp.concatenate([ve.astype(h.dtype), h[:, n:]], axis=1)
+
+    # -------------------------------------------------------------- forward
+    def forward(
+        self,
+        params: dict,
+        batch: dict,
+        *,
+        cache: Optional[dict] = None,
+        position: Optional[jax.Array] = None,
+        moe_impl: str = "einsum",
+        triangular: bool = False,
+        static: bool = False,
+        act_spec=None,
+        head_spec=None,
+        embed_chunk: int = 0,
+    ) -> tuple[jax.Array, Optional[dict], jax.Array]:
+        """Returns (hidden (B,S,d), new_cache, moe_aux)."""
+        cfg = self.cfg
+        tokens = batch["token"] if "token" in batch else batch["tokens"]
+        B, S = tokens.shape[:2]
+        h = self._embed(params, tokens, chunk=embed_chunk, static=static)
+        if cache is None or S > 1:
+            h = self._merge_vision(batch, h)
+        if act_spec is not None:
+            h = jax.lax.with_sharding_constraint(h, act_spec)
+        sin, cos = self._rope(batch, B, S, position)
+        ctx = LayerCtx(cfg=cfg, sin=sin, cos=cos, position=position,
+                       moe_impl=moe_impl, triangular=triangular,
+                       static=static, act_spec=act_spec, head_spec=head_spec)
+        h, new_cache, aux = stack_apply(params, h, ctx, cache)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        return h, new_cache, aux
+
+    def logits(self, params: dict, batch: dict, logits_spec=None, **kw) -> jax.Array:
+        h, _, _ = self.forward(params, batch, **kw)
+        return self._unembed(params, h, logits_spec)
+
+    def _chunked_ce(self, params: dict, h: jax.Array, labels: jax.Array,
+                    chunk: int, logits_spec=None,
+                    static: bool = False) -> jax.Array:
+        """CE without materializing the full (B, S, V) logits: unembed +
+        logsumexp one sequence chunk at a time (lax.map keeps a single
+        chunk's logits live; grads rematerialize per chunk)."""
+        B, S = h.shape[:2]
+        n = -(-S // chunk)
+        pad = n * chunk - S
+        if pad:
+            h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+            labels = jnp.pad(
+                labels, ((0, 0), (0, pad)) + ((0, 0),) * (labels.ndim - 2))
+        mask = (jnp.arange(n * chunk) < S).astype(jnp.float32)
+        hs = jnp.moveaxis(h.reshape(B, n, chunk, -1), 1, 0)
+        ls = jnp.moveaxis(labels.reshape(B, n, chunk, *labels.shape[2:]), 1, 0)
+        ms = mask.reshape(n, chunk)
+
+        @jax.checkpoint
+        def body(args):
+            h_i, lab_i, m_i = args
+            logits = self._unembed(params, h_i, logits_spec).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, lab_i[..., None], axis=-1)[..., 0]
+            nll = (logz - gold)
+            w = jnp.broadcast_to(m_i[None, :, *([None] * (nll.ndim - 2))], nll.shape)
+            return (nll * w).sum(), w.sum()
+
+        if static:
+            parts = [body((hs[i], ls[i], ms[i])) for i in range(n)]
+            sums = jnp.stack([p[0] for p in parts])
+            counts = jnp.stack([p[1] for p in parts])
+        else:
+            sums, counts = jax.lax.map(body, (hs, ls, ms))
+        return sums.sum() / jnp.clip(counts.sum(), 1.0)
+
+    # ----------------------------------------------------------------- loss
+    def loss(self, params: dict, batch: dict, *, moe_impl: str = "einsum",
+             triangular: bool = False, static: bool = False, act_spec=None,
+             head_spec=None, logits_spec=None, ce_chunk: int = 0,
+             embed_chunk: int = 0) -> tuple[jax.Array, dict]:
+        """Next-token LM loss (+ MoE aux + MTP aux where configured).
+
+        ce_chunk > 0 enables the chunked-loss path (bounded logits memory).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        h, _, aux = self.forward(params, batch, moe_impl=moe_impl,
+                                 triangular=triangular, static=static,
+                                 act_spec=act_spec, head_spec=head_spec,
+                                 embed_chunk=embed_chunk)
+        labels = tokens[:, 1:]
+        if ce_chunk:
+            ce = self._chunked_ce(params, h[:, :-1], labels, ce_chunk,
+                                  logits_spec, static=static)
+        else:
+            logits = self._unembed(params, h[:, :-1], logits_spec)
+            ce = cross_entropy(logits, labels)
+        metrics = {"ce": ce, "moe_aux": aux}
+        total = ce
+        if cfg.moe is not None:
+            total = total + cfg.moe.router_aux_weight * aux
+        if cfg.mtp_depth and "mtp" in params:
+            mtp_ce = self._mtp_loss(params, batch, h, ce_chunk=ce_chunk,
+                                    logits_spec=logits_spec, static=static,
+                                    embed_chunk=embed_chunk)
+            metrics["mtp_ce"] = mtp_ce
+            total = total + 0.3 * mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    def _mtp_loss(self, params: dict, batch: dict, h: jax.Array,
+                  ce_chunk: int = 0, logits_spec=None, static: bool = False,
+                  embed_chunk: int = 0) -> jax.Array:
+        """DeepSeek-V3 MTP depth-1: predict token t+2 from (h_t, emb_{t+1})."""
+        cfg = self.cfg
+        mtp = params["mtp"]
+        tokens = batch["tokens"]
+        B, S = tokens.shape[:2]
+        if S < 3:
+            return jnp.zeros((), jnp.float32)
+        h_t = rms_norm(h[:, : S - 2], mtp["norm_h"], cfg.norm_eps)
+        e_next = rms_norm(
+            self._embed(params, tokens[:, 1 : S - 1], chunk=embed_chunk,
+                        static=static),
+            mtp["norm_e"], cfg.norm_eps,
+        )
+        x = jnp.concatenate([h_t, e_next], axis=-1) @ mtp["proj"]
+        sin, cos = self._rope(batch, B, S - 2)
+        ctx = LayerCtx(cfg=cfg, sin=sin, cos=cos)
+        x, _, _ = _transformer._apply_layer("attn_ffn", mtp["layer"], x, ctx, None)
+        x = rms_norm(x, mtp["final_norm"], cfg.norm_eps)
+        if ce_chunk:
+            return self._chunked_ce(params, x, tokens[:, 2:], ce_chunk,
+                                    logits_spec, static=static)
+        logits = self._unembed(params, x)
+        return cross_entropy(logits, tokens[:, 2:])
+
+    # ------------------------------------------------------------- serving
+    def init_cache(self, batch: int, capacity: int, dtype=jnp.bfloat16) -> dict:
+        return stack_init_cache(self.cfg, batch, capacity, dtype)
+
+    def prefill(self, params: dict, batch: dict, cache: dict,
+                logits_spec=None, **kw) -> tuple[jax.Array, dict]:
+        """Run the prompt; returns (last-position logits, filled cache)."""
+        tokens = batch["tokens"]
+        if tokens.shape[1] == 1:
+            # single-token prompt routes through the decode path, which
+            # needs an explicit position (slot 0)
+            kw.setdefault("position", jnp.zeros(tokens.shape[0], jnp.int32))
+            batch = {**batch, "token": tokens}
+        h, new_cache, _ = self.forward(params, batch, cache=cache, **kw)
+        return self._unembed(params, h[:, -1:], logits_spec), new_cache
+
+    def decode_step(self, params: dict, token: jax.Array, cache: dict,
+                    position: jax.Array, mrope_grid: Optional[jax.Array] = None,
+                    **kw) -> tuple[jax.Array, dict]:
+        """One token in, one token's logits out.  position: (B,) absolute."""
+        batch = {"token": token}
+        if mrope_grid is not None:
+            batch["positions"] = mrope_grid
+        logits_spec = kw.pop("logits_spec", None)
+        h, new_cache, _ = self.forward(
+            batch=batch, params=params, cache=cache, position=position, **kw
+        )
+        return self._unembed(params, h, logits_spec), new_cache
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

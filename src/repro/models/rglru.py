@@ -1,0 +1,157 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrent block:   out = W_out( GeLU(W_side x)  ⊙  RGLRU(conv1d(W_main x)) )
+RG-LRU recurrence (per channel, computed in float32):
+
+    r_t = sigmoid(W_a u_t + b_a)            recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)            input gate
+    a_t = exp(-c * softplus(lam) * r_t)     c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses an associative scan over the affine maps (a, b); decode is a
+single state update.  The Pallas kernel ``repro.kernels.rglru_scan``
+implements the same recurrence with blocked time tiling.
+
+Note: Griffin uses block-diagonal gate matrices; we use full dense gates
+(documented in DESIGN.md) — same recurrence, slightly larger layer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .common import ParamDef
+
+__all__ = [
+    "rglru_skel",
+    "rglru_apply",
+    "init_rglru_cache",
+    "rglru_scan",
+    "causal_conv1d",
+    "conv1d_step",
+]
+
+_C = 8.0  # Griffin's fixed decay sharpness
+
+
+def rglru_skel(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    return {
+        "w_side": ParamDef((d, w), ("embed", "ffn"), "scaled"),
+        "w_main": ParamDef((d, w), ("embed", "ffn"), "scaled"),
+        "conv_w": ParamDef((4, w), (None, "ffn"), "scaled", scale=0.1),
+        "w_a": ParamDef((w, w), ("ffn", None), "scaled"),
+        "b_a": ParamDef((w,), (None,), "zeros"),
+        "w_i": ParamDef((w, w), ("ffn", None), "scaled"),
+        "b_i": ParamDef((w,), (None,), "zeros"),
+        # lam init so softplus(lam) spans useful decay rates
+        "lam": ParamDef((w,), (None,), "normal", scale=0.5),
+        "w_out": ParamDef((w, d), ("ffn", "embed"), "scaled"),
+    }
+
+
+def init_rglru_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, 3, w), dtype),  # last (width-1) inputs
+    }
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv, width W.  x: (B, S, C), w: (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + pad[:, i : i + x.shape[1]] * w[W - 1 - i]
+    return out
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array):
+    """One decode step.  x_t: (B, C); conv_state: (B, W-1, C).
+
+    ``causal_conv1d`` computes out_t = sum_k x_{t-k} * w[k]; the window is
+    ordered oldest -> newest, so the taps apply reversed.
+    """
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w[::-1])
+    return y, window[:, 1:]
+
+
+def _gates(params: dict, u: jax.Array):
+    r = jax.nn.sigmoid(u @ params["w_a"] + params["b_a"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_i"] + params["b_i"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12)) * (i * u.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(params: dict, u: jax.Array, h0: Optional[jax.Array] = None) -> jax.Array:
+    """Full-sequence RG-LRU via associative scan.  u: (B, S, W) -> (B, S, W)."""
+    a, b = _gates(params, u)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(params: dict, u_t: jax.Array, h: jax.Array):
+    """One decode step.  u_t: (B, W); h: (B, W) float32."""
+    a, b = _gates(params, u_t[:, None, :])
+    h_new = a[:, 0] * h + b[:, 0]
+    return h_new.astype(u_t.dtype), h_new
+
+
+def rglru_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """The full recurrent block.  x: (B, S, d)."""
+    side = jax.nn.gelu(x @ params["w_side"])
+    u = x @ params["w_main"]
+
+    if cache is None or x.shape[1] > 1:
+        u = causal_conv1d(u, params["conv_w"])
+        h0 = cache["h"] if cache is not None else None
+        y = rglru_scan(params, u, h0)
+        new_cache = None
+        if cache is not None:  # prefill: save final state + conv tail
+            a, b = _gates(params, u)
+
+            def combine(c1, c2):
+                a1, b1 = c1
+                a2, b2 = c2
+                return a1 * a2, a2 * b1 + b2
+
+            aT, hT = jax.tree.map(
+                lambda t: t[:, -1], lax.associative_scan(combine, (a, b), axis=1)
+            )
+            tail = (x @ params["w_main"])[:, -3:]
+            pad = 3 - tail.shape[1]
+            if pad > 0:
+                tail = jnp.pad(tail, ((0, 0), (pad, 0), (0, 0)))
+            new_cache = {"h": hT, "conv": tail}
+    else:
+        u_t, conv_state = conv1d_step(u[:, 0], cache["conv"], params["conv_w"])
+        y_t, h = rglru_step(params, u_t, cache["h"])
+        y = y_t[:, None]
+        new_cache = {"h": h, "conv": conv_state}
+
+    out = (side * y) @ params["w_out"]
+    return out, new_cache

@@ -1,0 +1,213 @@
+"""Mamba-2 SSD (state-space duality) mixer (arXiv:2405.21060).
+
+Chunked SSD for training/prefill (quadratic within a chunk, linear across
+chunks) and a constant-memory recurrent step for decode — this is what
+makes the ``long_500k`` shape serveable.  The Pallas kernel
+``repro.kernels.ssd_scan`` implements the chunk scan with VMEM tiling.
+
+Layer dataflow (Mamba-2 block):
+    in_proj -> [z | x | B | C | dt]
+    causal depthwise conv over [x | B | C]
+    y = SSD(x * dt, A * dt, B, C) + D * x
+    out = out_proj( rmsnorm(y * silu(z)) )
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .common import ParamDef, rms_norm
+from .rglru import causal_conv1d, conv1d_step
+
+__all__ = ["ssd_skel", "ssd_apply", "init_ssd_cache", "ssd_chunked", "segsum"]
+
+
+def ssd_skel(cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.num_heads(d)
+    conv_ch = din + 2 * s.ngroups * s.d_state
+    proj_out = 2 * din + 2 * s.ngroups * s.d_state + nh
+    return {
+        "in_proj": ParamDef((d, proj_out), ("embed", "ffn"), "scaled"),
+        "conv_w": ParamDef((s.conv_width, conv_ch), (None, "ffn"), "scaled", scale=0.1),
+        "dt_bias": ParamDef((nh,), (None,), "zeros"),
+        "A_log": ParamDef((nh,), (None,), "normal", scale=0.5),
+        "D": ParamDef((nh,), (None,), "ones"),
+        "norm": ParamDef((din,), ("ffn",), "zeros"),
+        "out_proj": ParamDef((din, d), ("ffn", "embed"), "scaled"),
+    }
+
+
+def init_ssd_cache(batch: int, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.num_heads(cfg.d_model)
+    conv_ch = din + 2 * s.ngroups * s.d_state
+    return {
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k],
+    -inf above the diagonal.  x: (..., L) -> (..., L, L)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, S, H, P)  — pre-multiplied by dt
+    A: jax.Array,       # (B, S, H)     — A * dt  (negative)
+    Bm: jax.Array,      # (B, S, G, N)
+    Cm: jax.Array,      # (B, S, G, N)
+    chunk: int,
+    h0: Optional[jax.Array] = None,  # (B, H, P, N)
+    head_spec=None,     # P(batch, None, 'model', None) for (B,S,H,P)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  Returns (y (B,S,H,P), final_state (B,H,P,N)).
+
+    ngroups=1 assumed (Bm/Cm broadcast over heads).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    if head_spec is not None:
+        x = lax.with_sharding_constraint(x, head_spec)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        A = jnp.pad(A, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    L = x.shape[1]
+    nc = L // chunk
+
+    xc = x.reshape(Bsz, nc, chunk, H, P)
+    Ac = A.reshape(Bsz, nc, chunk, H).transpose(0, 3, 1, 2)     # (B,H,c,l)
+    Bc = Bm.reshape(Bsz, nc, chunk, -1, N)
+    Cc = Cm.reshape(Bsz, nc, chunk, -1, N)
+    Ac = Ac.astype(jnp.float32)
+
+    if head_spec is not None:
+        # decay tensors carry the head dim in axis 1: (B, H, c, l)
+        hs = list(head_spec)
+        Ac = lax.with_sharding_constraint(Ac, type(head_spec)(hs[0], hs[2], None, None))
+    A_cum = jnp.cumsum(Ac, axis=-1)                              # (B,H,c,l)
+
+    # 1) intra-chunk (diagonal blocks)
+    Ldec = jnp.exp(segsum(Ac))                                   # (B,H,c,l,l)
+    Y_diag = jnp.einsum(
+        "bclgn,bcsgn,bhcls,bcshp->bclhp", Cc, Bc, Ldec.astype(x.dtype), xc
+    )
+
+    # 2) chunk states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)              # (B,H,c,l)
+    states = jnp.einsum(
+        "bclgn,bhcl,bclhp->bchpn", Bc, decay_states.astype(x.dtype), xc
+    )
+
+    # 3) inter-chunk recurrence: associative scan over (decay, state) pairs
+    # (log-depth; counted exactly by XLA cost analysis, unlike a while loop)
+    chunk_decay = jnp.exp(A_cum[..., -1]).astype(x.dtype)        # (B,H,c)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    dec_c = jnp.moveaxis(chunk_decay, -1, 1)[..., None, None]    # (B,c,H,1,1)
+    st_c = states                                                # (B,c,H,P,N)
+    # fold h0 into the first element: state_0' = dec_0 * h0 + st_0
+    st_c = st_c.at[:, 0].add(dec_c[:, 0] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_inclusive = lax.associative_scan(
+        combine, (jnp.broadcast_to(dec_c, st_c.shape), st_c), axis=1
+    )
+    h_final = h_inclusive[:, -1]
+    # h_prev[c] = state entering chunk c (exclusive): shift right, seed h0
+    h_prev = jnp.concatenate([h0[:, None], h_inclusive[:, :-1]], axis=1)
+
+    # 4) inter-chunk output
+    state_decay_out = jnp.exp(A_cum)                             # (B,H,c,l)
+    Y_off = jnp.einsum(
+        "bclgn,bchpn,bhcl->bclhp", Cc, h_prev, state_decay_out.astype(x.dtype)
+    )
+
+    y = (Y_diag + Y_off).reshape(Bsz, L, H, P)[:, :S]
+    return y, h_final
+
+
+def ssd_apply(
+    params: dict,
+    xin: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: Optional[dict] = None,
+    head_spec=None,
+) -> tuple[jax.Array, Optional[dict]]:
+    """Full Mamba-2 block.  xin: (B, S, d)."""
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.num_heads(d)
+    N, G, P = s.d_state, s.ngroups, s.head_dim
+    B_, S, _ = xin.shape
+
+    zxbcdt = xin @ params["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (nh,) negative
+
+    new_conv = None
+    if cache is None or S > 1:
+        xbc_conv = jax.nn.silu(causal_conv1d(xbc, params["conv_w"]))
+        if cache is not None:
+            tail = xbc[:, -(s.conv_width - 1):]
+            padn = (s.conv_width - 1) - tail.shape[1]
+            if padn > 0:
+                tail = jnp.pad(tail, ((0, 0), (padn, 0), (0, 0)))
+            new_conv = tail
+    else:
+        y_t, new_conv = conv1d_step(xbc[:, 0], cache["conv"], params["conv_w"])
+        xbc_conv = jax.nn.silu(y_t)[:, None]
+
+    x, Bm, Cm = jnp.split(xbc_conv, [din, din + G * N], axis=-1)
+    x = x.reshape(B_, S, nh, P)
+    Bm = Bm.reshape(B_, S, G, N)
+    Cm = Cm.reshape(B_, S, G, N)
+
+    if cache is None or S > 1:
+        h0 = cache["ssm"].astype(x.dtype) if cache is not None else None
+        y, h_final = ssd_chunked(
+            x * dt[..., None].astype(x.dtype), A[None, None] * dt, Bm, Cm,
+            s.chunk_size, h0, head_spec=head_spec,
+        )
+        new_cache = None
+        if cache is not None:
+            new_cache = {"ssm": h_final.astype(jnp.float32), "conv": new_conv}
+    else:
+        # decode: h' = h * exp(A dt) + (dt x) B^T ; y = C h
+        h = cache["ssm"]                                         # (B,H,P,N)
+        dt0 = dt[:, 0]                                           # (B,H)
+        decay = jnp.exp(A[None] * dt0)                           # (B,H)
+        xdt = (x[:, 0] * dt0[..., None]).astype(jnp.float32)     # (B,H,P)
+        Bn = Bm[:, 0, 0].astype(jnp.float32)                     # (B,N) (G=1)
+        h = h * decay[..., None, None] + jnp.einsum("bhp,bn->bhpn", xdt, Bn)
+        Cn = Cm[:, 0, 0].astype(jnp.float32)
+        y = jnp.einsum("bhpn,bn->bhp", h, Cn)[:, None].astype(x.dtype)
+        new_cache = {"ssm": h, "conv": new_conv}
+
+    y = y + params["D"].astype(x.dtype)[None, None, :, None] * x
+    y = y.reshape(B_, S, din)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"], cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

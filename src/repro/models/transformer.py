@@ -1,0 +1,295 @@
+"""Decoder stack assembly: layer skeletons, scan-over-layers, caches.
+
+Layer kinds:
+  attn   — (MLA or GQA) attention + (FFN | MoE) with pre-RMSNorm residuals
+  rglru  — RG-LRU recurrent block + FFN
+  ssd    — Mamba-2 mixer only (no separate FFN; d_ff = 0)
+
+Uniform stacks scan over layer-stacked params (compact HLO: one layer body
+compiled once).  Non-uniform stacks (DeepSeek first-3-dense, Griffin
+2:1 pattern) scan over the repeating unit and unroll the remainder.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ModelConfig
+from .attention import attention_apply, attention_skel, init_kv_cache
+from .common import ParamDef, prepend_axis, rms_norm
+from .ffn import ffn_apply, ffn_skel
+from .mla import init_mla_cache, mla_apply, mla_skel
+from .moe import moe_apply, moe_skel
+from .rglru import init_rglru_cache, rglru_apply, rglru_skel
+from .ssd import init_ssd_cache, ssd_apply, ssd_skel
+
+__all__ = ["layer_plan", "stack_skel", "stack_apply", "stack_init_cache"]
+
+
+# ------------------------------------------------------------------ planning
+def layer_plan(cfg: ModelConfig) -> list[tuple[str, str, int]]:
+    """Group layers into (group_name, kind, count) units.
+
+    Uniform archs -> one scanned group.  DeepSeek -> dense(3) + moe(58).
+    Hybrid -> scanned pattern blocks + unrolled tail.
+    """
+    L = cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.layer_pattern
+        n_blocks, tail = divmod(L, len(pat))
+        plan = [("blocks", "pattern", n_blocks)]
+        if tail:
+            plan.append(("tail", "pattern_tail", tail))
+        return plan
+    if cfg.moe is not None and cfg.moe.first_dense_layers:
+        nd = cfg.moe.first_dense_layers
+        return [("dense_layers", "attn_ffn", nd), ("moe_layers", "attn_moe", L - nd)]
+    if cfg.ssm is not None:
+        return [("layers", "ssd", L)]
+    if cfg.moe is not None:
+        return [("layers", "attn_moe", L)]
+    return [("layers", "attn_ffn", L)]
+
+
+def _mixer_skel(cfg: ModelConfig, kind: str) -> dict:
+    if kind == "ssd":
+        return ssd_skel(cfg)
+    if kind == "rglru":
+        return rglru_skel(cfg)
+    if cfg.attn_type == "mla":
+        return mla_skel(cfg)
+    return attention_skel(cfg)
+
+
+def _single_layer_skel(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    norm = lambda: ParamDef((d,), ("embed",), "zeros")
+    if kind == "ssd":
+        return {"norm1": norm(), "mixer": _mixer_skel(cfg, "ssd")}
+    mixer_kind = "rglru" if kind == "rglru" else "attn"
+    skel = {"norm1": norm(), "mixer": _mixer_skel(cfg, mixer_kind), "norm2": norm()}
+    if kind == "attn_moe":
+        skel["mlp"] = moe_skel(cfg)
+    else:
+        dff = cfg.d_ff
+        if kind == "attn_ffn" and cfg.moe is not None and cfg.moe.dense_d_ff:
+            dff = cfg.moe.dense_d_ff
+        skel["mlp"] = ffn_skel(d, dff)
+    return skel
+
+
+def _pattern_block_skel(cfg: ModelConfig, kinds: tuple[str, ...]) -> dict:
+    out = {}
+    for i, k in enumerate(kinds):
+        lk = "attn_ffn" if k == "attn" else "rglru"
+        out[f"l{i}_{k}"] = _single_layer_skel(cfg, lk)
+    return out
+
+
+def stack_skel(cfg: ModelConfig) -> dict:
+    """Skeleton for all decoder layers, grouped per the plan."""
+    skel: dict[str, Any] = {}
+    for group, kind, count in layer_plan(cfg):
+        if kind == "pattern":
+            block = _pattern_block_skel(cfg, cfg.layer_pattern)
+            skel[group] = prepend_axis(block, count) if cfg.scan_layers else [
+                _pattern_block_skel(cfg, cfg.layer_pattern) for _ in range(count)
+            ]
+        elif kind == "pattern_tail":
+            tail_kinds = cfg.layer_pattern[: count]
+            skel[group] = _pattern_block_skel(cfg, tail_kinds)
+        else:
+            layer = _single_layer_skel(cfg, kind)
+            skel[group] = prepend_axis(layer, count) if cfg.scan_layers else [
+                _single_layer_skel(cfg, kind) for _ in range(count)
+            ]
+    return skel
+
+
+# ------------------------------------------------------------------- caches
+def _single_layer_cache(cfg: ModelConfig, kind: str, batch: int, capacity: int,
+                        dtype) -> Optional[dict]:
+    if kind == "ssd":
+        return init_ssd_cache(batch, cfg, dtype)
+    if kind == "rglru":
+        return init_rglru_cache(batch, cfg, dtype)
+    if cfg.attn_type == "mla":
+        return init_mla_cache(batch, capacity, cfg, dtype)
+    cap = min(capacity, cfg.local_window) if cfg.local_window else capacity
+    return init_kv_cache(batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype)
+
+
+def stack_init_cache(cfg: ModelConfig, batch: int, capacity: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Decode cache pytree, grouped to mirror the param skeleton (stacked
+    leading layer dim for scanned groups)."""
+    cache: dict[str, Any] = {}
+    for group, kind, count in layer_plan(cfg):
+        if kind in ("pattern", "pattern_tail"):
+            kinds = cfg.layer_pattern if kind == "pattern" else cfg.layer_pattern[:count]
+            block = {
+                f"l{i}_{k}": _single_layer_cache(
+                    cfg, "rglru" if k == "rglru" else "attn", batch, capacity, dtype
+                )
+                for i, k in enumerate(kinds)
+            }
+            if kind == "pattern":
+                cache[group] = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (count, *x.shape)).copy(), block
+                )
+            else:
+                cache[group] = block
+        else:
+            lk = "ssd" if kind == "ssd" else "attn"
+            one = _single_layer_cache(cfg, lk, batch, capacity, dtype)
+            cache[group] = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (count, *x.shape)).copy(), one
+            )
+    return cache
+
+
+# ------------------------------------------------------------------ forward
+@dataclasses.dataclass
+class LayerCtx:
+    cfg: ModelConfig
+    sin: jax.Array
+    cos: jax.Array
+    position: Optional[jax.Array] = None     # (B,) decode position
+    moe_impl: str = "einsum"
+    triangular: bool = False
+    # statically unroll inner chunk loops (exact XLA cost accounting)
+    static: bool = False
+    # activation sharding constraint (B, S, d), applied at every layer entry
+    # so GSPMD keeps batch on the data axes through the scanned stack
+    act_spec: Optional[Any] = None
+    # (B, S, H, D) constraint for attention/SSD internals (heads on 'model')
+    head_spec: Optional[Any] = None
+
+
+def _apply_layer(kind: str, params: dict, x: jax.Array, ctx: LayerCtx,
+                 cache: Optional[dict]):
+    cfg = ctx.cfg
+    if ctx.act_spec is not None:
+        x = lax.with_sharding_constraint(x, ctx.act_spec)
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssd":
+        h, new_cache = ssd_apply(
+            params["mixer"], rms_norm(x, params["norm1"], cfg.norm_eps), cfg,
+            cache=cache, head_spec=ctx.head_spec,
+        )
+        return x + h, new_cache, aux
+    if kind == "rglru":
+        h, new_cache = rglru_apply(
+            params["mixer"], rms_norm(x, params["norm1"], cfg.norm_eps), cfg,
+            cache=cache,
+        )
+        x = x + h
+    else:  # attention
+        window = cfg.local_window
+        xn = rms_norm(x, params["norm1"], cfg.norm_eps)
+        if cfg.attn_type == "mla":
+            h, new_cache = mla_apply(
+                params["mixer"], xn, cfg, ctx.sin, ctx.cos,
+                cache=cache, position=ctx.position, static=ctx.static,
+                head_spec=ctx.head_spec,
+            )
+        else:
+            h, new_cache = attention_apply(
+                params["mixer"], xn, cfg, ctx.sin, ctx.cos,
+                cache=cache, position=ctx.position, window=window,
+                triangular=ctx.triangular, static=ctx.static,
+                head_spec=ctx.head_spec,
+            )
+        x = x + h
+    xn = rms_norm(x, params["norm2"], cfg.norm_eps)
+    if kind == "attn_moe":
+        h, aux = moe_apply(params["mlp"], xn, cfg, impl=ctx.moe_impl,
+                           static=ctx.static)
+    else:
+        h = ffn_apply(params["mlp"], xn)
+    return x + h, new_cache, aux
+
+
+def _apply_pattern_block(params: dict, x: jax.Array, ctx: LayerCtx,
+                         cache: Optional[dict], kinds: tuple[str, ...]):
+    new_cache = {} if cache is not None else None
+    aux = jnp.zeros((), jnp.float32)
+    for i, k in enumerate(kinds):
+        key = f"l{i}_{k}"
+        lk = "attn_ffn" if k == "attn" else "rglru"
+        c = cache[key] if cache is not None else None
+        x, nc, a = _apply_layer(lk, params[key], x, ctx, c)
+        if new_cache is not None:
+            new_cache[key] = nc
+        aux = aux + a
+    return x, new_cache, aux
+
+
+def stack_apply(
+    params: dict,
+    x: jax.Array,
+    ctx: LayerCtx,
+    cache: Optional[dict] = None,
+) -> tuple[jax.Array, Optional[dict], jax.Array]:
+    """Run all decoder layers.  Returns (hidden, new_cache, moe_aux_loss)."""
+    cfg = ctx.cfg
+    total_aux = jnp.zeros((), jnp.float32)
+    new_cache: Optional[dict] = {} if cache is not None else None
+
+    for group, kind, count in layer_plan(cfg):
+        gparams = params[group]
+        gcache = cache[group] if cache is not None else None
+
+        if kind == "pattern_tail":
+            kinds = cfg.layer_pattern[:count]
+            x, nc, aux = _apply_pattern_block(gparams, x, ctx, gcache, kinds)
+            total_aux += aux
+            if new_cache is not None:
+                new_cache[group] = nc
+            continue
+
+        kinds = cfg.layer_pattern if kind == "pattern" else None
+
+        if not cfg.scan_layers:
+            # match the scanned body's remat semantics so unrolled variants
+            # (dry-run cost extrapolation) count the same recompute FLOPs
+            def one_layer(lp, h, lc):
+                if kind == "pattern":
+                    return _apply_pattern_block(lp, h, ctx, lc, kinds)
+                return _apply_layer(kind, lp, h, ctx, lc)
+
+            layer_fn = jax.checkpoint(one_layer) if cfg.remat else one_layer
+            ncs = []
+            for i in range(count):
+                lc = (jax.tree.map(lambda t: t[i], gcache)
+                      if gcache is not None else None)
+                lp = gparams[i] if isinstance(gparams, list) else jax.tree.map(
+                    lambda t: t[i], gparams)
+                x, nc, aux = layer_fn(lp, x, lc)
+                total_aux += aux
+                ncs.append(nc)
+            if new_cache is not None:
+                new_cache[group] = jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+            continue
+
+        def body(carry, scanned):
+            h, aux_acc = carry
+            lp, lc = scanned
+            if kind == "pattern":
+                h, nc, aux = _apply_pattern_block(lp, h, ctx, lc, kinds)
+            else:
+                h, nc, aux = _apply_layer(kind, lp, h, ctx, lc)
+            return (h, aux_acc + aux), nc
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        (x, total_aux), nc_stack = lax.scan(
+            body_fn, (x, total_aux), (gparams, gcache)
+        )
+        if new_cache is not None:
+            new_cache[group] = nc_stack
+
+    return x, new_cache, total_aux

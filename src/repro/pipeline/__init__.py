@@ -1,0 +1,4 @@
+"""repro.pipeline — GPipe-style pipeline parallelism (shard_map + ppermute)."""
+from .gpipe import PipelineConfig, pipeline_forward
+
+__all__ = ["PipelineConfig", "pipeline_forward"]

@@ -1,0 +1,8 @@
+"""repro.serving — batched serving engine + speculative-execution bridge."""
+from .engine import EngineConfig, GenerationResult, ServingEngine
+from .spec_bridge import EngineOp, SpeculativeEdgeResult, ThreadedSpeculativeRunner
+
+__all__ = [
+    "ServingEngine", "EngineConfig", "GenerationResult",
+    "EngineOp", "ThreadedSpeculativeRunner", "SpeculativeEdgeResult",
+]

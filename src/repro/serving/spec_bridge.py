@@ -1,0 +1,172 @@
+"""Bridge between the paper's speculative runtime and the serving engine.
+
+``EngineOp`` makes a real model call (via ServingEngine) a workflow vertex:
+the op's ``run`` prefixes the (tokenized) input and generates; streaming
+chunks are real decode chunks; cancellation is real (the engine stops
+between chunks).  ``ThreadedSpeculativeRunner`` executes a two-op edge
+with genuine wall-clock overlap: the speculative downstream runs in a
+thread while the upstream generates — the latency reclaimed is measured,
+not simulated (examples/speculative_serving.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from ..core.decision import Decision, DecisionInputs, evaluate
+from ..core.posterior import BetaPosterior
+from ..core.pricing import TwoRateTokenCost, get_pricing
+from ..core.streaming import fractional_waste
+from ..core.success import TierPolicy, check_success
+from ..core.workflow import Operation
+from .engine import GenerationResult, ServingEngine
+
+__all__ = ["EngineOp", "SpeculativeEdgeResult", "ThreadedSpeculativeRunner", "toy_tokenize"]
+
+
+def toy_tokenize(text: str, vocab: int, length: int = 32) -> list[int]:
+    """Deterministic toy tokenizer (hash per word) — the modality frontend
+    of the serving examples; real deployments plug a real tokenizer."""
+    import zlib
+
+    toks = [3 + (zlib.crc32(w.encode()) % (vocab - 3))
+            for w in str(text).split()][:length]
+    return toks or [3]
+
+
+@dataclasses.dataclass
+class EngineOp:
+    """A workflow Operation backed by a real serving engine."""
+
+    name: str
+    engine: ServingEngine
+    max_new_tokens: int = 32
+    provider: str = "paper"
+    model: str = "frontier-default"
+    postprocess: Callable[[list[int]], Any] = lambda toks: toks
+
+    def operation(self, latency_est_s: float = 1.0) -> Operation:
+        return Operation(
+            name=self.name,
+            run=self.run,
+            provider=self.provider,
+            model=self.model,
+            input_tokens_est=32,
+            output_tokens_est=self.max_new_tokens,
+            latency_est_s=latency_est_s,
+        )
+
+    def run(self, upstream_output: Any,
+            cancel_event: Optional[threading.Event] = None) -> Any:
+        prompt = toy_tokenize(upstream_output, self.engine.model_cfg.vocab_size)
+        result = self.engine.generate(
+            prompt, self.max_new_tokens, cancel_event=cancel_event)
+        return self.postprocess(result.tokens), result
+
+
+@dataclasses.dataclass
+class SpeculativeEdgeResult:
+    committed: bool
+    cancelled: bool
+    wall_time_s: float
+    sequential_wall_time_s: float
+    latency_saved_s: float
+    waste_usd: float
+    upstream_output: Any
+    downstream_output: Any
+    i_hat: Any
+
+
+class ThreadedSpeculativeRunner:
+    """Execute one (upstream, downstream) edge with REAL overlap.
+
+    The downstream launches in a worker thread against the predicted input
+    i_hat while the upstream generates on the main thread.  On upstream
+    completion the tier check decides commit / cancel+re-execute, exactly
+    the D1 mechanics, with wall-clock (not simulated) latency.
+    """
+
+    def __init__(
+        self,
+        upstream: Callable[[], tuple[Any, GenerationResult]],
+        downstream: EngineOp,
+        tier_policy: TierPolicy | None = None,
+    ) -> None:
+        self.upstream = upstream
+        self.downstream = downstream
+        self.tier_policy = tier_policy or TierPolicy()
+
+    def run_speculative(self, i_hat: Any) -> SpeculativeEdgeResult:
+        cancel = threading.Event()
+        result_box: dict[str, Any] = {}
+
+        def worker():
+            result_box["out"] = self.downstream.run(i_hat, cancel_event=cancel)
+
+        t0 = time.perf_counter()
+        th = threading.Thread(target=worker)
+        th.start()
+        upstream_out, up_res = self.upstream()
+        t_up = time.perf_counter() - t0
+
+        check = check_success(upstream_out, i_hat, self.tier_policy)
+        if check.success:
+            th.join()
+            out, gen = result_box["out"]
+            wall = time.perf_counter() - t0
+            seq = t_up + gen.wall_time_s
+            pricing = get_pricing(self.downstream.provider, self.downstream.model)
+            return SpeculativeEdgeResult(
+                committed=True, cancelled=False, wall_time_s=wall,
+                sequential_wall_time_s=seq,
+                latency_saved_s=max(0.0, seq - wall), waste_usd=0.0,
+                upstream_output=upstream_out, downstream_output=out,
+                i_hat=i_hat,
+            )
+        # tier failure: cancel mid-stream and re-execute with the real input
+        cancel.set()
+        th.join()
+        _, spec_gen = result_box["out"]
+        pricing = get_pricing(self.downstream.provider, self.downstream.model)
+        cm = TwoRateTokenCost.from_entry(pricing)
+        waste = fractional_waste(
+            cm, 32, self.downstream.max_new_tokens, spec_gen.tokens_generated)
+        out, gen = self.downstream.run(upstream_out)
+        wall = time.perf_counter() - t0
+        seq = t_up + gen.wall_time_s
+        return SpeculativeEdgeResult(
+            committed=False, cancelled=spec_gen.cancelled, wall_time_s=wall,
+            sequential_wall_time_s=seq, latency_saved_s=0.0,
+            waste_usd=waste, upstream_output=upstream_out,
+            downstream_output=out, i_hat=i_hat,
+        )
+
+    def run_sequential(self) -> SpeculativeEdgeResult:
+        t0 = time.perf_counter()
+        upstream_out, _ = self.upstream()
+        out, gen = self.downstream.run(upstream_out)
+        wall = time.perf_counter() - t0
+        return SpeculativeEdgeResult(
+            committed=False, cancelled=False, wall_time_s=wall,
+            sequential_wall_time_s=wall, latency_saved_s=0.0, waste_usd=0.0,
+            upstream_output=upstream_out, downstream_output=out, i_hat=None,
+        )
+
+    def decide(self, posterior: BetaPosterior, alpha: float,
+               lambda_usd_per_s: float, latency_savings_s: float) -> Decision:
+        pricing = get_pricing(self.downstream.provider, self.downstream.model)
+        res = evaluate(DecisionInputs(
+            P=posterior.mean,
+            alpha=alpha,
+            lambda_usd_per_s=lambda_usd_per_s,
+            latency_seconds=latency_savings_s,
+            input_tokens=32,
+            output_tokens=self.downstream.max_new_tokens,
+            input_price=pricing.input_price_per_token,
+            output_price=pricing.output_price_per_token,
+        ))
+        return res.decision

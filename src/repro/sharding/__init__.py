@@ -1,0 +1,14 @@
+"""repro.sharding — logical-axis sharding rules and helpers."""
+from .rules import (
+    batch_spec,
+    cache_spec_tree,
+    constrain,
+    named_sharding_tree,
+    param_rules,
+    shard_if_divisible,
+)
+
+__all__ = [
+    "param_rules", "batch_spec", "shard_if_divisible", "constrain",
+    "named_sharding_tree", "cache_spec_tree",
+]

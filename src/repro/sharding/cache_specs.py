@@ -1,0 +1,63 @@
+"""Decode-cache sharding specs, dispatched on leaf name + rank.
+
+Cache pytrees mirror the parameter skeleton: scanned layer groups stack a
+leading L dim on every leaf (never sharded); the tail/hybrid groups carry
+unstacked leaves.  Per leaf kind:
+
+  k/v     (.., B, C, Hkv, D)  batch -> data, capacity -> model (sequence-
+                              parallel KV cache; updates are masked
+                              elementwise writes, so everything along C is
+                              local and softmax needs only stat reductions)
+  ckv     (.., B, C, r)       MLA latent: capacity -> model (the expansion
+  k_rope  (.., B, C, dr)      matmul is local along C)
+  pos     (.., B, C)          batch -> data, capacity -> model
+  ssm     (.., B, H, P, N)    batch -> data, heads -> model
+  conv    (.., B, W-1, ch)    batch -> data, channels -> model
+  h       (.., B, W)          batch -> data, width -> model
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .rules import shard_if_divisible
+
+__all__ = ["cache_pspecs"]
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if hasattr(entry, "key"):
+            return str(entry.key)
+    return ""
+
+
+def cache_pspecs(cache: Any, mesh: Mesh) -> Any:
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def spec(path, x) -> P:
+        name = _leaf_name(path)
+        rank = len(x.shape)
+        if name in ("k", "v"):          # (.., B, C, Hkv, D)
+            dims = [None] * (rank - 4) + [data_axes, "model", None, None]
+        elif name in ("ckv", "k_rope"):  # (.., B, C, r)
+            dims = [None] * (rank - 3) + [data_axes, "model", None]
+        elif name == "pos":             # (.., B, C)
+            dims = [None] * (rank - 2) + [data_axes, "model"]
+        elif name == "ssm":             # (.., B, H, P, N)
+            dims = [None] * (rank - 4) + [data_axes, "model", None, None]
+        elif name == "conv":            # (.., B, W-1, ch)
+            dims = [None] * (rank - 3) + [data_axes, None, "model"]
+        elif name == "h":               # (.., B, W)
+            dims = [None] * (rank - 2) + [data_axes, "model"]
+        else:
+            dims = [None] * rank
+            if rank >= 2:
+                dims[-2] = data_axes
+        # uneven kv-head sharding is fine for constraints, but explicit
+        # in/out shardings must divide — drop what doesn't
+        return shard_if_divisible(x.shape, P(*dims), mesh)
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,45 @@
+"""Sharding specs for optimizer state: moments mirror their parameter's
+spec exactly (no resharding between grad and update); Adafactor's factored
+stats drop the reduced dim's axis."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["opt_state_pspecs"]
+
+
+def _pad(spec: P, ndim: int) -> tuple:
+    t = tuple(spec)
+    return t + (None,) * (ndim - len(t))
+
+
+def opt_state_pspecs(opt_abstract: Any, param_pspecs: Any, kind: str) -> Any:
+    """Build a spec tree matching the optimizer state structure."""
+    if kind == "adamw":
+        return {
+            "m": param_pspecs,
+            "v": param_pspecs,
+            "step": P(),
+        }
+    if kind == "adafactor":
+        def stat_spec(stat_abstract, pspec):
+            if "vr" in stat_abstract:
+                vr_ndim = len(stat_abstract["vr"].shape)
+                t = _pad(pspec, vr_ndim + 1)
+                return {
+                    "vr": P(*t[:-1]),                 # param spec minus last dim
+                    "vc": P(*t[:-2], t[-1]),          # minus second-to-last
+                }
+            return {"v": pspec}
+
+        is_stat = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        stats = jax.tree.map(
+            stat_spec, opt_abstract["stats"], param_pspecs, is_leaf=is_stat
+        )
+        return {"stats": stats, "step": P()}
+    if kind == "sgd":
+        return {"step": P()}
+    raise ValueError(f"unknown optimizer kind {kind!r}")

@@ -1,0 +1,120 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Parameters carry logical axis names (ParamDef.axes); these rules map them
+onto the production mesh.  The default is 2D "FSDP x TP" sharding:
+tensor-parallel dims on ``model``, the embed (d_model) dim on ``data`` —
+so giant models (DeepSeek-V3 1.34 TB bf16) divide across all 256 chips of
+a pod, and gradient/optimizer state inherits the same 256-way split.
+
+Per-tensor divisibility is enforced by ``shard_if_divisible``: any dim not
+divisible by its mesh-axis extent falls back to replication (e.g. batch=1
+for long_500k).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+__all__ = [
+    "param_rules",
+    "batch_spec",
+    "shard_if_divisible",
+    "constrain",
+    "named_sharding_tree",
+    "cache_spec_tree",
+]
+
+
+def param_rules(cfg: ModelConfig, *, fsdp: bool = True) -> dict[Optional[str], Any]:
+    """Logical-axis rules for parameters (and grads/optimizer state).
+
+    fsdp=True  -> 2D sharding: TP dims on 'model', d_model on 'data'.
+    fsdp=False -> pure TP: params replicated across 'data' (serving-style
+                  for small models; a §Perf hillclimb lever).
+    """
+    rules: dict[Optional[str], Any] = {
+        None: None,
+        "vocab": "model",
+        "q_heads": "model",
+        "kv_heads": "model",
+        "ffn": "model",
+        "expert": "model",
+        "layers": None,
+        "codebook": None,
+        "q_lora": None,
+        "embed": "data" if fsdp else None,
+        "expert_ffn": "data" if not fsdp else None,
+    }
+    # expert tensors (E, d, ff): E->model + d->data is already a 256-way
+    # split; expert_ffn stays unsharded in fsdp mode.
+    return rules
+
+
+def shard_if_divisible(shape: tuple[int, ...], spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes whose extent does not divide the dim (fall back to
+    replication for that dim)."""
+    out = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = axes if isinstance(axes, tuple) else (axes,)
+        extent = math.prod(mesh.shape[a] for a in axes_t)
+        out.append(axes if dim % extent == 0 else None)
+    return P(*out)
+
+
+def _sanitize_tree(abstract: Any, specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda a, s: shard_if_divisible(a.shape, s, mesh), abstract, specs
+    )
+
+
+def named_sharding_tree(abstract: Any, specs: Any, mesh: Mesh) -> Any:
+    specs = _sanitize_tree(abstract, specs, mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_spec(mesh: Mesh, batch: int, *, extra_dims: int = 1) -> P:
+    """Input batch sharding over the data axes ('pod' + 'data' when
+    present), replicating if indivisible (long_500k batch=1)."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    extent = math.prod(mesh.shape[a] for a in data_axes)
+    first = data_axes if batch % extent == 0 else None
+    return P(first, *([None] * extra_dims))
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint under the ambient mesh."""
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def cache_spec_tree(cache: Any, mesh: Mesh, *, seq_axis_on_model: bool = True) -> Any:
+    """Sharding specs for a decode-cache pytree.
+
+    KV caches (B, C, H, D) shard batch over data and the sequence/capacity
+    dim over 'model' (sequence-parallel KV cache — this is what lets a
+    128 x 32k x 60-layer bf16 cache fit 16 GB chips).  Recurrent states
+    (B, ...) shard batch over data and heads/width over model.
+    """
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def spec_for(x) -> P:
+        shape = x.shape
+        dims: list[Any] = [None] * len(shape)
+        if len(shape) >= 1:
+            dims[0] = data_axes  # batch
+        if len(shape) >= 3 and seq_axis_on_model:
+            dims[1] = "model"    # capacity / sequence dim
+        elif len(shape) == 2 and shape[1] > 1:
+            dims[1] = "model"    # recurrent width
+        if len(shape) == 4 and not seq_axis_on_model:
+            dims[2] = "model"
+        return shard_if_divisible(shape, P(*dims), mesh)
+
+    return jax.tree.map(spec_for, cache)

@@ -1,0 +1,4 @@
+"""repro.training — optimizers, data pipeline, trainer."""
+from .optimizer import Optimizer, OptimizerConfig, make_optimizer
+
+__all__ = ["Optimizer", "OptimizerConfig", "make_optimizer"]

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward /
+train step on CPU asserting output shapes + no NaNs, plus a prefill+decode
+consistency check.  (Full configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import REGISTRY
+from repro.models import build_model
+
+ARCHS = sorted(REGISTRY)
+
+
+def make_batch(cfg, B=2, S=48, key=1):
+    kd = (B, S, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B, S)
+    batch = {"tokens": jax.random.randint(jax.random.key(key), kd, 0,
+                                          cfg.vocab_size)}
+    if cfg.vision_tokens:
+        batch["vision_embeds"] = 0.01 * jnp.ones((B, cfg.vision_tokens,
+                                                  cfg.d_model), jnp.float32)
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(S)[None, None, :], (3, B, S)).astype(jnp.int32)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def smoke(request):
+    return None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_loss(arch):
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    logits = model.logits(params, batch)
+    want = (2, 48, cfg.num_codebooks, cfg.vocab_size) if cfg.num_codebooks > 1 \
+        else (2, 48, cfg.vocab_size)
+    assert logits.shape == want
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    """One SGD step moves the loss (grads flow through every block)."""
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_batch(cfg, S=32)
+
+    def loss_fn(p):
+        return model.loss(p, batch)[0]
+
+    loss0, grads = jax.value_and_grad(loss_fn)(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0, f"{arch}: dead gradients"
+    params2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype), params, grads)
+    loss1 = loss_fn(params2)
+    assert jnp.isfinite(loss1)
+    assert float(loss1) < float(loss0), f"{arch}: step did not descend"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    """Prefill + per-token decode reproduces the full forward logits."""
+    cfg = REGISTRY[arch].reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 16
+    batch = make_batch(cfg, B=B, S=S, key=2)
+    if cfg.vision_tokens:   # decode path: drop frontend stub for simplicity
+        batch.pop("positions")
+        full = model.logits(params, batch)
+    else:
+        full = model.logits(params, batch)
+    cache = model.init_cache(B, 32, dtype=jnp.float32)
+    prefix = {k: (v[:, : S - 2] if k == "tokens" else v) for k, v in batch.items()}
+    _, cache = model.prefill(params, prefix, cache)
+    errs = []
+    for t in range(S - 2, S):
+        tok = batch["tokens"][:, t][:, None] if cfg.num_codebooks == 1 \
+            else batch["tokens"][:, t][:, None, :]
+        logits, cache = model.decode_step(
+            params, tok, cache, jnp.full((B,), t, jnp.int32))
+        errs.append(float(jnp.abs(full[:, t : t + 1] - logits).max()))
+    assert max(errs) < 2e-4, f"{arch}: decode diverges {errs}"
+
+
+def test_full_configs_match_assignment():
+    """The registry carries the exact assigned hyperparameters."""
+    spec = {
+        "qwen2-vl-72b": (80, 8192, 64, 8, 29568, 152064),
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }
+    for arch, (L, d, H, kv, ff, V) in spec.items():
+        c = REGISTRY[arch]
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads,
+                c.d_ff, c.vocab_size) == (L, d, H, kv, ff, V), arch
+    # MoE specifics
+    assert REGISTRY["arctic-480b"].moe.num_experts == 128
+    assert REGISTRY["arctic-480b"].moe.top_k == 2
+    assert REGISTRY["arctic-480b"].moe.dense_residual
+    ds = REGISTRY["deepseek-v3-671b"]
+    assert ds.moe.num_experts == 256 and ds.moe.top_k == 8
+    assert ds.moe.num_shared_experts == 1 and ds.attn_type == "mla"
+    assert ds.mtp_depth == 1
+    assert REGISTRY["mamba2-1.3b"].ssm.d_state == 128
+    assert REGISTRY["recurrentgemma-9b"].layer_pattern == ("rglru", "rglru", "attn")
+    assert REGISTRY["musicgen-medium"].num_codebooks == 4
+    # sub-quadratic flags drive the long_500k skip table (DESIGN.md §5)
+    assert REGISTRY["mamba2-1.3b"].sub_quadratic
+    assert REGISTRY["recurrentgemma-9b"].sub_quadratic
+    assert sum(c.sub_quadratic for c in REGISTRY.values()) == 2
+
+
+def test_param_counts_near_names():
+    """Parameter counts land near the model names."""
+    expect = {
+        "qwen2-vl-72b": 72.7e9, "llama3.2-1b": 1.24e9, "yi-34b": 34.4e9,
+        "qwen2.5-32b": 32.8e9, "arctic-480b": 477e9,
+        "deepseek-v3-671b": 671e9, "recurrentgemma-9b": 8.5e9,
+        "musicgen-medium": 1.8e9, "mamba2-1.3b": 1.34e9,
+    }
+    for arch, n in expect.items():
+        got = REGISTRY[arch].param_count()
+        assert abs(got - n) / n < 0.15, f"{arch}: {got/1e9:.1f}B vs {n/1e9:.1f}B"

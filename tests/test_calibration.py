@@ -1,0 +1,235 @@
+"""§12 calibration pipeline + §12.5 drift kill-switch + App. C telemetry."""
+import numpy as np
+import pytest
+
+from repro.core.calibration import (
+    SequentialLogRecord,
+    TokenEstimator,
+    canary,
+    offline_replay,
+    online_calibration,
+    shadow_mode,
+)
+from repro.core.decision import decision_threshold, expected_value, implied_lambda
+from repro.core.drift import DriftMonitor, TriggerKind
+from repro.core.posterior import BetaPosterior
+from repro.core.predictor import HistoricalModalPredictor
+from repro.core.taxonomy import DependencyType
+from repro.core.telemetry import SpeculationDecision, TelemetryLog
+
+
+def make_row(i: int, *, P=0.7, alpha=0.5, decision="SPECULATE", committed=True,
+             tokens_gen=800, tier3=None, i_actual="billing") -> SpeculationDecision:
+    C = 0.0135
+    return SpeculationDecision(
+        decision_id=f"d{i}", trace_id=f"t{i}", edge=("clf", "drafter"),
+        dep_type="router_k_way", tenant="acme", model_version=("m", "v1"),
+        alpha=alpha, lambda_usd_per_s=0.08, P_mean=P, P_lower_bound=None,
+        C_spec_est_usd=C, L_est_s=0.8, input_tokens_est=500,
+        output_tokens_est=800, input_price=3e-6, output_price=15e-6,
+        EV_usd=expected_value(P, 0.064, C),
+        threshold_usd=decision_threshold(alpha, C),
+        decision=decision, phase="runtime", overrode="none",
+        i_hat_source="modal", uncertain_cost_flag=False, enabled=True,
+        budget_remaining_usd=None, i_actual=i_actual,
+        tier1_match=committed, tier2_match=False if not committed else None,
+        tier3_accept=tier3, C_spec_actual_usd=C if committed else C * 0.5,
+        tokens_generated_before_cancel=tokens_gen, latency_actual_s=0.8,
+        committed_speculative=committed,
+    )
+
+
+class TestOfflineReplay:
+    def test_full_stage(self):
+        rng = np.random.default_rng(0)
+        intents = rng.choice(["billing", "support", "sales"], p=[0.7, 0.2, 0.1],
+                             size=200)
+        logs = [SequentialLogRecord("email", i, "x", "y", 2.0, 0.0135)
+                for i in intents]
+        pred = HistoricalModalPredictor()
+        pred.observe_many([("email", i) for i in intents])
+        rep = offline_replay(("clf", "drafter"), logs, {"modal": pred})
+        assert rep.k_raw == 3
+        assert rep.p_mode == pytest.approx(0.7, abs=0.1)
+        assert rep.dep_type in (DependencyType.ROUTER_K_WAY,
+                                DependencyType.CONDITIONAL_OUTPUT)
+        assert rep.predictor_match_rates["modal"] == pytest.approx(rep.p_mode, abs=0.05)
+        # data-seeded prior opens near truth (§12.1)
+        assert rep.seeded_prior.mean == pytest.approx(rep.p_mode, abs=0.1)
+        assert rep.go  # strong mode -> speculation worth enabling
+        assert len(rep.grid) == 20
+
+    def test_no_go_for_flat_distribution(self):
+        """§13.3 high-k flat: grid dominated by WAIT -> no-go."""
+        rng = np.random.default_rng(1)
+        outs = rng.choice([f"o{i}" for i in range(20)], size=200)
+        logs = [SequentialLogRecord("in", o, "x", "y", 0.3, 0.0135) for o in outs]
+        pred = HistoricalModalPredictor()
+        pred.observe_many([("in", o) for o in outs])
+        rep = offline_replay(("a", "b"), logs, {"modal": pred},
+                             lambdas=(0.005, 0.01))
+        assert not rep.go
+
+
+class TestShadowMode:
+    def test_convergence_and_threshold_sweep(self):
+        rng = np.random.default_rng(2)
+        trials = [("billing", "billing") if rng.random() < 0.8
+                  else ("support-very-different", "billing")
+                  for _ in range(150)]
+        graded = [("refund order", "refund order", True),
+                  ("refund order", "totally unrelated text", False)] * 10
+        post = BetaPosterior.from_dependency_type(DependencyType.ROUTER_K_WAY, k=5)
+        rep = shadow_mode(("clf", "drafter"), post, trials,
+                          graded_subset=graded,
+                          output_token_counts=[800, 820, 790, 810],
+                          cancel_fractions=[0.3, 0.4, 0.5])
+        assert rep.converged
+        assert rep.posterior.mean == pytest.approx(0.8, abs=0.08)
+        assert 0.5 <= rep.best_tier2_threshold <= 1.0
+        assert rep.tier2_f1 == 1.0
+        assert not rep.token_estimator.uncertain_cost
+        assert rep.rho_mean == pytest.approx(0.4)
+
+    def test_token_estimator_flags_high_variance(self):
+        est = TokenEstimator()
+        for t in [100, 2000, 50, 3000, 80, 2500]:
+            est.observe(t)
+        assert est.uncertain_cost            # §4.2 uncertain_cost tag
+        assert est.estimate(sigma_ceiling=True) > est.estimate()
+
+
+class TestCanary:
+    def test_implied_lambda_audit_flags(self):
+        """§12.3: operators at alpha*=0.9 reveal lambda far below declared."""
+        rep = canary(
+            control_latency_s=1.6, control_cost_usd=0.015,
+            sweep={0.1: (1.5, 0.0151), 0.5: (1.3, 0.0155), 0.9: (1.1, 0.016)},
+            chosen_alpha=0.9, P=0.62, C_spec=0.0135, L_upstream_s=0.8,
+            lambda_declared=0.08,
+        )
+        assert rep.lambda_implied == pytest.approx(0.013, abs=1e-3)
+        assert rep.audit == "inspect_declared"
+        assert rep.promote            # latency beats control within budget
+        assert rep.pareto_alphas      # frontier non-empty
+
+    def test_consistent_operating_point(self):
+        lam = implied_lambda(0.62, 0.0135, 0.5, 0.8)   # ~0.024
+        rep = canary(1.6, 0.015, {0.5: (1.3, 0.0155)}, 0.5, 0.62, 0.0135, 0.8,
+                     lambda_declared=lam)
+        assert rep.audit == "consistent"
+
+
+class TestOnline:
+    def test_calibration_curve_and_cov(self):
+        log = TelemetryLog()
+        rng = np.random.default_rng(3)
+        for i in range(300):
+            ok = bool(rng.random() < 0.7)
+            log.emit(make_row(i, P=0.7, committed=ok,
+                              tokens_gen=int(rng.normal(800, 40))))
+        rep = online_calibration(log)
+        mid_bucket = [b for b in rep.buckets if abs(b.midpoint - 0.75) < 0.06]
+        assert mid_bucket and abs(mid_bucket[0].empirical_rate - 0.7) < 0.08
+        assert not rep.monotonic_overprediction
+        assert rep.token_cov is not None and rep.token_cov < 0.2
+        assert not rep.uncertain_cost
+
+    def test_tier2_false_accept_detection(self):
+        log = TelemetryLog()
+        for i in range(100):
+            log.emit(make_row(i, committed=True, tier3=(i % 10 != 0)))
+        rep = online_calibration(log)
+        assert rep.tier2_false_accept_rate == pytest.approx(0.10)
+        assert rep.tier2_needs_tightening
+
+
+class TestDrift:
+    def test_posterior_drop_trigger(self):
+        mon = DriftMonitor()
+        for _ in range(500):
+            mon.observe_posterior_mean(("a", "b"), 0.8)
+        ev = None
+        for _ in range(100):
+            ev = mon.observe_posterior_mean(("a", "b"), 0.5) or ev
+        assert ev is not None and ev.kind == TriggerKind.POSTERIOR_DROP
+        assert mon.effective_alpha(("a", "b"), 0.5) == pytest.approx(0.3)
+
+    def test_credible_bound_trigger_disables_edge(self):
+        mon = DriftMonitor(credible_consecutive_n=3)
+        post = BetaPosterior(alpha=1.0, beta=9.0)   # low P, wide
+        ev = None
+        for _ in range(3):
+            ev = mon.check_credible_bound(("a", "b"), post, 0.5, 0.0135, 0.064)
+        assert ev is not None
+        assert not mon.edge_enabled(("a", "b"))
+        assert mon.state(("a", "b")).needs_shadow_rerun
+
+    def test_cost_slo_zeroes_alpha_globally(self):
+        mon = DriftMonitor(monthly_budget_usd=100.0)
+        assert mon.check_cost_slo(50.0) is None
+        ev = mon.check_cost_slo(150.0)
+        assert ev is not None and ev.scope == "global"
+        assert mon.effective_alpha(("any", "edge"), 0.9) == 0.0
+
+    def test_model_version_change_reverts_to_shadow(self):
+        mon = DriftMonitor()
+        mon.observe_model_version("drafter", "v1", [])
+        ev = mon.observe_model_version("drafter", "v2", [("a", "b"), ("a", "c")])
+        assert ev is not None and ev.kind == TriggerKind.MODEL_VERSION_CHANGE
+        assert mon.state(("a", "b")).needs_shadow_rerun
+
+    def test_tier2_and_cov_triggers(self):
+        mon = DriftMonitor()
+        assert mon.check_tier2_false_accept(("a", "b"), 0.02) is None
+        ev = mon.check_tier2_false_accept(("a", "b"), 0.10)
+        assert ev is not None and mon.state(("a", "b")).page_oncall
+        ev2 = mon.check_token_cov(("a", "c"), 0.9)
+        assert ev2 is not None and not mon.edge_enabled(("a", "c"))
+
+
+class TestTelemetry:
+    def test_every_c2_signal_from_rows_alone(self):
+        """App. C.2: every calibration signal derivable from the log."""
+        log = TelemetryLog()
+        rng = np.random.default_rng(4)
+        for i in range(200):
+            ok = bool(rng.random() < 0.62)
+            log.emit(make_row(
+                i, P=0.62, committed=ok, tier3=ok if i % 7 == 0 else None,
+                tokens_gen=800 if ok else 296,
+                i_actual=rng.choice(["billing", "support"], p=[0.62, 0.38]),
+            ))
+        s, f = log.posterior_counts()[("clf", "drafter")]
+        assert s + f == 200 and abs(s / 200 - 0.62) < 0.1
+        keff = log.effective_k()[(("clf", "drafter"), "acme")]
+        assert 1.2 < keff < 2.2
+        assert log.tier2_false_accept_rate() is not None
+        assert log.token_estimate_cov() is not None
+        assert len(log.implied_lambdas()) == 200
+        assert all(w > 0 for w in log.waste_per_failed_speculation())
+        assert log.cost_slo_burn() > 0
+        assert len(log.posterior_mean_series(("clf", "drafter"))) == 200
+        assert log.calibration_buckets()
+
+    def test_row_roundtrip_and_size(self):
+        """App. C.3: rows serialize < 1 KB and round-trip."""
+        row = make_row(0)
+        js = row.to_json()
+        assert len(js.encode()) < 1024
+        back = SpeculationDecision.from_json(js)
+        assert back == row
+
+    def test_jsonl_persistence(self, tmp_path):
+        log = TelemetryLog()
+        for i in range(10):
+            log.emit(make_row(i))
+        path = str(tmp_path / "rows.jsonl")
+        assert log.save_jsonl(path) == 10
+        log2 = TelemetryLog.load_jsonl(path)
+        assert len(log2) == 10
+        assert log2.rows[3] == log.rows[3]
+
+    def test_schema_field_count(self):
+        """D.4: the schema carries 33 fields."""
+        assert len(SpeculationDecision.__dataclass_fields__) == 33

@@ -1,0 +1,195 @@
+"""D3/D4 decision-rule tests: paper numbers + hypothesis invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.decision import (
+    Decision,
+    DecisionInputs,
+    LambdaDerivation,
+    critical_k,
+    decision_threshold,
+    evaluate,
+    expected_value,
+    implied_lambda,
+    p_break_even,
+    p_threshold_crossing,
+    speculation_decision,
+)
+
+# canonical parameter sets (DESIGN.md)
+WORKED = dict(input_tokens=500, output_tokens=1000, input_price=3e-6,
+              output_price=15e-6, latency_seconds=5.0,
+              lambda_dollars_per_sec=0.01)          # §10.1: C=0.0165, L=0.05
+AUTOREPLY_C = 500 * 3e-6 + 800 * 15e-6              # 0.0135
+AUTOREPLY_L = 0.8 * 0.08                            # 0.064
+
+
+class TestPaperNumbers:
+    def test_worked_example_costs(self):
+        res = evaluate(DecisionInputs(
+            P=0.733, alpha=0.5, lambda_usd_per_s=0.01, latency_seconds=5.0,
+            input_tokens=500, output_tokens=1000,
+            input_price=3e-6, output_price=15e-6,
+        ))
+        assert res.C_spec_usd == pytest.approx(0.0165)
+        assert res.L_value_usd == pytest.approx(0.05)
+        # §10.1: EV = 0.733*0.05 - 0.267*0.0165
+        assert res.EV_usd == pytest.approx(0.733 * 0.05 - 0.267 * 0.0165, abs=1e-9)
+        assert res.decision == Decision.SPECULATE
+
+    @pytest.mark.parametrize("alpha,expected", [
+        (0.0, "SPECULATE"), (0.2, "SPECULATE"), (0.5, "SPECULATE"),
+        (0.8, "SPECULATE"), (1.0, "SPECULATE"),
+    ])
+    def test_alpha_sensitivity_high_p(self, alpha, expected):
+        assert speculation_decision(0.733, alpha, 0.01, 500, 1000,
+                                    3e-6, 15e-6, 5.0) == expected
+
+    @pytest.mark.parametrize("alpha,expected", [
+        (0.0, "WAIT"), (0.2, "WAIT"), (0.5, "SPECULATE"),
+        (0.8, "SPECULATE"), (1.0, "SPECULATE"),
+    ])
+    def test_alpha_sensitivity_low_p(self, alpha, expected):
+        """§10.1 P = 0.4 table: flips at alpha ~ 0.4."""
+        assert speculation_decision(0.4, alpha, 0.01, 500, 1000,
+                                    3e-6, 15e-6, 5.0) == expected
+
+    def test_critical_k_autoreply(self):
+        """§7.6: k_crit(0)~2.87, k_crit(0.5)~3.83, k_crit(1)~5.74."""
+        assert critical_k(AUTOREPLY_L, AUTOREPLY_C, 0.0) == pytest.approx(2.87, abs=0.01)
+        assert critical_k(AUTOREPLY_L, AUTOREPLY_C, 0.5) == pytest.approx(3.83, abs=0.01)
+        assert critical_k(AUTOREPLY_L, AUTOREPLY_C, 1.0) == pytest.approx(5.74, abs=0.01)
+
+    @pytest.mark.parametrize("k,ev,decisions", [
+        (2, 0.0253, ("SPECULATE", "SPECULATE", "SPECULATE")),
+        (3, 0.0123, ("WAIT", "SPECULATE", "SPECULATE")),
+        (5, 0.0020, ("WAIT", "WAIT", "SPECULATE")),
+        (10, -0.0058, ("WAIT", "WAIT", "WAIT")),
+        (20, -0.0096, ("WAIT", "WAIT", "WAIT")),
+    ])
+    def test_branching_table(self, k, ev, decisions):
+        """§7.6 numerical table at AutoReply parameters."""
+        P = 1.0 / k
+        assert expected_value(P, AUTOREPLY_L, AUTOREPLY_C) == pytest.approx(ev, abs=5e-4)
+        for alpha, want in zip((0.0, 0.5, 1.0), decisions):
+            got = ("SPECULATE" if expected_value(P, AUTOREPLY_L, AUTOREPLY_C)
+                   >= decision_threshold(alpha, AUTOREPLY_C) else "WAIT")
+            assert got == want, f"k={k} alpha={alpha}"
+
+    def test_skewed_classifier_example(self):
+        """§7.6: 62% 'billing' -> EV = +$0.0346, SPECULATE at all alpha."""
+        ev = expected_value(0.62, AUTOREPLY_L, AUTOREPLY_C)
+        assert ev == pytest.approx(0.0346, abs=5e-4)
+        for alpha in (0.0, 0.5, 1.0):
+            assert ev >= decision_threshold(alpha, AUTOREPLY_C)
+
+    def test_implied_lambda_d5(self):
+        """App. D.5: lambda_implied(0.5) ~ 0.024, (0.9) ~ 0.013."""
+        assert implied_lambda(0.62, AUTOREPLY_C, 0.5, 0.8) == pytest.approx(0.024, abs=1e-3)
+        assert implied_lambda(0.62, AUTOREPLY_C, 0.9, 0.8) == pytest.approx(0.013, abs=1e-3)
+
+    def test_two_phase_posterior_drop(self):
+        """§10.2: P 0.733 -> 0.55 narrows the margin but still SPECULATE."""
+        res = evaluate(DecisionInputs(
+            P=0.55, alpha=0.5, lambda_usd_per_s=0.01, latency_seconds=5.0,
+            input_tokens=500, output_tokens=1000,
+            input_price=3e-6, output_price=15e-6,
+        ))
+        assert res.EV_usd == pytest.approx(0.0201, abs=1e-4)
+        assert res.decision == Decision.SPECULATE
+        # Paper §10.2 claims alpha=0.1 -> WAIT, but EV $0.0201 > threshold
+        # $0.01485 under the paper's own D4 rule -> SPECULATE (paper
+        # inconsistency #3, DESIGN.md).  A true downgrade needs lower P:
+        res2 = evaluate(DecisionInputs(
+            P=0.55, alpha=0.1, lambda_usd_per_s=0.01, latency_seconds=5.0,
+            input_tokens=500, output_tokens=1000,
+            input_price=3e-6, output_price=15e-6,
+        ))
+        assert res2.threshold_usd == pytest.approx(0.01485)
+        assert res2.decision == Decision.SPECULATE  # rule arithmetic wins
+        res3 = evaluate(DecisionInputs(
+            P=0.35, alpha=0.1, lambda_usd_per_s=0.01, latency_seconds=5.0,
+            input_tokens=500, output_tokens=1000,
+            input_price=3e-6, output_price=15e-6,
+        ))
+        assert res3.decision == Decision.WAIT  # bidirectional downgrade
+
+    def test_lambda_derivations(self):
+        """§5.3 table."""
+        assert LambdaDerivation.user_value_of_time(1.0, 60.0) == pytest.approx(0.0167, abs=1e-4)
+        assert LambdaDerivation.labor_cost(100.0) == pytest.approx(0.0278, abs=1e-4)
+        assert LambdaDerivation.workflow_value(10.0, 100.0) == pytest.approx(0.10)
+        assert LambdaDerivation.budget_deadline(10.0, 5.0, 100.0, 50.0) == pytest.approx(0.1)
+
+
+class TestInvariants:
+    @given(P=st.floats(0, 1), alpha=st.floats(0, 1),
+           lam=st.floats(0, 1), L=st.floats(0, 100),
+           it=st.integers(0, 10000), ot=st.integers(0, 10000))
+    @settings(max_examples=200, deadline=None)
+    def test_tie_breaks_speculate(self, P, alpha, lam, L, it, ot):
+        """EV >= threshold <-> SPECULATE, exactly (tie -> SPECULATE, §6.1)."""
+        res = evaluate(DecisionInputs(P, alpha, lam, L, it, ot, 3e-6, 15e-6))
+        want = Decision.SPECULATE if res.EV_usd >= res.threshold_usd else Decision.WAIT
+        assert res.decision == want
+
+    @given(P1=st.floats(0, 1), P2=st.floats(0, 1), alpha=st.floats(0, 1))
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_in_p(self, P1, P2, alpha):
+        """Higher P never flips SPECULATE -> WAIT (EV monotone in P)."""
+        lo, hi = min(P1, P2), max(P1, P2)
+        d_lo = speculation_decision(lo, alpha, 0.01, 500, 1000, 3e-6, 15e-6, 5.0)
+        d_hi = speculation_decision(hi, alpha, 0.01, 500, 1000, 3e-6, 15e-6, 5.0)
+        if d_lo == "SPECULATE":
+            assert d_hi == "SPECULATE"
+
+    @given(a1=st.floats(0, 1), a2=st.floats(0, 1), P=st.floats(0, 1))
+    @settings(max_examples=200, deadline=None)
+    def test_monotone_in_alpha(self, a1, a2, P):
+        """Higher alpha (more latency-sensitive) never flips to WAIT."""
+        lo, hi = min(a1, a2), max(a1, a2)
+        if speculation_decision(P, lo, 0.01, 500, 1000, 3e-6, 15e-6, 5.0) == "SPECULATE":
+            assert speculation_decision(P, hi, 0.01, 500, 1000, 3e-6, 15e-6, 5.0) == "SPECULATE"
+
+    @given(P=st.floats(0.01, 0.99), alpha=st.floats(0, 1),
+           L=st.floats(0.1, 100), C=st.floats(1e-6, 1.0))
+    @settings(max_examples=200, deadline=None)
+    def test_threshold_crossings_consistent(self, P, alpha, L, C):
+        """The closed-form P crossings match the rule's behavior."""
+        p_star = p_threshold_crossing(L, C, alpha)
+        ev = expected_value(P, L, C)
+        thr = decision_threshold(alpha, C)
+        if P > min(p_star + 1e-9, 1.0) and p_star <= 1.0:
+            assert ev >= thr or math.isclose(ev, thr, rel_tol=1e-6)
+        assert p_break_even(L, C) <= p_threshold_crossing(L, C, alpha) + 1e-12
+
+    @given(k=st.integers(1, 100), alpha=st.floats(0, 1))
+    @settings(max_examples=200, deadline=None)
+    def test_self_limiting(self, k, alpha):
+        """§7.6 claim: uniform P = 1/k SPECULATEs iff k <= k_crit(alpha)."""
+        kc = critical_k(AUTOREPLY_L, AUTOREPLY_C, alpha)
+        d = ("SPECULATE" if expected_value(1.0 / k, AUTOREPLY_L, AUTOREPLY_C)
+             >= decision_threshold(alpha, AUTOREPLY_C) else "WAIT")
+        assert d == ("SPECULATE" if k <= kc else "WAIT")
+
+    @given(P=st.floats(0.05, 1), alpha=st.floats(0, 1), L=st.floats(0.01, 100))
+    @settings(max_examples=200, deadline=None)
+    def test_implied_lambda_inverts_rule(self, P, alpha, L):
+        """lambda_implied makes EV == threshold exactly (§12.3 closed form)."""
+        C = AUTOREPLY_C
+        lam = implied_lambda(P, C, alpha, L)
+        ev = expected_value(P, L * lam, C)
+        thr = decision_threshold(alpha, C)
+        assert ev == pytest.approx(thr, rel=1e-6, abs=1e-12)
+
+
+class TestValidation:
+    def test_bad_alpha_rejected(self):
+        with pytest.raises(ValueError):
+            speculation_decision(0.5, 1.5, 0.01, 1, 1, 1e-6, 1e-6, 1.0)
+
+    def test_bad_p_rejected(self):
+        with pytest.raises(ValueError):
+            expected_value(-0.1, 1.0, 1.0)

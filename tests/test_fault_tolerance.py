@@ -1,0 +1,164 @@
+"""Fault tolerance: atomic checkpoints, kill+restart resume (bitwise), data
+pipeline determinism, straggler monitor, grad compression, elastic reshard."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.io import (
+    AsyncSaver,
+    available_steps,
+    latest_step,
+    load_pytree,
+    save_pytree,
+)
+from repro.configs import REGISTRY
+from repro.training.data import DataConfig, SyntheticLMDataset
+from repro.training.grad_compress import GradCompressor, dequantize_int8, quantize_int8
+from repro.training.optimizer import OptimizerConfig
+from repro.training.trainer import Trainer, TrainerConfig
+
+
+def tiny_trainer(tmp_path, steps=12, ckpt_every=4, **kw) -> Trainer:
+    cfg = REGISTRY["llama3.2-1b"].reduced()
+    tcfg = TrainerConfig(
+        steps=steps, checkpoint_every=ckpt_every,
+        checkpoint_dir=str(tmp_path / "ckpt"),
+        optimizer=OptimizerConfig(kind="adamw", peak_lr=1e-3, warmup_steps=2,
+                                  total_steps=steps),
+        data=DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=4),
+        **kw,
+    )
+    return Trainer(cfg, tcfg)
+
+
+class TestCheckpointIO:
+    def test_atomic_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6.0).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        save_pytree(tmp_path, 5, tree, extra={"note": "x"})
+        like = jax.tree.map(jnp.zeros_like, tree)
+        loaded, extra = load_pytree(tmp_path, 5, like)
+        assert extra == {"note": "x"}
+        assert jnp.array_equal(loaded["a"], tree["a"])
+        assert latest_step(tmp_path) == 5
+
+    def test_crashed_save_never_shadows(self, tmp_path):
+        tree = {"w": jnp.ones(3)}
+        save_pytree(tmp_path, 1, tree)
+        # simulate a crash mid-save: a stale .tmp directory left behind
+        tmp = Path(tmp_path) / "step_00000002.tmp"
+        tmp.mkdir()
+        (tmp / "garbage").write_text("partial")
+        assert available_steps(tmp_path) == [1]     # tmp ignored
+        save_pytree(tmp_path, 2, tree)              # retry succeeds
+        assert available_steps(tmp_path) == [1, 2]
+
+    def test_async_saver_retention(self, tmp_path):
+        saver = AsyncSaver(tmp_path, keep=2)
+        for s in (1, 2, 3, 4):
+            saver.save(s, {"w": jnp.full(2, float(s))})
+        saver.wait()
+        assert available_steps(tmp_path) == [3, 4]
+
+
+class TestTrainerRestart:
+    def test_kill_and_resume_bitwise(self, tmp_path):
+        # uninterrupted run
+        t1 = tiny_trainer(tmp_path / "a")
+        rep1 = t1.run(resume=False)
+        # interrupted run: stop after step 6 (checkpoint at 4), then resume
+        t2 = tiny_trainer(tmp_path / "b")
+        t2.run(resume=False, stop_after=6)
+        t3 = tiny_trainer(tmp_path / "b")
+        rep3 = t3.run(resume=True)
+        assert rep3.resumed_from == 4
+        # losses from the resumed segment match the uninterrupted run exactly
+        assert rep1.losses[4:] == pytest.approx(rep3.losses, rel=0, abs=0)
+
+    def test_straggler_monitor_counts(self, tmp_path):
+        """Deterministic: inject a slow wrapped step; the EMA monitor flags
+        it (timings via a real sleep inside the measured region)."""
+        import time as _time
+        t = tiny_trainer(tmp_path, steps=10, ckpt_every=100)
+        orig = t._step
+        counter = {"n": 0}
+
+        def sometimes_slow(p, o, b):
+            counter["n"] += 1
+            out = orig(p, o, b)
+            jax.block_until_ready(out[0])
+            if counter["n"] == 8:
+                _time.sleep(2.0)   # >> straggler_factor x EMA
+            return out
+
+        t._step = sometimes_slow
+        rep = t.run(resume=False)
+        assert rep.straggler_steps, "slow step not flagged"
+
+
+class TestDataPipeline:
+    def test_deterministic_and_resumable(self):
+        cfg = DataConfig(vocab_size=1000, seq_len=32, global_batch=4)
+        ds1 = SyntheticLMDataset(cfg)
+        ds2 = SyntheticLMDataset(cfg)
+        b5a = ds1.batch_at(5)["tokens"]
+        b5b = ds2.batch_at(5)["tokens"]
+        np.testing.assert_array_equal(b5a, b5b)
+        it = ds1.iterate(start_step=5)
+        np.testing.assert_array_equal(next(it)["tokens"], b5a)
+
+    def test_learnable_structure(self):
+        """Markov correlation gives sub-uniform perplexity headroom."""
+        cfg = DataConfig(vocab_size=100, seq_len=256, global_batch=8,
+                         markov_strength=0.5)
+        ds = SyntheticLMDataset(cfg)
+        toks = ds.batch_at(0)["tokens"]
+        assert toks.min() >= 0 and toks.max() < 100
+        # correlated pairs appear more often than chance
+        perm_hits = (ds._perm[toks[:, :-1]] == toks[:, 1:]).mean()
+        assert perm_hits > 0.2
+
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        x = jax.random.normal(jax.random.key(0), (128, 64))
+        q = quantize_int8(x, jax.random.key(1))
+        err = jnp.abs(dequantize_int8(q) - x).max()
+        assert float(err) <= float(q.scale) * 1.01
+
+    def test_error_feedback_preserves_sum(self):
+        """Residual accumulation: the long-run mean of compressed grads
+        converges to the true mean (error feedback property)."""
+        comp = GradCompressor.init({"w": jnp.zeros((64, 64))})
+        g = {"w": 0.01 * jax.random.normal(jax.random.key(2), (64, 64))}
+        total = jnp.zeros((64, 64))
+        for _ in range(50):
+            out, comp = comp.roundtrip(g)
+            total = total + out["w"]
+        mean_err = jnp.abs(total / 50 - g["w"]).mean()
+        assert float(mean_err) < 5e-4
+
+    def test_training_with_compression_runs(self, tmp_path):
+        t = tiny_trainer(tmp_path, steps=4, ckpt_every=100, compress_grads=True)
+        rep = t.run(resume=False)
+        assert len(rep.losses) == 4
+        assert all(np.isfinite(rep.losses))
+
+
+class TestElasticReshard:
+    def test_checkpoint_mesh_agnostic(self, tmp_path):
+        """A checkpoint written unsharded loads onto any mesh (the shard
+        layout lives in the load-time shardings, not the file)."""
+        tree = {"w": jnp.arange(64.0).reshape(8, 8)}
+        save_pytree(tmp_path, 1, tree)
+        mesh = jax.make_mesh((1,), ("data",))
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        sh = {"w": NamedSharding(mesh, P("data", None))}
+        loaded, _ = load_pytree(tmp_path, 1, jax.tree.map(jnp.zeros_like, tree),
+                                shardings=sh)
+        assert jnp.array_equal(loaded["w"], tree["w"])
+        assert loaded["w"].sharding == sh["w"]

@@ -1,0 +1,150 @@
+"""D2 pricing + §7.4 success-criterion + §3.3 admissibility tests."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.admissibility import AdmissibilityTag, CommitBarrier, check_admissible
+from repro.core.pricing import (
+    GpuHourCost,
+    PricingEntry,
+    TpuChipHourCost,
+    TwoRateTokenCost,
+    get_pricing,
+    speculation_cost,
+)
+from repro.core.success import (
+    TierPolicy,
+    check_success,
+    code_equivalent,
+    json_equivalent,
+    text_equivalent,
+)
+
+
+class TestPricing:
+    def test_two_rate_worked_example(self):
+        """§10.1: 500 in @ $3/M + 1000 out @ $15/M = $0.0165."""
+        assert speculation_cost(500, 1000, 3e-6, 15e-6) == pytest.approx(0.0165)
+
+    def test_autoreply(self):
+        assert speculation_cost(500, 800, 3e-6, 15e-6) == pytest.approx(0.0135)
+
+    def test_rate_asymmetry_range(self):
+        """§4.1: major APIs bill output at 3-8x input."""
+        for (prov, model) in [("anthropic", "claude-opus-4-7"),
+                              ("openai", "gpt-5.2"), ("google", "gemini-3-pro")]:
+            e = get_pricing(prov, model)
+            assert 3.0 <= e.rate_asymmetry <= 8.0
+
+    def test_gpu_hour_reduces_to_linear(self):
+        """§4.3: GPU-hour amortization is linear per token."""
+        cm = GpuHourCost(unit_price_per_hour=2.0, num_gpus=8,
+                         decode_tokens_per_hour=3.6e6,
+                         prefill_tokens_per_hour=36e6, utilization=0.8)
+        c1 = cm.cost(100, 100)
+        c2 = cm.cost(200, 200)
+        assert c2 == pytest.approx(2 * c1)
+        assert cm.cost(0, 0) == 0.0
+
+    def test_tpu_chip_hour(self):
+        cm = TpuChipHourCost(chip_price_per_hour=1.2, num_chips=4,
+                             decode_tokens_per_hour=2e6,
+                             prefill_tokens_per_hour=20e6)
+        assert cm.cost(1000, 1000) > 0
+        ci, co = cm.split(1000, 1000)
+        assert co > ci  # decode slower than prefill -> output costlier
+
+    @given(it=st.integers(0, 10**6), ot=st.integers(0, 10**6))
+    @settings(max_examples=100, deadline=None)
+    def test_split_sums_to_cost(self, it, ot):
+        cm = TwoRateTokenCost(3e-6, 15e-6)
+        ci, co = cm.split(it, ot)
+        assert ci + co == pytest.approx(cm.cost(it, ot))
+
+    def test_negative_rejected(self):
+        with pytest.raises(ValueError):
+            PricingEntry("x", "y", -1.0, 1.0)
+        with pytest.raises(ValueError):
+            TwoRateTokenCost(1e-6, 1e-6).cost(-1, 0)
+
+
+class TestSuccessCriterion:
+    def test_tier1_exact(self):
+        r = check_success("billing", "billing")
+        assert r.success and r.tier == 1 and r.tier1_match
+
+    def test_tier2_text_paraphrase(self):
+        r = check_success("the  Billing Issue", "the billing issue")
+        assert r.success  # normalization catches case/whitespace
+
+    def test_tier2_rejects_different(self):
+        r = check_success("quantum entanglement basics",
+                          "refund request for order 9")
+        assert not r.success
+
+    def test_tier2_code_ast(self):
+        a = "def f(x):\n    return x+1"
+        b = "def f(x):  return (x + 1)"
+        assert code_equivalent(a, b)
+        assert not code_equivalent(a, "def f(x):\n    return x+2")
+        r = check_success(a, b, TierPolicy(domain="code"))
+        assert r.success and r.tier == 2
+
+    def test_tier2_semantic_json(self):
+        assert json_equivalent('{"a": 1, "b": [2, 3]}', '{"b": [2, 3], "a": 1.0}')
+        assert not json_equivalent('{"a": 1}', '{"a": 2}')
+        r = check_success({"a": 1, "b": 2}, {"b": 2, "a": 1}, TierPolicy(domain="json"))
+        assert r.success
+
+    def test_tier3_opt_in(self):
+        """Tier 3 is opt-in and only consulted when tiers 1/2 fail."""
+        policy = TierPolicy(
+            enable_tier3=True,
+            tier3_validator=lambda i, downstream_out: downstream_out == "ok",
+        )
+        r = check_success("aaaa", "zzzz totally different", policy,
+                          downstream_output_from_i_hat="ok")
+        assert r.success and r.tier == 3
+        r2 = check_success("aaaa", "zzzz totally different", policy,
+                           downstream_output_from_i_hat="bad")
+        assert not r2.success
+
+    def test_threshold_tightening(self):
+        """§12.2: higher threshold -> stricter acceptance."""
+        loose = TierPolicy(similarity_threshold=0.5)
+        tight = TierPolicy(similarity_threshold=0.999)
+        a, b = "refund the customer order", "refund customer order now"
+        assert check_success(a, b, loose).success
+        assert not check_success(a, b, tight).success or a == b
+
+    @given(st.text(max_size=80))
+    @settings(max_examples=100, deadline=None)
+    def test_tier2_reflexive(self, s):
+        assert text_equivalent(s, s)
+
+
+class TestAdmissibility:
+    def test_only_non_speculable_blocked(self):
+        assert check_admissible(AdmissibilityTag.SIDE_EFFECT_FREE)
+        assert check_admissible(AdmissibilityTag.IDEMPOTENT)
+        assert check_admissible(AdmissibilityTag.COMMIT_BARRIER)
+        assert not check_admissible(AdmissibilityTag.NON_SPECULABLE)
+
+    def test_commit_barrier_lifecycle(self):
+        sent = []
+        b = CommitBarrier(release=sent.append)
+        b.stage("email-1")
+        b.stage("email-2")
+        assert b.pending == 2
+        assert b.commit() == 2
+        assert sent == ["email-1", "email-2"]
+        with pytest.raises(RuntimeError):
+            b.drop()
+
+    def test_commit_barrier_drop(self):
+        sent = []
+        b = CommitBarrier(release=sent.append)
+        b.stage("email-1")
+        assert b.drop() == 1
+        assert sent == []           # nothing escaped
+        with pytest.raises(RuntimeError):
+            b.commit()

@@ -1,0 +1,190 @@
+"""§6.6 routing, batch-vs-scalar decision equivalence, archetype rubric,
+streaming re-estimator, and the serving engine + bridge."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.archetypes import ARCHETYPES, NON_FIT_SHAPES, fit_rubric, pilot_score
+from repro.core.batch_decision import (
+    batch_evaluate,
+    batch_implied_lambda,
+    counterfactual_grid,
+    critical_k_grid,
+)
+from repro.core.decision import (
+    Decision,
+    DecisionInputs,
+    critical_k,
+    evaluate,
+    implied_lambda,
+    speculation_decision,
+)
+from repro.core.router import RouteCandidate, route
+from repro.core.streaming import (
+    ChunkVerdict,
+    RhoEstimator,
+    StreamingReestimator,
+    expected_speculation_waste,
+    fractional_waste,
+)
+from repro.core.pricing import TwoRateTokenCost
+
+
+class TestRouter:
+    def _candidates(self):
+        return [
+            RouteCandidate("anthropic", "claude-opus-4-7", 1.0, 800, 500, 0.8),
+            RouteCandidate("anthropic", "claude-haiku-4-5", 2.5, 800, 500, 0.7),
+        ]
+
+    def test_latency_sensitive_picks_fast_tier(self):
+        choice = route(self._candidates(), alpha=1.0, lambda_usd_per_s=0.1)
+        assert choice.candidate.model == "claude-opus-4-7"
+
+    def test_cost_sensitive_picks_cheap_tier(self):
+        choice = route(self._candidates(), alpha=0.0, lambda_usd_per_s=0.1)
+        assert choice.candidate.model == "claude-haiku-4-5"
+
+    def test_empty_rejected(self):
+        with pytest.raises(ValueError):
+            route([], 0.5, 0.01)
+
+
+class TestBatchEquivalence:
+    @given(st.lists(st.floats(0.01, 0.99), min_size=1, max_size=50),
+           st.floats(0, 1))
+    @settings(max_examples=50, deadline=None)
+    def test_batch_matches_scalar(self, Ps, alpha):
+        """The JAX fast path and the §6.5 scalar path agree exactly."""
+        _, _, spec_mask, _, _ = batch_evaluate(
+            np.array(Ps), alpha, 0.08, 0.8, 500, 800, 3e-6, 15e-6)
+        for p, m in zip(Ps, np.asarray(spec_mask)):
+            want = speculation_decision(p, alpha, 0.08, 500, 800, 3e-6, 15e-6, 0.8)
+            assert (want == "SPECULATE") == bool(m)
+
+    def test_critical_k_grid_matches_scalar(self):
+        alphas = np.linspace(0, 1, 11)
+        grid = critical_k_grid(0.064, 0.0135, alphas)
+        for a, k in zip(alphas, grid):
+            assert k == pytest.approx(critical_k(0.064, 0.0135, float(a)), rel=1e-5)
+
+    def test_implied_lambda_batch(self):
+        out = batch_implied_lambda([0.62, 0.62], 0.0135, [0.5, 0.9], 0.8)
+        assert out[0] == pytest.approx(implied_lambda(0.62, 0.0135, 0.5, 0.8), rel=1e-5)
+        assert out[1] == pytest.approx(implied_lambda(0.62, 0.0135, 0.9, 0.8), rel=1e-5)
+
+    def test_grid_shapes(self):
+        g = counterfactual_grid(0.7, np.ones(100), np.full(100, 0.0135),
+                                [0, 0.5, 1.0], [0.01, 0.05])
+        assert g["speculate_fraction"].shape == (3, 2)
+        # more latency-sensitive alpha never speculates less
+        sf = g["speculate_fraction"]
+        assert (np.diff(sf, axis=0) >= -1e-9).all()
+
+
+class TestStreaming:
+    def test_fractional_waste_monotone(self):
+        cm = TwoRateTokenCost(3e-6, 15e-6)
+        w = [fractional_waste(cm, 500, 1000, f * 1000) for f in (0.0, 0.3, 1.0)]
+        assert w[0] == pytest.approx(0.0015)     # input only
+        assert w[0] < w[1] < w[2] == pytest.approx(0.0165)
+
+    def test_expected_waste_non_streaming_full(self):
+        """§14.1: no streaming -> full C_spec accounting (rho=1)."""
+        cm = TwoRateTokenCost(3e-6, 15e-6)
+        full = expected_speculation_waste(0.6, cm, 500, 1000, rho=0.3,
+                                          streaming=False)
+        assert full == pytest.approx(0.4 * 0.0165)
+
+    def test_rho_estimator_ema(self):
+        r = RhoEstimator()
+        assert r.rho == 0.5                       # §9.3 default
+        r.observe(0.2)
+        assert r.rho == pytest.approx(0.2)
+        r.observe(0.6)
+        assert r.rho == pytest.approx(0.2 * 0.6 + 0.8 * 0.2)
+
+    def test_reestimator_cancels_on_confidence_collapse(self):
+        base = DecisionInputs(P=0.7, alpha=0.5, lambda_usd_per_s=0.08,
+                              latency_seconds=0.8, input_tokens=500,
+                              output_tokens=800, input_price=3e-6,
+                              output_price=15e-6)
+        confs = [0.8, 0.75, 0.7, 0.05, 0.05]
+
+        def refine(upstream_input, partial):
+            return "billing", confs[len(partial) - 1]
+
+        re = StreamingReestimator(refine, base)
+        verdict, all_v = re.run("email", ["c0", "c1", "c2", "c3", "c4"])
+        assert verdict is not None and verdict.cancel
+        assert verdict.chunk_index == 3
+        assert len(all_v) == 4                    # stopped at the cancel
+
+    def test_throttling(self):
+        base = DecisionInputs(P=0.7, alpha=0.5, lambda_usd_per_s=0.08,
+                              latency_seconds=0.8, input_tokens=500,
+                              output_tokens=800, input_price=3e-6,
+                              output_price=15e-6)
+        calls = []
+
+        def refine(u, partial):
+            calls.append(len(partial))
+            return "x", 0.9
+
+        re = StreamingReestimator(refine, base, throttle_every=3)
+        re.run("email", [f"c{i}" for i in range(9)])
+        assert calls == [1, 4, 7]                 # every 3rd chunk (§9.1)
+
+
+class TestArchetypes:
+    def test_all_eight_fit(self):
+        assert len(ARCHETYPES) == 8
+        for a in ARCHETYPES.values():
+            assert fit_rubric(a.profile()).fits, a.name
+
+    def test_non_fit_shapes_documented(self):
+        assert set(NON_FIT_SHAPES) == {
+            "open_ended_creative", "runtime_determined_topology",
+            "high_k_flat", "cheap_downstream",
+        }
+
+    def test_pilot_scoring_ranks_first_tier_high(self):
+        """§13.4: voice-bot / moderation score 4/4."""
+        assert pilot_score(ARCHETYPES["voice_bot_ivr"].profile()) == 4
+        assert pilot_score(ARCHETYPES["content_moderation"].profile()) == 4
+
+
+class TestServingBridge:
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro.configs import REGISTRY
+        from repro.serving import EngineConfig, ServingEngine
+        cfg = REGISTRY["llama3.2-1b"].reduced()
+        return ServingEngine(cfg, cfg=EngineConfig(max_seq=96, decode_chunk=4))
+
+    def test_generate_deterministic(self, engine):
+        r1 = engine.generate([5, 6, 7], 12)
+        r2 = engine.generate([5, 6, 7], 12)
+        assert r1.tokens == r2.tokens
+        assert len(r1.tokens) <= 12
+
+    def test_mid_stream_cancellation(self, engine):
+        import threading
+        ev = threading.Event()
+        ev.set()  # cancel at the first check
+        r = engine.generate([5, 6, 7], 32, cancel_event=ev)
+        assert r.cancelled
+        assert r.tokens_generated < 32            # stopped early
+
+    def test_threaded_speculation_commits_on_match(self, engine):
+        from repro.serving import EngineOp, ThreadedSpeculativeRunner
+        op = EngineOp("drafter", engine, max_new_tokens=8)
+
+        def upstream():
+            return "billing", None
+
+        runner = ThreadedSpeculativeRunner(upstream, op)
+        spec = runner.run_speculative("billing")
+        assert spec.committed and spec.waste_usd == 0.0
+        spec2 = runner.run_speculative("a completely different long intent zz")
+        assert not spec2.committed and spec2.waste_usd > 0.0

@@ -1,0 +1,272 @@
+"""D1 + two-phase model integration tests: planner, executor, overrides,
+admissibility, streaming cancellation, waste accounting."""
+import pytest
+
+from repro.core import (
+    AdmissibilityTag,
+    BetaPosterior,
+    Decision,
+    DependencyType,
+    Edge,
+    ExecutorConfig,
+    NonSpeculableError,
+    Operation,
+    PlannerParams,
+    Workflow,
+    execute,
+    plan_workflow,
+)
+from repro.core.predictor import HistoricalModalPredictor, TemplatePredictor
+from repro.core.workflow import WorkflowError
+
+
+def two_op_workflow(downstream_admissibility=AdmissibilityTag.SIDE_EFFECT_FREE,
+                    chunks=10):
+    wf = Workflow("doc")
+    wf.add_op(Operation(
+        "analyzer", run=lambda x: "topic-A", latency_est_s=5.0,
+        metadata={"input": "doc1", "chunks": chunks},
+    ))
+    wf.add_op(Operation(
+        "researcher", run=lambda t: f"research({t})", latency_est_s=5.0,
+        input_tokens_est=500, output_tokens_est=1000,
+        admissibility=downstream_admissibility,
+    ))
+    wf.add_edge(Edge("analyzer", "researcher",
+                     dep_type=DependencyType.LIST_OUTPUT_VARIABLE_LENGTH))
+    return wf.freeze()
+
+
+def predictor_for(value="topic-A"):
+    p = HistoricalModalPredictor()
+    p.observe("doc1", value)
+    return p
+
+
+class TestWorkflow:
+    def test_cycle_rejected(self):
+        wf = Workflow()
+        wf.add_op(Operation("a"))
+        wf.add_op(Operation("b"))
+        wf.add_edge(Edge("a", "b"))
+        wf.add_edge(Edge("b", "a"))
+        with pytest.raises(WorkflowError):
+            wf.freeze()
+
+    def test_frozen_topology_immutable(self):
+        """§1.4: runtime-determined topologies are out of scope."""
+        wf = two_op_workflow()
+        with pytest.raises(WorkflowError):
+            wf.add_op(Operation("late"))
+
+    def test_non_speculable_filtered(self):
+        """§3.3: ops failing all three admissibility routes never reach the
+        EV gate."""
+        wf = two_op_workflow(AdmissibilityTag.NON_SPECULABLE)
+        assert wf.speculation_candidates() == []
+
+    def test_disabled_edge_filtered(self):
+        wf = Workflow()
+        wf.add_op(Operation("a"))
+        wf.add_op(Operation("b"))
+        wf.add_edge(Edge("a", "b", enabled=False))
+        wf.freeze()
+        assert wf.speculation_candidates() == []
+
+
+class TestPlanner:
+    def test_plan_enumeration_and_objective(self):
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        best, plans = plan_workflow(wf, params)
+        assert len(plans) >= 2
+        # parallel plan overlaps the speculated edge -> lower latency
+        assert best.concurrency > 1
+        assert best.expected_latency_s < 10.0
+        assert best.speculated_edges() == [("analyzer", "researcher")]
+        # expected waste = (1-P) * (C_in + rho*C_out)
+        P = 0.7
+        want = (1 - P) * (500 * 3e-6 + 0.5 * 1000 * 15e-6)
+        assert best.expected_waste_usd == pytest.approx(want, rel=1e-6)
+
+    def test_budget_constraint_marks_infeasible(self):
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01,
+                               max_budget_usd=0.001)
+        best, plans = plan_workflow(wf, params)
+        assert all(not p.feasible for p in plans)
+
+    def test_cost_sensitive_alpha_waits_when_p_low(self):
+        wf = two_op_workflow()
+        post = BetaPosterior.from_prior_mean(0.15)
+        params = PlannerParams(
+            alpha=0.0, lambda_usd_per_s=0.01,
+            posteriors={("analyzer", "researcher"): post},
+        )
+        best, _ = plan_workflow(wf, params)
+        assert best.speculated_edges() == []
+
+
+class TestExecutor:
+    def test_successful_speculation_halves_makespan(self):
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        plan, _ = plan_workflow(wf, params)
+        cfg = ExecutorConfig(params=params,
+                             predictors={("analyzer", "researcher"): predictor_for()})
+        rep = execute(wf, plan, cfg)
+        assert rep.makespan_s == pytest.approx(5.0)     # full overlap
+        assert rep.waste_usd == 0.0
+        assert rep.outcomes[0].committed
+        assert rep.outputs["researcher"] == "research(topic-A)"
+        # posterior updated with the success
+        assert params.posteriors[("analyzer", "researcher")].successes == 1
+
+    def test_failed_speculation_reexecutes_with_waste(self):
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        plan, _ = plan_workflow(wf, params)
+        cfg = ExecutorConfig(
+            params=params,
+            predictors={("analyzer", "researcher"):
+                        predictor_for("a completely different wrong topic zz")},
+        )
+        rep = execute(wf, plan, cfg)
+        assert rep.makespan_s == pytest.approx(10.0)    # sequential fallback
+        assert rep.waste_usd == pytest.approx(0.0165)   # full C_spec (u==v dur)
+        assert not rep.outcomes[0].committed
+        assert rep.outputs["researcher"] == "research(topic-A)"  # correct result
+        assert params.posteriors[("analyzer", "researcher")].failures == 1
+
+    def test_streaming_cancellation_fractional_waste(self):
+        """§9: P_k collapse mid-stream -> cancel, waste < full C_spec."""
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        plan, _ = plan_workflow(wf, params)
+
+        def refine(upstream_input, partial):
+            # confidence collapses at chunk 3
+            return "topic-A", 0.9 if len(partial) < 3 else 0.01
+
+        cfg = ExecutorConfig(
+            params=params,
+            predictors={("analyzer", "researcher"): predictor_for()},
+            stream_refiners={("analyzer", "researcher"): refine},
+        )
+        rep = execute(wf, plan, cfg)
+        o = rep.outcomes[0]
+        assert o.cancelled_mid_stream
+        assert 0.0 < o.waste_usd < 0.0165
+        assert o.cancel_fraction is not None and o.cancel_fraction < 1.0
+        # cancelled failures still count as failures for P (§10.3)
+        assert params.posteriors[("analyzer", "researcher")].failures == 1
+
+    def test_bidirectional_override_downgrade(self):
+        """Plan SPECULATE -> runtime WAIT when the posterior collapses
+        between phases (§8.2)."""
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        plan, _ = plan_workflow(wf, params)
+        assert plan.decisions[("analyzer", "researcher")].decision == Decision.SPECULATE
+        # phase-2 posterior collapse
+        params.posteriors[("analyzer", "researcher")] = BetaPosterior.from_prior_mean(0.05)
+        cfg = ExecutorConfig(params=params,
+                             predictors={("analyzer", "researcher"): predictor_for()})
+        rep = execute(wf, plan, cfg)
+        assert rep.overrides == [(("analyzer", "researcher"), "downgrade")]
+        assert rep.outcomes == []       # no speculation launched
+        assert rep.makespan_s == pytest.approx(10.0)
+
+    def test_bidirectional_override_upgrade(self):
+        """Plan WAIT -> runtime SPECULATE when alpha rises (§5.2 + §8.2)."""
+        wf = two_op_workflow()
+        low_p = BetaPosterior.from_prior_mean(0.25)
+        params = PlannerParams(alpha=0.0, lambda_usd_per_s=0.01,
+                               posteriors={("analyzer", "researcher"): low_p})
+        plan, _ = plan_workflow(wf, params)
+        assert plan.decisions[("analyzer", "researcher")].decision == Decision.WAIT
+        cfg = ExecutorConfig(
+            params=params,
+            predictors={("analyzer", "researcher"): predictor_for()},
+            alpha_fn=lambda t: 1.0,     # operator went latency-sensitive
+        )
+        rep = execute(wf, plan, cfg)
+        assert rep.overrides == [(("analyzer", "researcher"), "upgrade")]
+        assert rep.outcomes and rep.outcomes[0].launched
+
+    def test_commit_barrier_staged_effects(self):
+        """§3.3 route 3: effects released only after tier pass, dropped on
+        failure."""
+        released = []
+        wf = Workflow("barrier")
+        wf.add_op(Operation("u", run=lambda x: "right", latency_est_s=2.0,
+                            metadata={"input": "q"}))
+        wf.add_op(Operation(
+            "v", run=lambda t: f"draft({t})", latency_est_s=2.0,
+            admissibility=AdmissibilityTag.COMMIT_BARRIER,
+            metadata={"effect": released.append},
+        ))
+        wf.add_edge(Edge("u", "v"))
+        wf.freeze()
+        params = PlannerParams(alpha=1.0, lambda_usd_per_s=0.05)
+        plan, _ = plan_workflow(wf, params)
+        cfg = ExecutorConfig(params=params,
+                             predictors={("u", "v"): predictor_for_value("q", "right")})
+        rep = execute(wf, plan, cfg)
+        assert rep.outcomes[0].committed
+        assert released == ["draft(right)"]
+        # failure path: staged effect dropped, only re-executed one released
+        released.clear()
+        cfg2 = ExecutorConfig(params=PlannerParams(alpha=1.0, lambda_usd_per_s=0.05),
+                              predictors={("u", "v"): predictor_for_value("q", "wrong-aaa-bbb")})
+        plan2, _ = plan_workflow(wf, cfg2.params)
+        rep2 = execute(wf, plan2, cfg2)
+        assert not rep2.outcomes[0].committed
+        assert released == ["draft(right)"]
+
+    def test_telemetry_rows_emitted(self):
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01)
+        plan, _ = plan_workflow(wf, params)
+        cfg = ExecutorConfig(params=params,
+                             predictors={("analyzer", "researcher"): predictor_for()})
+        rep = execute(wf, plan, cfg)
+        assert len(cfg.telemetry) == 1
+        row = cfg.telemetry.rows[0]
+        assert row.decision == "SPECULATE"
+        assert row.phase == "runtime"
+        assert row.committed_speculative is True
+        assert row.i_actual == "topic-A"
+        assert row.tier1_match is True
+
+
+def predictor_for_value(inp, value):
+    p = HistoricalModalPredictor()
+    p.observe(inp, value)
+    return p
+
+
+class TestDiamondDag:
+    def test_multi_parent_speculation(self):
+        """v with two parents: speculate against the late parent only."""
+        wf = Workflow("diamond")
+        wf.add_op(Operation("src", run=lambda x: "S", latency_est_s=1.0,
+                            metadata={"input": "go"}))
+        wf.add_op(Operation("fast", run=lambda s: "F", latency_est_s=1.0))
+        wf.add_op(Operation("slow", run=lambda s: "W", latency_est_s=6.0))
+        wf.add_op(Operation("join", run=lambda a, b: f"{a}+{b}", latency_est_s=3.0))
+        wf.add_edge(Edge("src", "fast"))
+        wf.add_edge(Edge("src", "slow"))
+        wf.add_edge(Edge("fast", "join", enabled=False))
+        wf.add_edge(Edge("slow", "join",
+                         dep_type=DependencyType.ALWAYS_PRODUCES_OUTPUT))
+        wf.freeze()
+        params = PlannerParams(alpha=1.0, lambda_usd_per_s=0.05)
+        plan, _ = plan_workflow(wf, params)
+        pred = HistoricalModalPredictor()
+        pred.observe(None, "W")
+        cfg = ExecutorConfig(params=params, predictors={("slow", "join"): pred})
+        rep = execute(wf, plan, cfg)
+        assert rep.outputs["join"] in ("W+F", "F+W") or "+" in rep.outputs["join"]
+        # sequential would be 1 + 6 + 3 = 10; overlap saves the join time
+        assert rep.makespan_s < 10.0
