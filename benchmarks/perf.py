@@ -19,6 +19,7 @@ from repro.core.batch_decision import (
 )
 from repro.core.decision import speculation_decision
 from repro.core.posterior import BetaPosterior
+from repro.kernels import on_tpu, replay_grid_op
 
 A_C = 0.0135
 RNG = np.random.default_rng(7)
@@ -36,8 +37,8 @@ def bench_scalar_decision(n: int = 20_000) -> float:
 def bench_batch_decision(n: int = 1_000_000) -> float:
     """us per decision through the jit'd batch engine."""
     Ps = RNG.uniform(0, 1, n)
-    # warm up compile
-    batch_evaluate(Ps[:16], 0.5, 0.08, 0.8, 500, 800, 3e-6, 15e-6)[0].block_until_ready()
+    # warm up compile at the timed shape
+    batch_evaluate(Ps, 0.5, 0.08, 0.8, 500, 800, 3e-6, 15e-6)[0].block_until_ready()
     t0 = time.perf_counter()
     out = batch_evaluate(Ps, 0.5, 0.08, 0.8, 500, 800, 3e-6, 15e-6)
     out[0].block_until_ready()
@@ -66,9 +67,32 @@ def bench_batch_replay_grid(n_logs: int = 1_000_000) -> float:
     cost = np.full(n_logs, A_C)
     alphas = [0.0, 0.25, 0.5, 0.75, 1.0]
     lambdas = [0.005, 0.01, 0.05, 0.1]
-    counterfactual_grid(0.7, lat[:16], cost[:16], alphas, lambdas)  # warm
+    counterfactual_grid(0.7, lat, cost, alphas, lambdas)  # warm, same shape
     t0 = time.perf_counter()
     counterfactual_grid(0.7, lat, cost, alphas, lambdas)
+    cells = len(alphas) * len(lambdas) * n_logs
+    return (time.perf_counter() - t0) / cells * 1e6
+
+
+def bench_pallas_replay_grid(n_logs: int = 100_000) -> float:
+    """us per (row x grid-point) through the fused Pallas kernel.
+
+    On CPU the kernel runs under interpret=True (Python evaluation — a
+    correctness path, not a speed path); the number that matters there is
+    the jnp batch path above.  On TPU this is the fused single-launch
+    sweep."""
+    import jax.numpy as jnp
+
+    P = RNG.uniform(0.1, 0.9, n_logs).astype(np.float32)
+    lat = RNG.uniform(0.5, 3.0, n_logs).astype(np.float32)
+    cost = np.full(n_logs, A_C, np.float32)
+    alphas = np.array([0.0, 0.25, 0.5, 0.75, 1.0], np.float32)
+    lambdas = np.array([0.005, 0.01, 0.05, 0.1], np.float32)
+    args = [jnp.asarray(x) for x in (P, lat, cost, alphas, lambdas)]
+    replay_grid_op(*args)[0].block_until_ready()  # warm at the timed shape
+    t0 = time.perf_counter()
+    out = replay_grid_op(*args)
+    out[0].block_until_ready()
     cells = len(alphas) * len(lambdas) * n_logs
     return (time.perf_counter() - t0) / cells * 1e6
 
@@ -86,9 +110,20 @@ def bench_batch_posterior(edges: int = 4096, n: int = 256) -> float:
     a0 = np.full(edges, 1.0)
     b0 = np.full(edges, 1.0)
     outcomes = (RNG.random((edges, n)) < 0.6).astype(np.float32)
-    batch_posterior_update(a0[:4], b0[:4], outcomes[:4])  # warm
+    batch_posterior_update(a0, b0, outcomes)  # warm, same shape
     t0 = time.perf_counter()
     batch_posterior_update(a0, b0, outcomes)
+    return (time.perf_counter() - t0) / (edges * n) * 1e6
+
+
+def bench_discounted_posterior(edges: int = 4096, n: int = 256) -> float:
+    """Exponential-forgetting branch (sequential scan over trials)."""
+    a0 = np.full(edges, 1.0)
+    b0 = np.full(edges, 1.0)
+    outcomes = (RNG.random((edges, n)) < 0.6).astype(np.float32)
+    batch_posterior_update(a0, b0, outcomes, discount=0.99)  # warm, same shape
+    t0 = time.perf_counter()
+    batch_posterior_update(a0, b0, outcomes, discount=0.99)
     return (time.perf_counter() - t0) / (edges * n) * 1e6
 
 
@@ -102,8 +137,18 @@ def benchmarks() -> list[tuple[str, float, str]]:
     bg = bench_batch_replay_grid()
     rows.append(("replay_grid_scalar", sg, "per-cell"))
     rows.append(("replay_grid_batch_jax", bg, f"speedup={sg / bg:.0f}x"))
+    if on_tpu():
+        pg = bench_pallas_replay_grid()
+        rows.append(("replay_grid_pallas", pg,
+                     f"fused kernel, speedup={sg / pg:.0f}x"))
+    else:
+        # interpret=True is a correctness path; keep the row cheap on CPU
+        pg = bench_pallas_replay_grid(n_logs=2_000)
+        rows.append(("replay_grid_pallas_interpret", pg, "correctness-only"))
     sp = bench_scalar_posterior()
     bp = bench_batch_posterior()
     rows.append(("posterior_scalar", sp, "per-update"))
     rows.append(("posterior_batch_jax", bp, f"speedup={sp / bp:.0f}x"))
+    dp = bench_discounted_posterior()
+    rows.append(("posterior_batch_discounted_jax", dp, "per-update, d=0.99"))
     return rows

@@ -1,24 +1,67 @@
 """Benchmark harness entry point: one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV (one row per benchmark).
+Prints ``name,us_per_call,derived`` CSV (one row per benchmark) and
+persists every module's rows to ``BENCH_<module>.json`` at the repo root
+so the perf trajectory is machine-readable across PRs (the fleet replay
+additionally writes its own BENCH_fleet.json speedup record from
+``workflow_sim.fleet_speedup``).
 
     PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
+import pathlib
+import platform
 import sys
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
-def main() -> None:
+def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
+    out = {
+        "module": module_name,
+        "host": platform.machine(),
+        "python": platform.python_version(),
+        "unix_time": int(time.time()),
+        "rows": [
+            {"name": name, "us_per_call": us, "derived": derived}
+            for name, us, derived in rows
+        ],
+    }
+    path = ROOT / f"BENCH_{module_name}.json"
+    path.write_text(json.dumps(out, indent=2) + "\n")
+
+
+def main(only: list[str] | None = None) -> None:
     from . import appendix_d, paper_tables, perf, roofline, workflow_sim
 
+    modules = {
+        "paper_tables": paper_tables,
+        "appendix_d": appendix_d,
+        "workflow_sim": workflow_sim,
+        "perf": perf,
+        "roofline": roofline,
+    }
+    if only:
+        unknown = sorted(set(only) - set(modules))
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmark module(s) {unknown}; "
+                f"known: {sorted(modules)}"
+            )
+        modules = {k: v for k, v in modules.items() if k in only}
+
     rows: list[tuple[str, float, str]] = []
-    for mod in (paper_tables, appendix_d, workflow_sim, perf, roofline):
-        rows.extend(mod.benchmarks())
+    for name, mod in modules.items():
+        mod_rows = mod.benchmarks()
+        _persist(name, mod_rows)
+        rows.extend(mod_rows)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")
 
 
 if __name__ == "__main__":
-    main()
+    main(only=sys.argv[1:] or None)

@@ -1,15 +1,23 @@
 """End-to-end workflow simulation: the AutoReply scenario through the full
 planner + executor, sweeping alpha (§12.3 canary sweep, simulated).
 
-200 deterministic episodes per alpha: the upstream classifier emits an
-intent from a Zipf-ish 5-way distribution with p_mode = 0.62 (§7.6's
-running example); the downstream drafter is speculated with the modal
-prediction.  Output: per-alpha mean latency / cost / waste — the
-(latency, cost) Pareto the canary stage consumes — plus the sequential
-control arm.
+Two implementations of the same sweep:
+
+* ``sweep``        — paper-faithful scalar path: one discrete-event
+  ``execute`` call per episode (200 deterministic episodes per alpha; the
+  upstream classifier emits an intent from a Zipf-ish 5-way distribution
+  with p_mode = 0.62, §7.6's running example).
+* ``fleet_sweep``  — the vectorized replay engine (repro.core.fleet): all
+  episodes x all alphas in one jit-compiled XLA call.
+
+``benchmarks()`` runs both, asserts the Pareto statistics agree, and
+persists the speedup record to BENCH_fleet.json (machine-readable perf
+trajectory across PRs; see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -22,6 +30,8 @@ from repro.core import (
     PlannerParams,
     Workflow,
     execute,
+    fleet_replay,
+    lower_workflow,
     plan_workflow,
 )
 from repro.core.posterior import BetaPosterior
@@ -29,6 +39,10 @@ from repro.core.predictor import HistoricalModalPredictor
 
 INTENTS = ["billing", "support", "sales", "spam", "other"]
 PROBS = [0.62, 0.12, 0.10, 0.09, 0.07]
+DEFAULT_ALPHAS = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0)
+LAMBDA_USD_PER_S = 0.08
+SEED = 20260531
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
 
 
 def build_workflow(intent: str) -> Workflow:
@@ -47,10 +61,16 @@ def build_workflow(intent: str) -> Workflow:
     return wf.freeze()
 
 
-def sweep(alphas=(0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0), episodes: int = 200,
-          seed: int = 20260531) -> dict:
-    rng = np.random.default_rng(seed)
-    draws = rng.choice(len(INTENTS), size=episodes, p=PROBS)
+def _draws(episodes: int, seed: int = SEED) -> np.ndarray:
+    return np.random.default_rng(seed).choice(
+        len(INTENTS), size=episodes, p=PROBS
+    )
+
+
+def sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
+          seed: int = SEED) -> dict:
+    """Paper-faithful scalar sweep: plan + execute per episode."""
+    draws = _draws(episodes, seed)
     results = {}
     for alpha in alphas:
         post = BetaPosterior.from_dependency_type(DependencyType.ROUTER_K_WAY, k=5)
@@ -59,7 +79,7 @@ def sweep(alphas=(0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0), episodes: int = 200,
             intent = INTENTS[draws[e]]
             wf = build_workflow(intent)
             params = PlannerParams(
-                alpha=alpha, lambda_usd_per_s=0.08,
+                alpha=alpha, lambda_usd_per_s=LAMBDA_USD_PER_S,
                 posteriors={("classifier", "drafter"): post},
             )
             plan, _ = plan_workflow(wf, params)
@@ -94,14 +114,126 @@ def sweep(alphas=(0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0), episodes: int = 200,
     return results
 
 
+def fleet_sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
+                seed: int = SEED) -> dict:
+    """The same sweep through the vectorized fleet replay engine: one
+    XLA call for all episodes x alphas."""
+    draws = _draws(episodes, seed)
+    wf = build_workflow("billing")
+    edge_key = ("classifier", "drafter")
+    params = PlannerParams(
+        alpha=0.5, lambda_usd_per_s=LAMBDA_USD_PER_S,
+        posteriors={edge_key: BetaPosterior.from_dependency_type(
+            DependencyType.ROUTER_K_WAY, k=5)},
+    )
+    pred = HistoricalModalPredictor()
+    pred.observe("email", "billing")
+    lowered = lower_workflow(wf, params, predictors={edge_key: pred})
+    vi = lowered.names.index("drafter")
+    success = np.zeros((episodes, lowered.n_ops), bool)
+    success[:, vi] = draws == 0        # modal prediction is "billing"
+    report = fleet_replay(lowered, success, np.asarray(alphas),
+                          LAMBDA_USD_PER_S)
+    results = {}
+    for gi, alpha in enumerate(alphas):
+        results[alpha] = {
+            "latency_s": float(report.makespan_s[:, gi].mean()),
+            "cost_usd": float(report.total_cost_usd[:, gi].mean()),
+            "waste_usd": float(report.waste_usd[:, gi].mean()),
+            "launched": int(report.launched[:, gi].sum()),
+            "committed": int(report.committed[:, gi].sum()),
+            "posterior_final": float(
+                report.post_alpha[-1, gi, vi]
+                / (report.post_alpha[-1, gi, vi] + report.post_beta[-1, gi, vi])
+            ),
+        }
+    return results
+
+
+def assert_pareto_parity(scalar: dict, fleet: dict, alphas=DEFAULT_ALPHAS,
+                         rtol: float = 1e-4) -> dict:
+    """The fleet path must reproduce the scalar AutoReply Pareto: identical
+    launch/commit counts, matching latency/cost/waste means."""
+    worst = 0.0
+    for alpha in alphas:
+        s, f = scalar[alpha], fleet[alpha]
+        if s["launched"] != f["launched"] or s["committed"] != f["committed"]:
+            raise AssertionError(
+                f"fleet/scalar divergence at alpha={alpha}: "
+                f"launched {s['launched']}!={f['launched']} or committed "
+                f"{s['committed']}!={f['committed']}"
+            )
+        for key in ("latency_s", "cost_usd", "waste_usd"):
+            denom = max(abs(s[key]), 1e-12)
+            rel = abs(s[key] - f[key]) / denom
+            worst = max(worst, rel)
+            if rel > rtol:
+                raise AssertionError(
+                    f"fleet/scalar divergence at alpha={alpha} {key}: "
+                    f"{s[key]} vs {f[key]} (rel {rel:.2e})"
+                )
+    return {"max_rel_error": worst}
+
+
+def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
+                  seed: int = SEED) -> dict:
+    """Measure scalar vs fleet wall time on the identical sweep and persist
+    the record to BENCH_fleet.json."""
+    n_runs = len(alphas) * episodes
+
+    t0 = time.perf_counter()
+    scalar = sweep(alphas, episodes, seed)
+    scalar_s = time.perf_counter() - t0
+
+    fleet_sweep(alphas, 8, seed)   # warm up the jit cache (E is static)
+    fleet_sweep(alphas, episodes, seed)
+    t0 = time.perf_counter()
+    fleet = fleet_sweep(alphas, episodes, seed)
+    fleet_s = time.perf_counter() - t0
+
+    parity = assert_pareto_parity(scalar, fleet, alphas)
+    record = {
+        "benchmark": "autoreply_alpha_sweep",
+        "alphas": list(alphas),
+        "lambda_usd_per_s": LAMBDA_USD_PER_S,
+        "episodes": episodes,
+        "grid_points": len(alphas),
+        "scalar_total_s": scalar_s,
+        "fleet_total_s": fleet_s,
+        "scalar_us_per_episode": scalar_s / n_runs * 1e6,
+        "fleet_us_per_episode": fleet_s / n_runs * 1e6,
+        "speedup": scalar_s / fleet_s,
+        "parity": {
+            "max_rel_error": parity["max_rel_error"],
+            "launched_match": True,
+            "committed_match": True,
+        },
+        "pareto_fleet": {
+            str(a): fleet[a] for a in alphas
+        },
+    }
+    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
 def benchmarks() -> list[tuple[str, float, str]]:
+    rows = []
     t0 = time.perf_counter()
     res = sweep()
     dt = (time.perf_counter() - t0) * 1e6 / 200
     ctrl = res["control"]
     best = res[0.9]
-    return [(
+    rows.append((
         "workflow_alpha_sweep", dt,
         f"control={ctrl['latency_s']:.2f}s alpha0.9={best['latency_s']:.2f}s "
         f"waste=${best['waste_usd']:.4f} committed={best['committed']}/{best['launched']}",
-    )]
+    ))
+    record = fleet_speedup()
+    rows.append((
+        "workflow_fleet_replay", record["fleet_us_per_episode"],
+        f"speedup={record['speedup']:.0f}x vs scalar "
+        f"({record['scalar_us_per_episode']:.0f}us/ep -> "
+        f"{record['fleet_us_per_episode']:.2f}us/ep), "
+        f"parity max_rel={record['parity']['max_rel_error']:.1e}",
+    ))
+    return rows

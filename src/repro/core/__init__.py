@@ -33,6 +33,7 @@ from .telemetry import SpeculationDecision, TelemetryLog
 from .workflow import Edge, Operation, Workflow
 from .planner import Plan, PlannerParams, plan_workflow
 from .executor import ExecutionReport, ExecutorConfig, execute
+from .fleet import FleetLowered, FleetReport, fleet_replay, lower_workflow
 from .streaming import (
     RhoEstimator,
     StreamingReestimator,
@@ -60,6 +61,8 @@ __all__ = [
     # §8
     "Plan", "PlannerParams", "plan_workflow",
     "ExecutorConfig", "ExecutionReport", "execute",
+    # §12 fleet-scale replay (beyond-paper fast path)
+    "FleetLowered", "FleetReport", "lower_workflow", "fleet_replay",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

@@ -24,6 +24,8 @@ __all__ = [
     "batch_posterior_update",
     "batch_implied_lambda",
     "critical_k_grid",
+    "batch_chunk_cancel",
+    "batch_fractional_waste",
 ]
 
 
@@ -92,10 +94,91 @@ def _post_update(alpha0, beta0, successes):
     return alpha0 + s, beta0 + (n - s)
 
 
-def batch_posterior_update(alpha0, beta0, outcomes):
-    """Bulk conjugate update for E edges at once: Beta(a0+s, b0+f)."""
-    a, b = _post_update(_f(alpha0), _f(beta0), _f(outcomes))
+@jax.jit
+def _post_update_discounted(alpha0, beta0, successes, discount):
+    # sequential over the trial axis so the exponential forgetting matches
+    # BetaPosterior.update exactly (a <- a*d + x_i per observation)
+    def step(ab, x):
+        a, b = ab
+        return (a * discount + x, b * discount + (1.0 - x)), None
+
+    (a, b), _ = jax.lax.scan(
+        step, (alpha0, beta0), jnp.moveaxis(successes, -1, 0)
+    )
+    return a, b
+
+
+def batch_posterior_update(alpha0, beta0, outcomes, discount: float = 1.0):
+    """Bulk conjugate update for E edges at once.
+
+    ``discount=1`` is the paper's exact update, Beta(a0+s, b0+f), as one
+    fused sum.  ``discount<1`` mirrors the exponential-forgetting branch of
+    ``BetaPosterior.update`` (§14.3): a sequential ``lax.scan`` over the
+    trial axis, vectorized across edges, bitwise-matching the scalar loop.
+    """
+    if discount == 1.0:
+        a, b = _post_update(_f(alpha0), _f(beta0), _f(outcomes))
+    else:
+        a, b = _post_update_discounted(
+            _f(alpha0), _f(beta0), _f(outcomes), _f(discount)
+        )
     return np.asarray(a), np.asarray(b)
+
+
+@functools.partial(jax.jit, static_argnames=("throttle_every",))
+def _chunk_cancel(P_k, alpha, lam, latency_s, in_tok, out_tok,
+                  in_price, out_price, throttle_every):
+    C_spec = in_tok * in_price + out_tok * out_price
+    L_value = latency_s * lam
+    EV_k = P_k * L_value[..., None] - (1.0 - P_k) * C_spec[..., None]
+    thr = ((1.0 - alpha) * C_spec)[..., None]
+    K = P_k.shape[-1]
+    valid = (jnp.arange(K) % throttle_every) == 0
+    wait_k = valid & (EV_k < thr)
+    cancelled = wait_k.any(-1)
+    first = jnp.argmax(wait_k, axis=-1)
+    return jnp.where(cancelled, first, -1), cancelled, EV_k, thr
+
+
+def batch_chunk_cancel(
+    P_chunks, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price,
+    *, throttle_every: int = 1,
+):
+    """Vectorized §9.1 per-chunk re-estimation across a fleet of in-flight
+    edges: re-run the D4 gate at every streamed chunk and return the first
+    WAIT verdict per stream.
+
+    ``P_chunks``: (..., K) refined success probabilities P_k; scalar inputs
+    broadcast.  Returns ``(first_cancel_idx, cancelled, EV_k, threshold)``
+    where ``first_cancel_idx`` is -1 for streams that never cancel —
+    matching ``StreamingReestimator.run`` chunk-for-chunk (throttled chunks
+    are skipped, not evaluated, exactly as the scalar loop does).
+    """
+    P_chunks = _f(P_chunks)
+    args = [jnp.broadcast_to(_f(x), P_chunks.shape[:-1]) for x in (
+        alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
+    )]
+    first, cancelled, EV_k, thr = _chunk_cancel(
+        P_chunks, *args, throttle_every=int(throttle_every)
+    )
+    return (np.asarray(first), np.asarray(cancelled),
+            np.asarray(EV_k), np.broadcast_to(np.asarray(thr), EV_k.shape))
+
+
+@jax.jit
+def _frac_waste(in_tok, out_tok, frac, in_price, out_price):
+    # same expression order as streaming.fractional_waste:
+    # c_in(full prompt) + c_out(frac * planned output); frac > 1 bills
+    # actuals, exactly like the scalar path
+    return in_tok * in_price + (frac * out_tok) * out_price
+
+
+def batch_fractional_waste(in_tok, out_tok, frac, in_price, out_price):
+    """Vectorized §9.3 C_spec_actual for cancelled speculations: full input
+    cost plus only the output tokens actually emitted."""
+    return np.asarray(_frac_waste(
+        _f(in_tok), _f(out_tok), _f(frac), _f(in_price), _f(out_price)
+    ))
 
 
 @jax.jit

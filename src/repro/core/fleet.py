@@ -1,0 +1,463 @@
+"""Vectorized fleet-scale replay engine (beyond-paper fast path).
+
+The paper's calibration pipeline (§12: offline replay, shadow, canary,
+online calibration) replays millions of logged decisions across an
+(alpha, lambda) grid.  The paper-faithful discrete-event executor
+(``repro.core.executor``) walks one episode at a time in Python; this
+module lowers a frozen :class:`~repro.core.workflow.Workflow` DAG into
+dense arrays and simulates
+
+    episodes x (alpha, lambda) grid points x DAG ops
+
+in a **single jit-compiled XLA call**: ``lax.scan`` over episodes (the
+per-edge Beta posterior is the sequential carry, exactly as the scalar
+path threads one ``BetaPosterior`` through a sweep), ``vmap`` over grid
+points, and an inner ``lax.scan`` over ops in topological order (a
+topological schedule of the DAG).
+
+Semantics mirror ``executor.execute`` exactly — Phase-2 re-evaluation at
+the upstream's start time, speculative launch/commit/cancel timing,
+per-chunk streaming re-estimation (§9.1), fractional waste (§9.3),
+discounted Beta updates (§14.3 / posterior.py) — and the parity suite
+(tests/test_fleet_parity.py) asserts float64 agreement with the scalar
+path on randomized DAGs: decisions, counts, event times and posterior
+trajectories bitwise; EV/waste to 1 ULP (XLA contracts a*b + c into a
+single FMA where CPython rounds twice).
+
+Scope (checked at lowering time):
+
+* at most one speculation-candidate edge per downstream op (the scalar
+  executor has the same single-edge-per-op structure via its
+  ``plan_edges`` map);
+* constant alpha per grid point (no ``alpha_fn``), posterior-mean gating
+  (``use_lower_bound=False`` — the credible bound needs an inverse
+  incomplete beta, not expressible as dense XLA here);
+* predictions are summarized per episode as (exists, tier-success)
+  booleans plus optional per-chunk confidences P_k — i.e. the replay
+  consumes §7.4-labelled logs, it does not re-run predictors.
+
+Recorded in EXPERIMENTS.md §Perf next to the scalar path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .admissibility import AdmissibilityTag
+from .batch_decision import _f  # widest-enabled-float coercion, shared
+from .planner import PlannerParams
+from .workflow import Workflow
+
+__all__ = ["FleetLowered", "FleetReport", "lower_workflow", "fleet_replay"]
+
+
+# ----------------------------------------------------------------- lowering
+@dataclasses.dataclass(frozen=True)
+class FleetLowered:
+    """A frozen Workflow as dense arrays, ops indexed in topological order.
+
+    Per-op edge fields describe the (unique) speculation-candidate edge
+    into that op; ``has_edge`` masks ops without one.
+    """
+
+    names: tuple[str, ...]
+    dur: np.ndarray            # (V,) simulated op duration (s)
+    op_cost: np.ndarray        # (V,) base op cost (USD)
+    parent_mask: np.ndarray    # (V, V) bool; parent_mask[v, u] = u -> v
+    has_edge: np.ndarray       # (V,) bool: candidate edge into v exists
+    u_onehot: np.ndarray       # (V, V) bool one-hot of the spec upstream
+    u_streams: np.ndarray      # (V,) bool: upstream streams (enables §9)
+    lat_save: np.ndarray       # (V,) latency savings L for the edge (s)
+    in_tok: np.ndarray         # (V,) downstream input tokens
+    out_tok: np.ndarray        # (V,) downstream output tokens
+    in_price: np.ndarray       # (V,) USD / input token
+    out_price: np.ndarray      # (V,) USD / output token
+    pred_cost: np.ndarray      # (V,) predictor cost_estimate_s
+    has_pred: np.ndarray       # (V,) bool: a predictor is attached
+    streams: np.ndarray        # (V,) bool: downstream streams (cancel -> frac)
+    has_refiner: np.ndarray    # (V,) bool: stream refiner attached (§9.1)
+    n_chunks: np.ndarray       # (V,) upstream chunk count
+    a0: np.ndarray             # (V,) prior Beta alpha per edge
+    b0: np.ndarray             # (V,) prior Beta beta per edge
+    discount: np.ndarray       # (V,) exponential forgetting factor
+
+    @property
+    def n_ops(self) -> int:
+        return len(self.names)
+
+    def edge_ops(self) -> list[int]:
+        """Indices of ops with a speculation-candidate edge."""
+        return [i for i in range(self.n_ops) if self.has_edge[i]]
+
+
+def lower_workflow(
+    wf: Workflow,
+    params: PlannerParams,
+    predictors: Optional[dict] = None,
+    stream_refiners: Optional[dict] = None,
+    *,
+    default_chunks: int = 10,
+) -> FleetLowered:
+    """Lower a frozen workflow + planner params to dense episode arrays.
+
+    Mirrors the scalar path's per-edge inputs: latency savings default to
+    min(lat_u, lat_v), prices come from the downstream op's pricing entry,
+    priors from ``params.posterior_for`` (so data-seeded / discounted
+    posteriors carry over).
+    """
+    from .pricing import get_pricing
+
+    if not wf.frozen:
+        raise ValueError("lower_workflow requires a frozen workflow")
+    if params.use_lower_bound:
+        raise NotImplementedError(
+            "fleet replay gates on the posterior mean; §7.5 credible-bound "
+            "gating stays on the scalar path"
+        )
+    predictors = predictors or {}
+    stream_refiners = stream_refiners or {}
+    topo = wf.topo_order()
+    idx = {n: i for i, n in enumerate(topo)}
+    V = len(topo)
+
+    dur = np.zeros(V)
+    op_cost = np.zeros(V)
+    parent_mask = np.zeros((V, V), bool)
+    has_edge = np.zeros(V, bool)
+    u_onehot = np.zeros((V, V), bool)
+    u_streams = np.zeros(V, bool)
+    lat_save = np.zeros(V)
+    in_tok = np.zeros(V)
+    out_tok = np.zeros(V)
+    in_price = np.zeros(V)
+    out_price = np.zeros(V)
+    pred_cost = np.zeros(V)
+    has_pred = np.zeros(V, bool)
+    streams = np.zeros(V, bool)
+    has_refiner = np.zeros(V, bool)
+    n_chunks = np.zeros(V)
+    a0 = np.ones(V)
+    b0 = np.ones(V)
+    discount = np.ones(V)
+
+    candidates = {}
+    for edge in wf.speculation_candidates():
+        v = edge.downstream
+        if v in candidates:
+            raise NotImplementedError(
+                f"op {v!r} has multiple speculation-candidate edges; the "
+                "fleet lowering (like the scalar executor's plan_edges map) "
+                "supports one per downstream op"
+            )
+        candidates[v] = edge
+
+    for name, i in idx.items():
+        op = wf.ops[name]
+        dur[i] = float(op.metadata.get("sim_latency_s", op.latency_est_s))
+        pricing = get_pricing(op.provider, op.model)
+        op_cost[i] = (
+            op.input_tokens_est * pricing.input_price_per_token
+            + op.output_tokens_est * pricing.output_price_per_token
+        )
+        for p in wf.parents(name):
+            parent_mask[i, idx[p]] = True
+        edge = candidates.get(name)
+        if edge is None:
+            continue
+        if op.admissibility == AdmissibilityTag.NON_SPECULABLE:
+            continue  # speculation_candidates already excludes these
+        u = edge.upstream
+        up = wf.ops[u]
+        has_edge[i] = True
+        u_onehot[i, idx[u]] = True
+        u_streams[i] = up.streams
+        lat_save[i] = params.latency_savings_s.get(
+            edge.key, min(up.latency_est_s, op.latency_est_s)
+        )
+        in_tok[i] = op.input_tokens_est
+        out_tok[i] = op.output_tokens_est
+        in_price[i] = pricing.input_price_per_token
+        out_price[i] = pricing.output_price_per_token
+        pred = predictors.get(edge.key)
+        has_pred[i] = pred is not None
+        pred_cost[i] = getattr(pred, "cost_estimate_s", 0.0) if pred else 0.0
+        streams[i] = op.streams
+        has_refiner[i] = edge.key in stream_refiners
+        n_chunks[i] = float(up.metadata.get("chunks", default_chunks))
+        post = params.posterior_for(edge)
+        a0[i], b0[i] = post.alpha, post.beta
+        discount[i] = post.discount
+
+    return FleetLowered(
+        names=tuple(topo), dur=dur, op_cost=op_cost, parent_mask=parent_mask,
+        has_edge=has_edge, u_onehot=u_onehot, u_streams=u_streams,
+        lat_save=lat_save, in_tok=in_tok, out_tok=out_tok, in_price=in_price,
+        out_price=out_price, pred_cost=pred_cost, has_pred=has_pred,
+        streams=streams, has_refiner=has_refiner, n_chunks=n_chunks,
+        a0=a0, b0=b0, discount=discount,
+    )
+
+
+# -------------------------------------------------------------------- report
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    """Aggregates plus full per-episode trajectories.
+
+    All arrays are numpy; shapes use G = grid points, E = episodes,
+    V = ops in topo order (per-edge fields valid where ``has_edge``).
+    """
+
+    alphas: np.ndarray          # (G,)
+    lambdas: np.ndarray         # (G,)
+    makespan_s: np.ndarray      # (E, G)
+    total_cost_usd: np.ndarray  # (E, G)
+    waste_usd: np.ndarray       # (E, G)
+    launched: np.ndarray        # (E, G)
+    committed: np.ndarray       # (E, G)
+    cancelled: np.ndarray       # (E, G)
+    EV_usd: np.ndarray          # (E, G, V) Phase-2 EV per candidate edge
+    threshold_usd: np.ndarray   # (E, G, V)
+    speculate: np.ndarray       # (E, G, V) Phase-2 D4 verdict
+    edge_launched: np.ndarray   # (E, G, V)
+    edge_committed: np.ndarray  # (E, G, V)
+    edge_waste_usd: np.ndarray  # (E, G, V)
+    start_s: np.ndarray         # (E, G, V)
+    finish_s: np.ndarray        # (E, G, V)
+    post_alpha: np.ndarray      # (E, G, V) posterior after each episode
+    post_beta: np.ndarray       # (E, G, V)
+
+    def pareto(self) -> dict:
+        """Per-grid-point mean (latency, cost, waste) — the §12.3 canary
+        Pareto the calibration stage consumes."""
+        return {
+            "alphas": self.alphas,
+            "lambdas": self.lambdas,
+            "latency_s": self.makespan_s.mean(0),
+            "cost_usd": self.total_cost_usd.mean(0),
+            "waste_usd": self.waste_usd.mean(0),
+            "launched": self.launched.sum(0),
+            "committed": self.committed.sum(0),
+        }
+
+
+# -------------------------------------------------------------- fleet sweep
+def fleet_replay(
+    lowered: FleetLowered,
+    success: np.ndarray,
+    alphas,
+    lambdas,
+    *,
+    pred_ok: Optional[np.ndarray] = None,
+    chunk_P: Optional[np.ndarray] = None,
+    throttle_every: int = 1,
+) -> FleetReport:
+    """Replay E episodes x G grid points in one jit'd XLA call.
+
+    Args:
+      lowered: output of :func:`lower_workflow`.
+      success: (E, V) bool — per-episode tier success of the candidate
+        edge into op v (§7.4 label); ignored where ``has_edge`` is False.
+      alphas / lambdas: length-G paired grid points (mesh them for a full
+        §12.1 cross product); a scalar lambda broadcasts over alphas.
+      pred_ok: (E, V) bool — a prediction existed at launch (default: the
+        lowering's ``has_pred``).
+      chunk_P: (E, V, K) refined per-chunk confidences P_k for §9.1
+        mid-stream re-estimation; omit to disable streaming cancels.
+      throttle_every: §9.1 throttling — re-evaluate every N chunks.
+
+    The per-edge Beta posterior is carried sequentially across episodes
+    (scan), independently per grid point (vmap), exactly like running the
+    scalar sweep once per grid point.
+    """
+    success = np.asarray(success, bool)
+    E, V = success.shape
+    if V != lowered.n_ops:
+        raise ValueError(f"success has {V} ops, workflow has {lowered.n_ops}")
+    alphas = np.atleast_1d(np.asarray(alphas, float))
+    lambdas = np.atleast_1d(np.asarray(lambdas, float))
+    if lambdas.shape[0] == 1 and alphas.shape[0] > 1:
+        lambdas = np.broadcast_to(lambdas, alphas.shape).copy()
+    if alphas.shape != lambdas.shape:
+        raise ValueError("alphas and lambdas must be paired (same length)")
+    if pred_ok is None:
+        pred_ok = np.broadcast_to(lowered.has_pred, (E, V)).copy()
+    if chunk_P is None:
+        K = 1
+        chunk_P = np.ones((E, V, 1))
+        has_refiner = np.zeros(V, bool)
+    else:
+        chunk_P = np.asarray(chunk_P, float)
+        K = chunk_P.shape[-1]
+        has_refiner = lowered.has_refiner
+
+    ys = _fleet_scan(
+        _pack_static(lowered, has_refiner),
+        _f(lowered.a0), _f(lowered.b0), _f(lowered.discount),
+        _f(alphas), _f(lambdas),
+        jnp.asarray(success), jnp.asarray(pred_ok, bool),
+        _f(chunk_P), int(throttle_every), int(K),
+    )
+    np_out = {k: np.asarray(v) for k, v in ys.items()}
+    return FleetReport(alphas=alphas, lambdas=lambdas, **np_out)
+
+
+def _pack_static(lowered: FleetLowered, has_refiner: np.ndarray):
+    return (
+        jnp.asarray(lowered.parent_mask),
+        jnp.asarray(lowered.u_onehot),
+        _f(lowered.dur), _f(lowered.op_cost),
+        jnp.asarray(lowered.has_edge),
+        jnp.asarray(lowered.u_streams),
+        _f(lowered.lat_save), _f(lowered.in_tok), _f(lowered.out_tok),
+        _f(lowered.in_price), _f(lowered.out_price), _f(lowered.pred_cost),
+        jnp.asarray(lowered.has_pred),
+        jnp.asarray(lowered.streams),
+        jnp.asarray(has_refiner),
+        _f(lowered.n_chunks),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("throttle_every", "K"))
+def _fleet_scan(static, a0, b0, discount, alphas, lambdas,
+                success, pred_ok, chunk_P, throttle_every, K):
+    G = alphas.shape[0]
+    V = a0.shape[0]
+    post0 = jnp.broadcast_to(jnp.stack([a0, b0], -1)[None], (G, V, 2))
+
+    episode = functools.partial(
+        _episode, static, discount, (K, throttle_every)
+    )
+
+    def ep_step(post_ab, xs):
+        succ_e, pred_e, chunks_e = xs
+        # vmap over grid points: independent posterior trajectory each
+        post_new, stats = jax.vmap(
+            episode, in_axes=(0, 0, 0, None, None, None)
+        )(post_ab, alphas, lambdas, succ_e, pred_e, chunks_e)
+        return post_new, stats
+
+    _, ys = jax.lax.scan(ep_step, post0, (success, pred_ok, chunk_P))
+    return ys
+
+
+def _episode(static, discount, chunk_cfg, post_ab, alpha, lam,
+             succ, pred_ok, chunk_P):
+    """One episode at one grid point.  All per-op arrays have length V."""
+    (parent_mask, u_onehot, dur, op_cost, has_edge, u_streams, lat_save,
+     in_tok, out_tok, in_price, out_price, pred_cost, has_pred, streams,
+     has_refiner, n_chunks) = static
+    K, throttle_every = chunk_cfg
+    V = dur.shape[0]
+    a, b = post_ab[:, 0], post_ab[:, 1]
+    P = a / (a + b)
+    neg = jnp.asarray(-jnp.inf, dur.dtype)
+
+    # Phase-2 D4 gate, identical expression order to decision.evaluate
+    # (§6.1) so float64 results match the scalar path bitwise
+    C_spec = in_tok * in_price + out_tok * out_price
+    L_value = lat_save * lam
+    EV = P * L_value - (1.0 - P) * C_spec
+    threshold = (1.0 - alpha) * C_spec
+    spec_dec = EV >= threshold
+    c_in = in_tok * in_price
+
+    k_idx = jnp.arange(K)
+
+    def step(carry, xs):
+        start, finish = carry
+        (pmask, umask, dur_v, spec_v, pc_v, launch_gate_v, streams_v,
+         u_streams_v, has_ref_v, nch_v, c_in_v, out_tok_v, out_price_v,
+         Lval_v, Cspec_v, thr_v, succ_v, pred_ok_v, P_chunks_v, vmask) = xs
+        # plain-path ready time: all parents finished
+        t_ready = jnp.max(jnp.where(pmask, finish, neg), initial=0.0)
+        start_u = jnp.sum(jnp.where(umask, start, 0.0))
+        finish_u = jnp.sum(jnp.where(umask, finish, 0.0))
+        other_ready = jnp.max(jnp.where(pmask & ~umask, finish, neg),
+                              initial=0.0)
+        launched = spec_v & launch_gate_v & pred_ok_v
+        t_launch = jnp.maximum(start_u + pc_v, other_ready)
+
+        # §9.1 vectorized per-chunk re-estimation: EV_k with refined P_k,
+        # same L_value / C_spec / threshold; first WAIT verdict cancels
+        u_dur = finish_u - start_u
+        valid_k = (
+            (k_idx < nch_v) & (k_idx % throttle_every == 0)
+            & launched & u_streams_v & has_ref_v
+        )
+        EV_k = P_chunks_v * Lval_v - (1.0 - P_chunks_v) * Cspec_v
+        cancel_k = valid_k & (EV_k < thr_v)
+        cancelled = cancel_k.any()
+        first_k = jnp.argmax(cancel_k)
+        t_chunk = start_u + (first_k + 1.0) / jnp.maximum(nch_v, 1.0) * u_dur
+        elapsed_c = jnp.maximum(0.0, t_chunk - t_launch)
+        frac_c = jnp.where(dur_v > 0.0,
+                           jnp.minimum(1.0, elapsed_c / dur_v), 1.0)
+
+        committed = launched & succ_v & ~cancelled
+        # timing mirrors executor.execute: commit at max(spec finish,
+        # u finish); failure / cancel re-executes after u
+        t1_commit = jnp.maximum(t_launch + dur_v, finish_u)
+        t0 = jnp.where(committed, t_launch,
+                       jnp.where(launched, finish_u, t_ready))
+        t1 = jnp.where(committed, t1_commit,
+                       jnp.where(launched, finish_u + dur_v,
+                                 t_ready + dur_v))
+
+        # §9.3 fractional waste (fractional_waste expression order:
+        # c_in + (frac * out_tok) * out_price); non-streaming downstream
+        # cannot cancel mid-generation -> full C_spec on tier failure
+        elapsed_f = jnp.maximum(0.0, finish_u - t_launch)
+        frac_f = jnp.where(dur_v > 0.0,
+                           jnp.minimum(1.0, elapsed_f / dur_v), 1.0)
+        frac_f = jnp.where(streams_v, frac_f, 1.0)
+        frac = jnp.where(cancelled, frac_c, frac_f)
+        waste_v = c_in_v + (frac * out_tok_v) * out_price_v
+        waste_v = jnp.where(launched & ~committed, waste_v, 0.0)
+
+        start = jnp.where(vmask, t0, start)
+        finish = jnp.where(vmask, t1, finish)
+        outs = (launched, committed, launched & cancelled, waste_v, t0, t1)
+        return (start, finish), outs
+
+    xs = (
+        parent_mask, u_onehot, dur, spec_dec, pred_cost,
+        has_edge & has_pred, streams, u_streams, has_refiner, n_chunks,
+        c_in, out_tok, out_price, L_value, C_spec, threshold,
+        succ, pred_ok, chunk_P, jnp.eye(V, dtype=bool),
+    )
+    init = (jnp.zeros(V, dur.dtype), jnp.zeros(V, dur.dtype))
+    (start, finish), (launched, committed, cancelled, waste,
+                      t0s, t1s) = jax.lax.scan(step, init, xs)
+
+    # discounted conjugate update (BetaPosterior.update, §14.3): only
+    # launched edges observe a Bernoulli trial; d=1 reduces to a+1 / b+1
+    suc_f = committed.astype(a.dtype)
+    a_new = jnp.where(launched, a * discount + suc_f, a)
+    b_new = jnp.where(launched, b * discount + (1.0 - suc_f), b)
+    post_new = jnp.stack([a_new, b_new], -1)
+
+    waste_total = waste.sum()
+    stats = {
+        "makespan_s": jnp.max(finish, initial=0.0),
+        "total_cost_usd": op_cost.sum() + waste_total,
+        "waste_usd": waste_total,
+        "launched": launched.sum(),
+        "committed": committed.sum(),
+        "cancelled": cancelled.sum(),
+        "EV_usd": EV,
+        "threshold_usd": threshold,
+        "speculate": spec_dec,
+        "edge_launched": launched,
+        "edge_committed": committed,
+        "edge_waste_usd": waste,
+        "start_s": t0s,
+        "finish_s": t1s,
+        "post_alpha": a_new,
+        "post_beta": b_new,
+    }
+    return post_new, stats

@@ -113,6 +113,18 @@ class BetaPosterior:
         self.failures += f
         return self
 
+    def update_many(self, outcomes) -> "BetaPosterior":
+        """Sequential Bernoulli updates (order matters when discount < 1).
+
+        This is the scalar reference for the vectorized
+        ``repro.core.batch_decision.batch_posterior_update``, which applies
+        the same per-observation recurrence across thousands of edges in
+        one XLA call (tests assert they agree to 1 ULP at float64).
+        """
+        for x in outcomes:
+            self.update(bool(x))
+        return self
+
     # --------------------------------------------------------------- queries
     @property
     def n(self) -> int:

@@ -13,6 +13,12 @@ not the full C_spec.  The planner's pessimism is reduced accordingly:
 
 with rho the expected cancel fraction (EMA from streaming history; default
 0.5 with no history, §9.3).
+
+This module is the scalar (per-stream) reference.  The fleet-scale
+equivalents — one XLA call across thousands of in-flight streams — live
+in ``repro.core.batch_decision`` (``batch_chunk_cancel``,
+``batch_fractional_waste``) and inside the ``repro.core.fleet`` episode
+simulator; parity tests pin them to this module chunk-for-chunk.
 """
 from __future__ import annotations
 

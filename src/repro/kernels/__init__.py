@@ -4,11 +4,12 @@ from .ops import (
     decode_attention_op,
     flash_attention,
     on_tpu,
+    replay_grid_op,
     rglru_scan_op,
     ssd_scan_op,
 )
 
 __all__ = [
     "flash_attention", "decode_attention_op", "rglru_scan_op",
-    "ssd_scan_op", "on_tpu",
+    "ssd_scan_op", "replay_grid_op", "on_tpu",
 ]

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 from . import ref as _ref
 from .decode_attention import decode_attention_kernel_call
 from .flash_attention import flash_attention_fwd
+from .replay_grid import replay_grid_kernel_call
 from .rglru_scan import rglru_scan_kernel_call
 from .ssd_scan import ssd_scan_kernel_call
 
@@ -25,6 +26,7 @@ __all__ = [
     "decode_attention_op",
     "rglru_scan_op",
     "ssd_scan_op",
+    "replay_grid_op",
     "on_tpu",
 ]
 
@@ -83,3 +85,12 @@ def ssd_scan_op(x, A, Bm, Cm, chunk: int = 128):
     """Mamba-2 SSD chunk scan.  Returns y (B,S,H,P)."""
     return ssd_scan_kernel_call(x, A, Bm, Cm, chunk=chunk,
                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("rho",))
+def replay_grid_op(P, lat, cost, alphas, lambdas, rho: float = 0.5):
+    """§12.1 fused counterfactual (alpha, lambda) grid sweep: one kernel
+    launch over all log rows x grid cells.  Returns (A, L) arrays
+    (speculate_count, expected_latency_sum, expected_waste_sum)."""
+    return replay_grid_kernel_call(P, lat, cost, alphas, lambdas,
+                                   rho=rho, interpret=_interpret())

@@ -12,6 +12,7 @@ __all__ = [
     "reference_decode_attention",
     "reference_rglru_scan",
     "reference_ssd_scan",
+    "reference_replay_grid",
 ]
 
 
@@ -112,3 +113,25 @@ def reference_ssd_scan(
     h, ys = jax.lax.scan(step, h, jnp.arange(S))
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                   # (B,S,H,P)
     return y, h
+
+
+def reference_replay_grid(
+    P: jax.Array,        # (n,) per-row success probability
+    lat: jax.Array,      # (n,) latency savings per row (s)
+    cost: jax.Array,     # (n,) C_spec per row (USD)
+    alphas: jax.Array,   # (A,)
+    lambdas: jax.Array,  # (L,)
+    rho: float = 0.5,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Naive §12.1 counterfactual grid: per-cell (A, L) sums of speculate
+    count, expected latency, expected waste over the n log rows."""
+    gain = (P * lat)[None, None, :] * lambdas[None, :, None]
+    lose = ((1.0 - P) * cost)[None, None, :]
+    ev = gain - lose
+    thr = (1.0 - alphas)[:, None, None] * cost[None, None, :]
+    spec = ev >= thr
+    count = spec.sum(-1).astype(P.dtype)
+    exp_lat = jnp.where(spec, (lat * (1.0 - P))[None, None, :],
+                        lat[None, None, :]).sum(-1)
+    waste = (spec * lose).sum(-1) * rho
+    return count, exp_lat, waste

@@ -233,7 +233,8 @@ class Model:
             logz = jax.nn.logsumexp(logits, axis=-1)
             gold = jnp.take_along_axis(logits, lab_i[..., None], axis=-1)[..., 0]
             nll = (logz - gold)
-            w = jnp.broadcast_to(m_i[None, :, *([None] * (nll.ndim - 2))], nll.shape)
+            w = jnp.broadcast_to(
+                m_i[(None, slice(None)) + (None,) * (nll.ndim - 2)], nll.shape)
             return (nll * w).sum(), w.sum()
 
         if static:

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import REGISTRY
 from repro.models import build_model
 
+pytestmark = pytest.mark.slow  # interpreter-mode model steps, minutes on CPU
+
 ARCHS = sorted(REGISTRY)
 
 

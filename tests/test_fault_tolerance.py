@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # kill/restart + compression loops
+
 from repro.checkpoint.io import (
     AsyncSaver,
     available_steps,

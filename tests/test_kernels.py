@@ -5,6 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # interpret=True Pallas sweeps
+
 from repro.kernels import (
     decode_attention_op,
     flash_attention,

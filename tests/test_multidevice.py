@@ -1,10 +1,13 @@
 """Multi-device tests (8 forced host devices via subprocess — the parent
 pytest process must keep seeing 1 device, so each test spawns its own
 python with XLA_FLAGS set before jax import)."""
+import pytest
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
+
+pytestmark = pytest.mark.slow  # spawns 8-device subprocess per test
 
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
