@@ -2,6 +2,7 @@
 for LLM-agent workflows (five dimensions D1-D5 + auxiliary mechanisms)."""
 
 from .admissibility import AdmissibilityTag, CommitBarrier, NonSpeculableError
+from .betainc import betaincinv
 from .decision import (
     Decision,
     DecisionInputs,
@@ -52,9 +53,9 @@ __all__ = [
     "speculation_decision", "expected_value", "decision_threshold",
     "critical_k", "p_break_even", "p_threshold_crossing", "implied_lambda",
     "LambdaDerivation",
-    # D5
+    # D5 (+ §7.5 jax-native credible-bound numerics)
     "BetaPosterior", "DependencyType", "structural_prior", "auto_assign",
-    "effective_k",
+    "effective_k", "betaincinv",
     # §7.4 / §3.3
     "TierPolicy", "check_success", "AdmissibilityTag", "CommitBarrier",
     "NonSpeculableError",

@@ -18,8 +18,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .betainc import betaincinv
+
 __all__ = [
     "batch_evaluate",
+    "batch_lower_bound",
     "counterfactual_grid",
     "batch_posterior_update",
     "batch_implied_lambda",
@@ -45,21 +48,50 @@ def _f(x):
 
 
 def batch_evaluate(
-    P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
+    P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price,
+    *, P_lower=None,
 ):
     """Vectorized D4 gate.  All inputs broadcastable arrays.  Returns
-    (EV, threshold, speculate_mask, C_spec, L_value)."""
+    (EV, threshold, speculate_mask, C_spec, L_value).
+
+    ``P_lower`` enables the §7.5 credible-bound variant: the gate (and the
+    reported EV — matching ``decision.evaluate(use_lower_bound=True)``,
+    whose ``P_used`` is the bound) runs on the one-sided lower credible
+    bound instead of the posterior mean.  Compute it in bulk with
+    :func:`batch_lower_bound`.
+    """
+    gate_P = P if P_lower is None else P_lower
     args = [_f(x) for x in (
-        P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
+        gate_P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
     )]
     return _batch_evaluate(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("rho",))
-def _grid(P, lat, cost, alphas, lams, rho):
-    # decisions[a, l, n] for n log rows at each (alpha, lambda) grid point
+@jax.jit
+def _lower_bound(alpha, beta, gamma):
+    return betaincinv(alpha, beta, gamma)
+
+
+def batch_lower_bound(alpha, beta, gamma=0.1):
+    """§7.5 one-sided (1-gamma) lower credible bound, vectorized.
+
+    ``Beta^{-1}(gamma; alpha, beta)`` across whole fleets of posterior
+    parameters in one XLA call — the jax-native equivalent of
+    ``BetaPosterior.lower_bound`` / ``scipy.stats.beta.ppf`` (agreement
+    pinned to <= 1e-10 relative by tests/test_betaincinv.py).
+    """
+    return np.asarray(_lower_bound(_f(alpha), _f(beta), _f(gamma)))
+
+
+@jax.jit
+def _grid(P, P_gate, lat, cost, alphas, lams, rho):
+    # decisions[a, l, n] for n log rows at each (alpha, lambda) grid point;
+    # the gate runs on P_gate (== P, or the §7.5 lower bound) while the
+    # counterfactual expectations stay weighted by the posterior mean P.
+    # rho is traced (not static): calibration sweeps vary it per call and
+    # must not retrigger XLA compilation.
     L_value = lat[None, None, :] * lams[None, :, None]
-    EV = P * L_value - (1.0 - P) * cost[None, None, :]
+    EV = P_gate * L_value - (1.0 - P_gate) * cost[None, None, :]
     thr = (1.0 - alphas[:, None, None]) * cost[None, None, :]
     spec = EV >= thr
     frac = spec.mean(axis=-1)
@@ -69,14 +101,23 @@ def _grid(P, lat, cost, alphas, lams, rho):
     return frac, exp_lat, exp_cost, waste
 
 
-def counterfactual_grid(P, latencies, costs, alphas, lambdas, rho=0.5):
+def counterfactual_grid(P, latencies, costs, alphas, lambdas, rho=0.5,
+                        *, P_lower=None):
     """§12.1 counterfactual EV grid as one XLA call.
 
     Returns dict of (len(alphas), len(lambdas)) arrays:
     speculate_fraction, expected_latency, expected_cost, expected_waste.
+
+    ``rho`` (scalar or per-row array) is traced, so sweeping it across a
+    calibration grid reuses one compiled executable.  ``P_lower`` switches
+    the SPECULATE gate to the §7.5 credible bound while the latency /
+    waste expectations remain weighted by the posterior mean ``P``.
     """
+    P = _f(P)
+    P_gate = P if P_lower is None else _f(P_lower)
     frac, exp_lat, exp_cost, waste = _grid(
-        _f(P), _f(latencies), _f(costs), _f(alphas), _f(lambdas), float(rho),
+        P, P_gate, _f(latencies), _f(costs), _f(alphas), _f(lambdas),
+        _f(rho),
     )
     return {
         "speculate_fraction": np.asarray(frac),

@@ -76,6 +76,12 @@ class DriftMonitor:
         st = self.state(edge)
         st.posterior_means.append(mean)
         hist = st.posterior_means
+        # Only the trailing recent+baseline observations are ever read (and
+        # the recent+10 warm-up gate); cap the history so long-lived edges
+        # do not leak memory at fleet scale.
+        cap = self.recent_window + max(self.baseline_window, 10)
+        if len(hist) > cap:
+            del hist[: len(hist) - cap]
         if len(hist) < self.recent_window + 10:
             return None
         recent = float(np.mean(hist[-self.recent_window:]))
@@ -93,19 +99,10 @@ class DriftMonitor:
         return None
 
     # ------------------------------------------------------------ trigger 2
-    def check_credible_bound(
-        self,
-        edge: tuple[str, str],
-        posterior: BetaPosterior,
-        alpha: float,
-        C_spec: float,
-        L_value: float,
-        gamma: float = 0.1,
+    def _credible_breach_step(
+        self, edge: tuple[str, str], breached: bool, floor: float
     ) -> Optional[TriggerEvent]:
-        """P_lower < (1-alpha) * C / (L*lambda + C) for N consecutive decisions
-        -> disable edge; require a fresh shadow run to re-enable."""
-        floor = (1.0 - alpha) * C_spec / (L_value + C_spec)
-        breached = posterior.lower_bound(gamma) < floor
+        """Shared run-length bookkeeping for trigger 2 (scalar and batch)."""
         run = self._credible_breach_run.get(edge, 0)
         run = run + 1 if breached else 0
         self._credible_breach_run[edge] = run
@@ -122,6 +119,69 @@ class DriftMonitor:
             self._credible_breach_run[edge] = 0
             return ev
         return None
+
+    def check_credible_bound(
+        self,
+        edge: tuple[str, str],
+        posterior: BetaPosterior,
+        alpha: float,
+        C_spec: float,
+        L_value: float,
+        gamma: float = 0.1,
+    ) -> Optional[TriggerEvent]:
+        """P_lower < (1-alpha) * C / (L*lambda + C) for N consecutive decisions
+        -> disable edge; require a fresh shadow run to re-enable."""
+        floor = (1.0 - alpha) * C_spec / (L_value + C_spec)
+        breached = posterior.lower_bound(gamma) < floor
+        return self._credible_breach_step(edge, breached, floor)
+
+    def check_credible_bound_batch(
+        self,
+        edges: list[tuple[str, str]],
+        post_alpha,
+        post_beta,
+        alpha,
+        C_spec,
+        L_value,
+        gamma: float = 0.1,
+    ) -> list[Optional[TriggerEvent]]:
+        """Trigger 2 across a fleet of edges in one vectorized call.
+
+        ``post_alpha`` / ``post_beta`` are the per-edge posterior
+        parameters; ``alpha`` / ``C_spec`` / ``L_value`` broadcast against
+        them.  The P_lower inversion — the expensive part at fleet scale —
+        runs as a single jax ``betaincinv`` call
+        (``batch_decision.batch_lower_bound``); the per-edge consecutive-
+        breach bookkeeping is shared with :meth:`check_credible_bound`.
+        The quantile itself comes from a different implementation than
+        the scalar method's scipy ``ppf`` — agreement is <= 1e-10
+        relative under ``jax_enable_x64``, but only ~1e-5 at jax's
+        default float32 (the ``_f`` convention) — so a bound sitting
+        within that margin of the floor can tick the breach run
+        differently: do not interleave the scalar and batch checkers on
+        the same monitor and expect identical counters at razor-edge
+        floors, and enable x64 when the floors are tight.  Returns one
+        event-or-None per edge.
+        """
+        from .batch_decision import batch_lower_bound
+
+        n = len(edges)
+        post_alpha = np.broadcast_to(np.asarray(post_alpha, float), (n,))
+        post_beta = np.broadcast_to(np.asarray(post_beta, float), (n,))
+        if np.any(post_alpha <= 0) or np.any(post_beta <= 0):
+            # match the scalar path (beta_lower_bound raises): a corrupted
+            # posterior must surface, not silently disarm the kill-switch
+            # (betaincinv would return NaN -> never-breached).
+            raise ValueError("Beta parameters must be positive")
+        alpha = np.broadcast_to(np.asarray(alpha, float), (n,))
+        C_spec = np.broadcast_to(np.asarray(C_spec, float), (n,))
+        L_value = np.broadcast_to(np.asarray(L_value, float), (n,))
+        P_lower = batch_lower_bound(post_alpha, post_beta, gamma)
+        floors = (1.0 - alpha) * C_spec / (L_value + C_spec)
+        return [
+            self._credible_breach_step(edge, bool(p < f), float(f))
+            for edge, p, f in zip(edges, P_lower, floors)
+        ]
 
     # ------------------------------------------------------------ trigger 3
     def check_tier2_false_accept(

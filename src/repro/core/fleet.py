@@ -29,9 +29,12 @@ Scope (checked at lowering time):
 * at most one speculation-candidate edge per downstream op (the scalar
   executor has the same single-edge-per-op structure via its
   ``plan_edges`` map);
-* constant alpha per grid point (no ``alpha_fn``), posterior-mean gating
-  (``use_lower_bound=False`` — the credible bound needs an inverse
-  incomplete beta, not expressible as dense XLA here);
+* constant alpha per grid point (no ``alpha_fn``); gating on either the
+  posterior mean or the §7.5 one-sided credible bound
+  (``use_lower_bound=True`` replaces ``a / (a + b)`` with the jax-native
+  ``betaincinv(a, b, gamma)`` from ``repro.core.betainc`` inside the
+  episode carry, so conservative-mode calibration sweeps stay one XLA
+  call);
 * predictions are summarized per episode as (exists, tier-success)
   booleans plus optional per-chunk confidences P_k — i.e. the replay
   consumes §7.4-labelled logs, it does not re-run predictors.
@@ -50,6 +53,7 @@ import numpy as np
 
 from .admissibility import AdmissibilityTag
 from .batch_decision import _f  # widest-enabled-float coercion, shared
+from .betainc import betaincinv
 from .planner import PlannerParams
 from .workflow import Workflow
 
@@ -85,6 +89,10 @@ class FleetLowered:
     a0: np.ndarray             # (V,) prior Beta alpha per edge
     b0: np.ndarray             # (V,) prior Beta beta per edge
     discount: np.ndarray       # (V,) exponential forgetting factor
+    # §7.5 credible-bound gating (from PlannerParams): gate the D4 rule on
+    # Beta^{-1}(gamma; a, b) instead of the posterior mean
+    use_lower_bound: bool = False
+    gamma: float = 0.1
 
     @property
     def n_ops(self) -> int:
@@ -109,16 +117,18 @@ def lower_workflow(
     min(lat_u, lat_v), prices come from the downstream op's pricing entry,
     priors from ``params.posterior_for`` (so data-seeded / discounted
     posteriors carry over).
+
+    §7.5 gating is taken from ``params.use_lower_bound`` / ``params.gamma``
+    (the planner-side knobs).  The scalar executor reads its *own*
+    ``ExecutorConfig.use_lower_bound`` / ``gamma`` for Phase-2, so when
+    comparing fleet output against ``execute`` keep both objects set to
+    the same values — the parity suite and benchmarks thread them in
+    tandem.
     """
     from .pricing import get_pricing
 
     if not wf.frozen:
         raise ValueError("lower_workflow requires a frozen workflow")
-    if params.use_lower_bound:
-        raise NotImplementedError(
-            "fleet replay gates on the posterior mean; §7.5 credible-bound "
-            "gating stays on the scalar path"
-        )
     predictors = predictors or {}
     stream_refiners = stream_refiners or {}
     topo = wf.topo_order()
@@ -200,6 +210,8 @@ def lower_workflow(
         out_price=out_price, pred_cost=pred_cost, has_pred=has_pred,
         streams=streams, has_refiner=has_refiner, n_chunks=n_chunks,
         a0=a0, b0=b0, discount=discount,
+        use_lower_bound=bool(params.use_lower_bound),
+        gamma=float(params.gamma),
     )
 
 
@@ -272,7 +284,11 @@ def fleet_replay(
 
     The per-edge Beta posterior is carried sequentially across episodes
     (scan), independently per grid point (vmap), exactly like running the
-    scalar sweep once per grid point.
+    scalar sweep once per grid point.  When the lowering carries
+    ``use_lower_bound=True`` (§7.5), the Phase-2 gate inverts the carried
+    posterior — ``betaincinv(a, b, gamma)`` — in place of the mean, so
+    the conservative mode tracks the evolving counts exactly like the
+    scalar executor's ``post.lower_bound(gamma)``.
     """
     success = np.asarray(success, bool)
     E, V = success.shape
@@ -298,9 +314,10 @@ def fleet_replay(
     ys = _fleet_scan(
         _pack_static(lowered, has_refiner),
         _f(lowered.a0), _f(lowered.b0), _f(lowered.discount),
-        _f(alphas), _f(lambdas),
+        _f(alphas), _f(lambdas), _f(lowered.gamma),
         jnp.asarray(success), jnp.asarray(pred_ok, bool),
         _f(chunk_P), int(throttle_every), int(K),
+        bool(lowered.use_lower_bound),
     )
     np_out = {k: np.asarray(v) for k, v in ys.items()}
     return FleetReport(alphas=alphas, lambdas=lambdas, **np_out)
@@ -322,15 +339,19 @@ def _pack_static(lowered: FleetLowered, has_refiner: np.ndarray):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("throttle_every", "K"))
-def _fleet_scan(static, a0, b0, discount, alphas, lambdas,
-                success, pred_ok, chunk_P, throttle_every, K):
+@functools.partial(
+    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
+)
+def _fleet_scan(static, a0, b0, discount, alphas, lambdas, gamma,
+                success, pred_ok, chunk_P, throttle_every, K,
+                use_lower_bound):
     G = alphas.shape[0]
     V = a0.shape[0]
     post0 = jnp.broadcast_to(jnp.stack([a0, b0], -1)[None], (G, V, 2))
 
     episode = functools.partial(
-        _episode, static, discount, (K, throttle_every)
+        _episode, static, discount, (K, throttle_every),
+        use_lower_bound, gamma,
     )
 
     def ep_step(post_ab, xs):
@@ -345,8 +366,8 @@ def _fleet_scan(static, a0, b0, discount, alphas, lambdas,
     return ys
 
 
-def _episode(static, discount, chunk_cfg, post_ab, alpha, lam,
-             succ, pred_ok, chunk_P):
+def _episode(static, discount, chunk_cfg, use_lower_bound, gamma,
+             post_ab, alpha, lam, succ, pred_ok, chunk_P):
     """One episode at one grid point.  All per-op arrays have length V."""
     (parent_mask, u_onehot, dur, op_cost, has_edge, u_streams, lat_save,
      in_tok, out_tok, in_price, out_price, pred_cost, has_pred, streams,
@@ -354,7 +375,13 @@ def _episode(static, discount, chunk_cfg, post_ab, alpha, lam,
     K, throttle_every = chunk_cfg
     V = dur.shape[0]
     a, b = post_ab[:, 0], post_ab[:, 1]
-    P = a / (a + b)
+    if use_lower_bound:
+        # §7.5 conservative gate: one-sided (1-gamma) lower credible
+        # bound, inverted from the carried counts inside the scan —
+        # mirrors the scalar path's post.lower_bound(gamma) per episode.
+        P = betaincinv(a, b, gamma)
+    else:
+        P = a / (a + b)
     neg = jnp.asarray(-jnp.inf, dur.dtype)
 
     # Phase-2 D4 gate, identical expression order to decision.evaluate

@@ -105,8 +105,19 @@ class BetaPosterior:
         return self
 
     def update_batch(self, s: int, f: int) -> "BetaPosterior":
+        """Batch conjugate update: s successes then f failures.
+
+        With ``discount == 1`` this is the closed form Beta(a+s, b+f).
+        With ``discount < 1`` order matters, so the batch applies the same
+        sequential forgetting recurrence as :meth:`update` — successes
+        first, then failures — exactly matching
+        ``update_many([True]*s + [False]*f)`` (pinned by a regression
+        test; previously the discount was silently ignored here).
+        """
         if s < 0 or f < 0:
             raise ValueError("counts must be non-negative")
+        if self.discount != 1.0:
+            return self.update_many([True] * s + [False] * f)
         self.alpha += s
         self.beta += f
         self.successes += s

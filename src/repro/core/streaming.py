@@ -46,10 +46,17 @@ def fractional_waste(
     output_tokens_generated: float,
 ) -> float:
     """C_spec_actual for a cancelled speculation (§9.3): full input cost
-    (the prompt was sent) plus only the output tokens actually emitted."""
-    if output_tokens_generated > output_tokens_planned:
-        # generation ran past the plan before cancellation; bill actuals
-        output_tokens_planned = output_tokens_generated
+    (the prompt was sent) plus only the output tokens actually emitted.
+
+    Billing is always on the actuals: ``output_tokens_generated`` may
+    exceed the plan (generation ran past it before the cancel landed) and
+    is billed as-is — the plan figure only sanity-scopes the call.  The
+    vectorized ``batch_decision.batch_fractional_waste`` implements the
+    identical expression (``frac > 1`` there is the same ran-past case);
+    parity is pinned by tests/test_fleet_parity.py.
+    """
+    if input_tokens < 0 or output_tokens_planned < 0 or output_tokens_generated < 0:
+        raise ValueError("token counts must be non-negative")
     c_in, _ = cost_model.split(input_tokens, 0)
     _, c_out = cost_model.split(0, output_tokens_generated)
     return c_in + c_out

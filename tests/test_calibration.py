@@ -165,6 +165,74 @@ class TestDrift:
         assert not mon.edge_enabled(("a", "b"))
         assert mon.state(("a", "b")).needs_shadow_rerun
 
+    def test_posterior_mean_history_is_capped(self):
+        """Regression: EdgeState.posterior_means grew without bound (a
+        memory leak on long-lived edges at fleet scale).  The history is
+        now capped at recent_window + baseline_window with identical
+        trigger behavior — only the trailing windows are ever read."""
+        mon = DriftMonitor(recent_window=20, baseline_window=50)
+        cap = mon.recent_window + mon.baseline_window
+        for _ in range(10 * cap):
+            mon.observe_posterior_mean(("a", "b"), 0.8)
+        hist = mon.state(("a", "b")).posterior_means
+        assert len(hist) == cap
+        # trigger still fires exactly as with unbounded history: 20 recent
+        # at 0.5 vs 50-baseline at 0.8 is a >20% drop
+        ev = None
+        for _ in range(mon.recent_window):
+            ev = mon.observe_posterior_mean(("a", "b"), 0.5) or ev
+        assert ev is not None and ev.kind == TriggerKind.POSTERIOR_DROP
+        assert len(mon.state(("a", "b")).posterior_means) == cap
+
+    def test_posterior_mean_cap_keeps_warmup_gate(self):
+        """With a tiny baseline_window the cap must not drop below the
+        recent_window + 10 warm-up gate, or the trigger could never arm."""
+        mon = DriftMonitor(recent_window=15, baseline_window=4)
+        for _ in range(100):
+            mon.observe_posterior_mean(("a", "b"), 0.9)
+        ev = None
+        for _ in range(15):
+            ev = mon.observe_posterior_mean(("a", "b"), 0.2) or ev
+        assert ev is not None and ev.kind == TriggerKind.POSTERIOR_DROP
+
+    def test_credible_bound_batch_matches_scalar(self):
+        """check_credible_bound_batch (one vectorized betaincinv call)
+        reproduces per-edge check_credible_bound decision-for-decision:
+        same events, same breach runs, same disabled edges."""
+        edges = [(f"u{i}", f"v{i}") for i in range(6)]
+        posts = [BetaPosterior(alpha=1.0 + 0.5 * i, beta=9.0 - i)
+                 for i in range(6)]
+        C, L = 0.0135, 0.064
+        mon_s = DriftMonitor(credible_consecutive_n=3)
+        mon_b = DriftMonitor(credible_consecutive_n=3)
+        for step in range(4):
+            scalar_evs = [
+                mon_s.check_credible_bound(e, p, 0.5, C, L)
+                for e, p in zip(edges, posts)
+            ]
+            batch_evs = mon_b.check_credible_bound_batch(
+                edges, [p.alpha for p in posts], [p.beta for p in posts],
+                0.5, C, L,
+            )
+            for se, be in zip(scalar_evs, batch_evs):
+                assert (se is None) == (be is None)
+                if se is not None:
+                    assert se.kind == be.kind and se.edge == be.edge
+        assert mon_s._credible_breach_run == mon_b._credible_breach_run
+        for e in edges:
+            assert mon_s.edge_enabled(e) == mon_b.edge_enabled(e)
+        # at least one low-P edge must actually have tripped
+        assert any(not mon_b.edge_enabled(e) for e in edges)
+        # corrupted posteriors surface like the scalar path, instead of
+        # betaincinv's NaN silently disarming the kill-switch
+        with pytest.raises(ValueError):
+            mon_b.check_credible_bound_batch(
+                edges[:2], [1.0, -0.5], [2.0, 2.0], 0.5, C, L)
+        with pytest.raises(ValueError):
+            mon_s.check_credible_bound(edges[0],
+                                       BetaPosterior(alpha=0.0, beta=2.0),
+                                       0.5, C, L)
+
     def test_cost_slo_zeroes_alpha_globally(self):
         mon = DriftMonitor(monthly_budget_usd=100.0)
         assert mon.check_cost_slo(50.0) is None

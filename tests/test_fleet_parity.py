@@ -57,6 +57,8 @@ class RandomDag:
     success: np.ndarray                       # (E, V) bool
     pred_ok: np.ndarray                       # (E, V) bool
     discount: float = 1.0
+    use_lower_bound: bool = False             # §7.5 credible-bound gating
+    gamma: float = 0.1
 
     def name(self, i: int) -> str:
         return f"n{i}"
@@ -107,11 +109,14 @@ class RandomDag:
                 )
             )
         return PlannerParams(alpha=alpha, lambda_usd_per_s=lam,
-                             posteriors=posts)
+                             posteriors=posts,
+                             use_lower_bound=self.use_lower_bound,
+                             gamma=self.gamma)
 
 
 def make_random_dag(seed: int, episodes: int = 6,
-                    discount: float = 1.0) -> RandomDag:
+                    discount: float = 1.0,
+                    use_lower_bound: bool = False) -> RandomDag:
     rng = np.random.default_rng(seed)
     V = int(rng.integers(2, 6))
     plain, spec = [], []
@@ -139,6 +144,7 @@ def make_random_dag(seed: int, episodes: int = 6,
         success=rng.random((episodes, V)) < 0.55,
         pred_ok=rng.random((episodes, V)) < 0.85,
         discount=discount,
+        use_lower_bound=use_lower_bound,
     )
 
 
@@ -162,7 +168,9 @@ def run_scalar(dag: RandomDag, alphas, lams):
         for e in range(E):
             wf = dag.build_workflow(e)
             plan, _ = plan_workflow(wf, params)
-            cfg = ExecutorConfig(params=params, predictors=dag.predictors(e))
+            cfg = ExecutorConfig(params=params, predictors=dag.predictors(e),
+                                 use_lower_bound=dag.use_lower_bound,
+                                 gamma=dag.gamma)
             rep = execute(wf, plan, cfg)
             by_edge = {r.edge: r for r in cfg.telemetry.rows
                        if r.phase == "runtime"}
@@ -274,9 +282,84 @@ def test_random_dag_discounted_posterior_parity(seed):
             fleet.post_beta[:, :, sel], scalar["post_b"][:, :, sel], **ULP)
 
 
-def test_streaming_cancel_parity():
+# The §7.5 EV is fed by two independent Beta-quantile implementations:
+# the scalar path inverts through scipy.stats.beta.ppf, the fleet path
+# through the jax-native betaincinv (tests/test_betaincinv.py pins their
+# agreement at ~1e-13 relative over the posterior range).  EV inherits
+# that spread on top of the FMA ULP, so it gets a little extra headroom;
+# everything downstream of the *decisions* — launch/commit flags, event
+# times, posterior trajectories — still matches bitwise, and waste /
+# threshold stay at the plain ULP tolerance (they do not depend on P).
+LB_ULP = dict(rtol=1e-11, atol=1e-14)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_random_dag_lower_bound_parity(seed):
+    """§7.5 credible-bound gating (use_lower_bound=True, gamma=0.1):
+    fleet replay matches the scalar executor on randomized DAGs at
+    float64 — decisions, flags, timing and posterior trajectories
+    bitwise; EV to the cross-quantile tolerance; waste to 1 ULP."""
+    with enable_x64():
+        dag = make_random_dag(seed, use_lower_bound=True)
+        scalar = run_scalar(dag, GRID_ALPHAS, GRID_LAMS)
+        edge_ops, fleet = run_fleet(dag, GRID_ALPHAS, GRID_LAMS)
+        assert sorted(v for (_, v) in dag.spec_edges) == edge_ops
+        sel = np.array(edge_ops, int)
+        np.testing.assert_allclose(
+            fleet.EV_usd[:, :, sel], scalar["EV"][:, :, sel], **LB_ULP)
+        np.testing.assert_allclose(
+            fleet.threshold_usd[:, :, sel], scalar["thr"][:, :, sel], **ULP)
+        np.testing.assert_array_equal(
+            fleet.speculate[:, :, sel], scalar["spec"][:, :, sel])
+        np.testing.assert_array_equal(
+            fleet.edge_launched[:, :, sel], scalar["launched"][:, :, sel])
+        np.testing.assert_array_equal(
+            fleet.edge_committed[:, :, sel], scalar["committed"][:, :, sel])
+        np.testing.assert_allclose(
+            fleet.edge_waste_usd[:, :, sel], scalar["waste"][:, :, sel],
+            **ULP)
+        np.testing.assert_array_equal(fleet.finish_s, scalar["finish"])
+        np.testing.assert_array_equal(fleet.makespan_s, scalar["makespan"])
+        np.testing.assert_array_equal(
+            fleet.post_alpha[:, :, sel], scalar["post_a"][:, :, sel])
+        np.testing.assert_array_equal(
+            fleet.post_beta[:, :, sel], scalar["post_b"][:, :, sel])
+        np.testing.assert_allclose(
+            fleet.waste_usd, scalar["waste_total"], rtol=1e-12, atol=1e-16)
+
+
+@pytest.mark.parametrize("seed", [100, 101])
+def test_random_dag_lower_bound_discounted_parity(seed):
+    """Credible-bound gating composed with exponential-forgetting
+    posteriors: the betaincinv inversion runs on the discounted
+    (fractional) carry and must track scipy on the same trajectory."""
+    with enable_x64():
+        dag = make_random_dag(seed, discount=0.9, use_lower_bound=True)
+        scalar = run_scalar(dag, GRID_ALPHAS, GRID_LAMS)
+        edge_ops, fleet = run_fleet(dag, GRID_ALPHAS, GRID_LAMS)
+        sel = np.array(edge_ops, int)
+        if sel.size == 0:
+            pytest.skip("degenerate draw: no candidate edges")
+        np.testing.assert_array_equal(
+            fleet.speculate[:, :, sel], scalar["spec"][:, :, sel])
+        np.testing.assert_array_equal(
+            fleet.edge_committed[:, :, sel], scalar["committed"][:, :, sel])
+        np.testing.assert_allclose(
+            fleet.EV_usd[:, :, sel], scalar["EV"][:, :, sel], **LB_ULP)
+        # a*0.9 + x contracts to an FMA under XLA -> 1-ULP tolerance
+        np.testing.assert_allclose(
+            fleet.post_alpha[:, :, sel], scalar["post_a"][:, :, sel], **ULP)
+        np.testing.assert_allclose(
+            fleet.post_beta[:, :, sel], scalar["post_b"][:, :, sel], **ULP)
+
+
+@pytest.mark.parametrize("use_lb", [False, True])
+def test_streaming_cancel_parity(use_lb):
     """§9.1 mid-stream cancellation: fleet chunk path vs the scalar
-    executor with a stream refiner, including fractional waste."""
+    executor with a stream refiner, including fractional waste — under
+    both posterior-mean and §7.5 credible-bound launch gating (chunk
+    re-checks gate on the refined P_k either way, exactly like the
+    scalar executor's evaluate(inputs_k))."""
     with enable_x64():
         E, K = 8, 4
         rng = np.random.default_rng(7)
@@ -302,7 +385,8 @@ def test_streaming_cancel_parity():
         key = ("u", "v")
         post_scalar = BetaPosterior.from_prior_mean(0.9)
         params = PlannerParams(alpha=alphas[0], lambda_usd_per_s=lams[0],
-                               posteriors={key: post_scalar})
+                               posteriors={key: post_scalar},
+                               use_lower_bound=use_lb)
         scalar_waste = np.zeros(E)
         scalar_cancel = np.zeros(E, bool)
         scalar_finish = np.zeros(E)
@@ -318,6 +402,7 @@ def test_streaming_cancel_parity():
                 predictors={key: TemplatePredictor(
                     template=lambda i, p=None: "chunked-output-string-for-u")},
                 stream_refiners={key: refine},
+                use_lower_bound=use_lb,
             )
             rep = execute(wf, plan, cfg)
             scalar_waste[e] = rep.waste_usd
@@ -327,6 +412,7 @@ def test_streaming_cancel_parity():
         params_f = PlannerParams(
             alpha=0.5, lambda_usd_per_s=0.01,
             posteriors={key: BetaPosterior.from_prior_mean(0.9)},
+            use_lower_bound=use_lb,
         )
         wf = build(0)
         pred = {key: TemplatePredictor(
@@ -459,6 +545,99 @@ def test_replay_grid_kernel_matches_oracle_and_batch():
                                g["expected_latency_s"], rtol=1e-4)
     np.testing.assert_allclose(np.asarray(wsum),
                                g["expected_waste_usd"], rtol=1e-4)
+
+
+def test_counterfactual_grid_single_compile_across_rho():
+    """Regression: rho sat in _grid's static_argnames, so every distinct
+    float recompiled the XLA executable during §12.3 calibration sweeps.
+    It is now a traced argument — one compile serves the whole rho sweep —
+    and the lower-bound gate variant reuses the same executable."""
+    from repro.core import batch_decision as bd
+
+    rng = np.random.default_rng(21)
+    n = 64
+    P = rng.uniform(0.05, 0.95, n)
+    lat = rng.uniform(0.2, 3.0, n)
+    cost = rng.uniform(0.001, 0.03, n)
+    alphas = np.array([0.0, 0.5, 1.0])
+    lams = np.array([0.01, 0.08])
+    bd._grid.clear_cache()
+    base = None
+    for rho in (0.0, 0.1, 0.25, 0.5, 0.77, 1.0):
+        g = counterfactual_grid(P, lat, cost, alphas, lams, rho=rho)
+        if base is None:
+            base = g
+        assert bd._grid._cache_size() == 1, \
+            f"rho={rho} triggered a recompile"
+    # the §7.5 gate variant shares the executable (same shapes/dtypes)
+    P_low = bd.batch_lower_bound(2.0 * P, 2.0 * (1.0 - P), 0.1)
+    counterfactual_grid(P, lat, cost, alphas, lams, rho=0.3, P_lower=P_low)
+    assert bd._grid._cache_size() == 1
+    # rho=0 zeroes expected waste but not the gate
+    g0 = counterfactual_grid(P, lat, cost, alphas, lams, rho=0.0)
+    np.testing.assert_array_equal(g0["expected_waste_usd"], 0.0)
+    np.testing.assert_array_equal(
+        g0["speculate_fraction"], base["speculate_fraction"])
+
+
+def test_counterfactual_grid_lower_bound_gate_is_conservative():
+    """With P_lower the SPECULATE gate runs on the credible bound (fewer
+    or equal speculations than the mean gate) while latency / waste
+    expectations stay weighted by the posterior mean."""
+    with enable_x64():
+        rng = np.random.default_rng(33)
+        n = 200
+        a = rng.uniform(0.5, 6.0, n)
+        b = rng.uniform(0.5, 6.0, n)
+        P = a / (a + b)
+        from repro.core.batch_decision import batch_lower_bound
+        P_low = batch_lower_bound(a, b, 0.1)
+        assert np.all(P_low <= P)
+        lat = rng.uniform(0.2, 3.0, n)
+        cost = rng.uniform(0.001, 0.03, n)
+        alphas = np.array([0.0, 0.3, 0.6, 0.9])
+        lams = np.array([0.01, 0.08])
+        g_mean = counterfactual_grid(P, lat, cost, alphas, lams)
+        g_lb = counterfactual_grid(P, lat, cost, alphas, lams, P_lower=P_low)
+        assert np.all(
+            g_lb["speculate_fraction"] <= g_mean["speculate_fraction"])
+        # and gating on P_lower directly == passing it as the gate
+        g_direct = counterfactual_grid(P_low, lat, cost, alphas, lams)
+        np.testing.assert_array_equal(
+            g_lb["speculate_fraction"], g_direct["speculate_fraction"])
+
+
+def test_batch_evaluate_lower_bound_matches_scalar_evaluate():
+    """batch_evaluate(P_lower=...) == decision.evaluate(use_lower_bound=
+    True) row-for-row: EV and the gate run on the bound (P_used)."""
+    from repro.core.decision import evaluate
+
+    with enable_x64():
+        rng = np.random.default_rng(17)
+        n = 48
+        a = rng.uniform(0.5, 8.0, n)
+        b = rng.uniform(0.5, 8.0, n)
+        P = a / (a + b)
+        from repro.core.batch_decision import batch_evaluate, batch_lower_bound
+        P_low = batch_lower_bound(a, b, 0.1)
+        lat = rng.uniform(0.2, 3.0, n)
+        EV, thr, spec, C, L = batch_evaluate(
+            P, 0.4, 0.08, lat, 400, 900, 3e-6, 15e-6, P_lower=P_low)
+        # scalar alpha/token inputs broadcast the threshold down to 0-d
+        thr = np.broadcast_to(np.asarray(thr), np.asarray(EV).shape)
+        for i in range(n):
+            res = evaluate(
+                DecisionInputs(
+                    P=float(P[i]), alpha=0.4, lambda_usd_per_s=0.08,
+                    latency_seconds=float(lat[i]), input_tokens=400,
+                    output_tokens=900, input_price=3e-6, output_price=15e-6,
+                    P_lower_bound=float(P_low[i]),
+                ),
+                use_lower_bound=True,
+            )
+            np.testing.assert_allclose(EV[i], res.EV_usd, **ULP)
+            np.testing.assert_allclose(thr[i], res.threshold_usd, **ULP)
+            assert bool(spec[i]) == (res.decision.value == "SPECULATE")
 
 
 def test_fleet_autoreply_pareto_matches_scalar_sweep():

@@ -134,6 +134,27 @@ class TestPosterior:
         assert hi - lo < 0.16
         assert lo < 0.62 < hi
 
+    def test_update_batch_applies_discount(self):
+        """Regression: update_batch on a discount<1 posterior used to apply
+        the undiscounted conjugate update, silently diverging from
+        update/update_many.  It must now follow the same sequential
+        forgetting recurrence — successes first, then failures — exactly."""
+        for d in (0.95, 0.5):
+            for s, f in [(0, 0), (5, 0), (0, 4), (7, 3), (1, 1)]:
+                batch = BetaPosterior.from_prior_mean(0.6, discount=d)
+                seq = BetaPosterior.from_prior_mean(0.6, discount=d)
+                batch.update_batch(s, f)
+                seq.update_many([True] * s + [False] * f)
+                assert batch.alpha == seq.alpha     # bitwise, same recurrence
+                assert batch.beta == seq.beta
+                assert (batch.successes, batch.failures) == (s, f)
+        # discount=1 keeps the closed-form conjugate fast path
+        p = BetaPosterior.from_prior_mean(0.6)
+        p.update_batch(3, 2)
+        assert p.alpha == pytest.approx(1.2 + 3) and p.beta == pytest.approx(0.8 + 2)
+        with pytest.raises(ValueError):
+            p.update_batch(-1, 0)
+
     def test_discounted_update_responds_faster(self):
         """§14.3 exponential forgetting: after a regime shift the discounted
         posterior moves toward the new rate faster."""

@@ -270,3 +270,30 @@ class TestDiamondDag:
         assert rep.outputs["join"] in ("W+F", "F+W") or "+" in rep.outputs["join"]
         # sequential would be 1 + 6 + 3 = 10; overlap saves the join time
         assert rep.makespan_s < 10.0
+
+
+class TestFractionalWaste:
+    def test_bills_actuals_past_the_plan(self):
+        """Regression for the dead clamp in streaming.fractional_waste: the
+        planned-token reassignment was never read — billing is (and now
+        explicitly documents being) on the actuals, including generation
+        that ran past the plan before the cancel landed."""
+        from repro.core import fractional_waste
+        from repro.core.pricing import TwoRateTokenCost
+
+        cm = TwoRateTokenCost(3e-6, 15e-6)
+        base = fractional_waste(cm, 400, 900, 900.0)
+        over = fractional_waste(cm, 400, 900, 1100.0)   # ran past the plan
+        assert over == pytest.approx(400 * 3e-6 + 1100 * 15e-6)
+        assert over > base
+        # plan figure does not affect the bill
+        assert fractional_waste(cm, 400, 1, 1100.0) == over
+
+    def test_rejects_negative_token_counts(self):
+        from repro.core import fractional_waste
+        from repro.core.pricing import TwoRateTokenCost
+
+        cm = TwoRateTokenCost(3e-6, 15e-6)
+        for bad in [(-1, 900, 100.0), (400, -1.0, 100.0), (400, 900, -0.5)]:
+            with pytest.raises(ValueError):
+                fractional_waste(cm, *bad)
