@@ -6,7 +6,15 @@ so the perf trajectory is machine-readable across PRs (the fleet replay
 additionally writes its own BENCH_fleet.json speedup record from
 ``workflow_sim.fleet_speedup``).
 
-    PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run            # full run
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI mode
+
+``--smoke`` runs the fleet record at tiny episode counts: every parity
+gate still executes (scalar<->fleet Pareto, bitwise multi-tenant) and
+both the fresh record and the checked-in BENCH_*.json files are
+schema-validated, but no timings are asserted and nothing is written —
+tests/test_benchmarks_smoke.py keeps it in tier-1 so benchmark drift
+breaks fast instead of rotting silently.
 """
 from __future__ import annotations
 
@@ -17,6 +25,63 @@ import sys
 import time
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+# BENCH_fleet.json schema (see workflow_sim.fleet_speedup): required keys
+# at each level of the record.
+_FLEET_KEYS = {
+    "benchmark", "alphas", "episodes", "grid_points", "scalar_total_s",
+    "fleet_total_s", "speedup", "parity", "pareto_fleet",
+    "credible_bound", "multi_tenant",
+}
+_CREDIBLE_KEYS = {"benchmark", "gamma", "speedup", "parity", "pareto_fleet"}
+_MT_KEYS = {
+    "benchmark", "tenants", "grid_points", "episodes", "one_call_s",
+    "per_tenant_calls_s", "speedup", "parity", "scaling",
+}
+_ROWS_KEYS = {"module", "rows"}
+
+
+def _require(present, required, what: str) -> None:
+    missing = sorted(required - set(present))
+    if missing:
+        raise AssertionError(f"{what}: missing keys {missing}")
+
+
+def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
+    """Assert the BENCH_fleet.json shape (full and --smoke records)."""
+    _require(rec, _FLEET_KEYS, what)
+    _require(rec["credible_bound"], _CREDIBLE_KEYS, f"{what}.credible_bound")
+    _require(rec["multi_tenant"], _MT_KEYS, f"{what}.multi_tenant")
+    for row in rec["multi_tenant"]["scaling"]:
+        _require(row, {"devices", "shards", "wall_s"},
+                 f"{what}.multi_tenant.scaling")
+
+
+def validate_bench_files() -> list[str]:
+    """Schema-check every checked-in BENCH_*.json; returns the paths."""
+    checked = []
+    for path in sorted(ROOT.glob("BENCH_*.json")):
+        obj = json.loads(path.read_text())
+        if path.name == "BENCH_fleet.json":
+            validate_fleet_record(obj, path.name)
+        else:
+            _require(obj, _ROWS_KEYS, path.name)
+            for row in obj["rows"]:
+                _require(row, {"name", "us_per_call", "derived"},
+                         f"{path.name} row")
+        checked.append(path.name)
+    return checked
+
+
+def smoke() -> dict:
+    """Tiny-episode parity + schema gate (no timing claims, no writes)."""
+    from . import workflow_sim
+
+    rec = workflow_sim.smoke()
+    validate_fleet_record(rec, "smoke record")
+    checked = validate_bench_files()
+    print(f"smoke ok: parity gates passed, schema ok for {checked}")
+    return rec
 
 
 def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
@@ -64,4 +129,8 @@ def main(only: list[str] | None = None) -> None:
 
 
 if __name__ == "__main__":
-    main(only=sys.argv[1:] or None)
+    argv = sys.argv[1:]
+    if "--smoke" in argv:
+        smoke()
+    else:
+        main(only=argv or None)

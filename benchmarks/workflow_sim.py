@@ -16,8 +16,13 @@ trajectory across PRs; see EXPERIMENTS.md §Perf).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
+import os
 import pathlib
+import subprocess
+import sys
+import textwrap
 import time
 
 import numpy as np
@@ -32,7 +37,9 @@ from repro.core import (
     execute,
     fleet_replay,
     lower_workflow,
+    multi_tenant_replay,
     plan_workflow,
+    stack_tenants,
 )
 from repro.core.posterior import BetaPosterior
 from repro.core.predictor import HistoricalModalPredictor
@@ -186,11 +193,155 @@ def assert_pareto_parity(scalar: dict, fleet: dict, alphas=DEFAULT_ALPHAS,
     return {"max_rel_error": worst}
 
 
+def _mt_stack(tenants: int = 8, episodes: int = 200, seed: int = SEED):
+    """Stack ``tenants`` AutoReply variants: each tenant carries its own
+    taxonomy-keyed prior (k-way router fan-out varies per tenant), its own
+    intent draw stream, and its own episode log — the multi-tenant §12.1
+    deployment shape (one edge name, many tenants)."""
+    wf = build_workflow("billing")
+    edge_key = ("classifier", "drafter")
+    lowereds, succs, names = [], [], []
+    for t in range(tenants):
+        k = 3 + (t % 6)              # per-tenant router fan-out -> prior
+        params = PlannerParams(
+            alpha=0.5, lambda_usd_per_s=LAMBDA_USD_PER_S,
+            posteriors={edge_key: BetaPosterior.from_dependency_type(
+                DependencyType.ROUTER_K_WAY, k=k)},
+        )
+        pred = HistoricalModalPredictor()
+        pred.observe("email", "billing")
+        lowered = lower_workflow(wf, params, predictors={edge_key: pred})
+        vi = lowered.names.index("drafter")
+        draws = _draws(episodes, seed + t)
+        success = np.zeros((episodes, lowered.n_ops), bool)
+        success[:, vi] = draws == 0
+        lowereds.append(lowered)
+        succs.append(success)
+        names.append(f"tenant{t}")
+    return stack_tenants(lowereds, succs, tenants=names)
+
+
+_SCALING_BODY = """
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+    sys.path[:0] = {paths!r}
+    import jax
+    import numpy as np
+    from benchmarks.workflow_sim import DEFAULT_ALPHAS, LAMBDA_USD_PER_S, _mt_stack
+    from repro.core.fleet import multi_tenant_replay
+    from repro.launch.mesh import make_fleet_mesh
+    stack = _mt_stack(tenants={tenants}, episodes={episodes})
+    alphas = np.asarray(DEFAULT_ALPHAS)
+    mesh = make_fleet_mesh()
+    multi_tenant_replay(stack, alphas, LAMBDA_USD_PER_S, mesh=mesh)  # warm-up
+    t0 = time.perf_counter()
+    rep = multi_tenant_replay(stack, alphas, LAMBDA_USD_PER_S, mesh=mesh)
+    wall = time.perf_counter() - t0
+    shards = len(rep.post_final.sharding.device_set)
+    print(json.dumps({{"devices": len(jax.devices()), "shards": shards,
+                       "wall_s": wall}}))
+"""
+
+
+def multi_tenant_scaling(devices=(1, 2, 4, 8), tenants: int = 8,
+                         episodes: int = 200) -> list[dict]:
+    """Time the sharded multi-tenant call under 1/2/4/8 forced host
+    devices (fresh subprocess each — XLA_FLAGS must be set before the
+    first jax import).  Wall-clock scaling on CPU is bounded by the
+    physical core count (recorded as ``host_cpus``); the shard count
+    verifies the tenants x grid axis really was partitioned."""
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    paths = [root, str(pathlib.Path(root) / "src")]
+    rows = []
+    for d in devices:
+        code = textwrap.dedent(_SCALING_BODY.format(
+            devices=d, paths=paths, tenants=tenants, episodes=episodes))
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=600, env={**os.environ, "PYTHONPATH": paths[1]},
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"scaling subprocess ({d} devices) failed:\n"
+                f"{proc.stderr[-2000:]}")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        row["host_cpus"] = os.cpu_count()
+        rows.append(row)
+    return rows
+
+
+def multi_tenant_record(tenants: int = 8, alphas=DEFAULT_ALPHAS,
+                        episodes: int = 200, seed: int = SEED,
+                        scaling_devices=(1, 2, 4, 8)) -> dict:
+    """The BENCH_fleet.json ``multi_tenant`` section: ≥8 tenants x grid x
+    episodes in one jit'd sharded call, bitwise (f64) per-tenant parity
+    against T independent ``fleet_replay`` calls, one-call vs per-tenant
+    wall times, and the forced-host-device scaling rows."""
+    from jax.experimental import enable_x64
+
+    alphas_arr = np.asarray(alphas)
+
+    # --- parity first (f64, unsharded single device): every per-tenant
+    # row block of the one-call report must equal its independent replay.
+    # The single run replays the same padded lowering with the tenant's
+    # episode mask, so the comparison stays bitwise even if the stack
+    # ever goes ragged across episodes or op counts.
+    with enable_x64():
+        stack = _mt_stack(tenants, episodes, seed)
+        report = multi_tenant_replay(stack, alphas_arr, LAMBDA_USD_PER_S)
+        for t in range(tenants):
+            single = fleet_replay(
+                stack.lowered[t], stack.success[t], alphas_arr,
+                LAMBDA_USD_PER_S, pred_ok=stack.pred_ok[t],
+                ep_mask=stack.ep_mask[t])
+            for f in dataclasses.fields(single):
+                if f.name in ("alphas", "lambdas", "ep_mask"):
+                    continue
+                if not np.array_equal(getattr(single, f.name),
+                                      getattr(report, f.name)[t]):
+                    raise AssertionError(
+                        f"multi-tenant parity broke: tenant {t} field "
+                        f"{f.name}")
+
+    # --- then speed (fleet default dtype, matching the other records)
+    stack = _mt_stack(tenants, episodes, seed)
+    multi_tenant_replay(stack, alphas_arr, LAMBDA_USD_PER_S)   # warm-up
+    t0 = time.perf_counter()
+    multi_tenant_replay(stack, alphas_arr, LAMBDA_USD_PER_S)
+    one_call_s = time.perf_counter() - t0
+
+    for t in range(tenants):                                   # warm-up
+        fleet_replay(stack.lowered[t], stack.success[t], alphas_arr,
+                     LAMBDA_USD_PER_S, pred_ok=stack.pred_ok[t])
+    t0 = time.perf_counter()
+    for t in range(tenants):
+        fleet_replay(stack.lowered[t], stack.success[t], alphas_arr,
+                     LAMBDA_USD_PER_S, pred_ok=stack.pred_ok[t])
+    per_tenant_s = time.perf_counter() - t0
+
+    record = {
+        "benchmark": "autoreply_multi_tenant_replay",
+        "tenants": tenants,
+        "grid_points": len(alphas_arr),
+        "episodes": episodes,
+        "one_call_s": one_call_s,
+        "per_tenant_calls_s": per_tenant_s,
+        "speedup": per_tenant_s / one_call_s,
+        "parity": {"bitwise_f64_vs_independent_fleet_replay": True},
+        "scaling": multi_tenant_scaling(
+            scaling_devices, tenants, episodes) if scaling_devices else [],
+    }
+    return record
+
+
 def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
-                  seed: int = SEED) -> dict:
+                  seed: int = SEED, *, write: bool = True,
+                  tenants: int = 8, scaling_devices=(1, 2, 4, 8)) -> dict:
     """Measure scalar vs fleet wall time on the identical sweep — both the
-    posterior-mean gate and the §7.5 credible-bound gate — and persist the
-    record to BENCH_fleet.json.  Methodology (EXPERIMENTS.md §Perf): jit
+    posterior-mean gate and the §7.5 credible-bound gate — plus the
+    multi-tenant sharded-engine record, and persist everything to
+    BENCH_fleet.json (``write=False`` returns the record without touching
+    the file — the --smoke path).  Methodology (EXPERIMENTS.md §Perf): jit
     warm-up excluded, identical inputs, parity asserted before timing is
     reported.  The parity contract (exact launch/commit counts between
     the f64 scalar gate and the f32 fleet gate) relies on this workload's
@@ -262,9 +413,27 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
                 str(a): fleet_lb[a] for a in alphas
             },
         },
+        "multi_tenant": multi_tenant_record(
+            tenants=tenants, alphas=alphas, episodes=episodes, seed=seed,
+            scaling_devices=scaling_devices,
+        ),
     }
-    BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    if write:
+        BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
     return record
+
+
+def smoke() -> dict:
+    """benchmarks/run.py --smoke: the full BENCH_fleet.json record shape at
+    tiny episode counts — every parity gate runs (scalar<->fleet Pareto,
+    bitwise multi-tenant), no timing claims are made, and nothing is
+    written to disk.  Wired into a fast pytest
+    (tests/test_benchmarks_smoke.py) so schema or parity drift breaks
+    tier-1 instead of rotting until the next manual benchmark run."""
+    return fleet_speedup(
+        alphas=(0.0, 0.5, 0.9, 1.0), episodes=24,
+        write=False, tenants=3, scaling_devices=(),
+    )
 
 
 def benchmarks() -> list[tuple[str, float, str]]:
@@ -294,5 +463,17 @@ def benchmarks() -> list[tuple[str, float, str]]:
         f"({lb['scalar_us_per_episode']:.0f}us/ep -> "
         f"{lb['fleet_us_per_episode']:.2f}us/ep), "
         f"parity max_rel={lb['parity']['max_rel_error']:.1e}",
+    ))
+    mt = record["multi_tenant"]
+    n_ep = mt["tenants"] * mt["grid_points"] * mt["episodes"]
+    scaling = " ".join(
+        f"{r['devices']}dev={r['wall_s'] * 1e3:.0f}ms"
+        for r in mt["scaling"]
+    )
+    rows.append((
+        "workflow_multi_tenant_replay", mt["one_call_s"] / n_ep * 1e6,
+        f"{mt['tenants']}T x {mt['grid_points']}G x {mt['episodes']}E in one "
+        f"call; {mt['speedup']:.1f}x vs {mt['tenants']} fleet_replay calls; "
+        f"bitwise-f64 per-tenant parity; scaling {scaling or 'n/a'}",
     ))
     return rows

@@ -34,7 +34,16 @@ from .telemetry import SpeculationDecision, TelemetryLog
 from .workflow import Edge, Operation, Workflow
 from .planner import Plan, PlannerParams, plan_workflow
 from .executor import ExecutionReport, ExecutorConfig, execute
-from .fleet import FleetLowered, FleetReport, fleet_replay, lower_workflow
+from .fleet import (
+    FleetLowered,
+    FleetReport,
+    FleetStack,
+    MultiTenantReport,
+    fleet_replay,
+    lower_workflow,
+    multi_tenant_replay,
+    stack_tenants,
+)
 from .streaming import (
     RhoEstimator,
     StreamingReestimator,
@@ -64,6 +73,8 @@ __all__ = [
     "ExecutorConfig", "ExecutionReport", "execute",
     # §12 fleet-scale replay (beyond-paper fast path)
     "FleetLowered", "FleetReport", "lower_workflow", "fleet_replay",
+    "FleetStack", "MultiTenantReport", "stack_tenants",
+    "multi_tenant_replay",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

@@ -24,6 +24,7 @@ __all__ = [
     "batch_evaluate",
     "batch_lower_bound",
     "counterfactual_grid",
+    "counterfactual_grid_tenants",
     "batch_posterior_update",
     "batch_implied_lambda",
     "critical_k_grid",
@@ -94,7 +95,9 @@ def _grid(P, P_gate, lat, cost, alphas, lams, rho):
     EV = P_gate * L_value - (1.0 - P_gate) * cost[None, None, :]
     thr = (1.0 - alphas[:, None, None]) * cost[None, None, :]
     spec = EV >= thr
-    frac = spec.mean(axis=-1)
+    # bool .mean() yields f32 regardless of jax_enable_x64 — cast first so
+    # the fraction carries the working precision (f64 under x64)
+    frac = spec.astype(lat.dtype).mean(axis=-1)
     exp_lat = jnp.where(spec, lat[None, None, :] * (1.0 - P), lat[None, None, :]).mean(-1)
     waste = (spec * (1.0 - P) * cost[None, None, :] * rho).sum(-1)
     exp_cost = cost.sum() + waste
@@ -118,6 +121,60 @@ def counterfactual_grid(P, latencies, costs, alphas, lambdas, rho=0.5,
     frac, exp_lat, exp_cost, waste = _grid(
         P, P_gate, _f(latencies), _f(costs), _f(alphas), _f(lambdas),
         _f(rho),
+    )
+    return {
+        "speculate_fraction": np.asarray(frac),
+        "expected_latency_s": np.asarray(exp_lat),
+        "expected_cost_usd": np.asarray(exp_cost),
+        "expected_waste_usd": np.asarray(waste),
+    }
+
+
+@jax.jit
+def _grid_tenants(P, P_gate, lat, cost, mask, alphas, lams, rho):
+    # tenant-batched §12.1 grid: P/P_gate are (T,) per-tenant seeded-prior
+    # summaries, lat/cost/mask are (T, N) padded log rows.  Masked rows
+    # contribute to nothing; means divide by the per-tenant real row count
+    # (so a short tenant's grid equals its unpadded scalar grid).
+    m = mask.astype(lat.dtype)
+    n = jnp.maximum(m.sum(-1), 1.0)                       # (T,)
+    lat_b = lat[:, None, None, :]
+    cost_b = cost[:, None, None, :]
+    m_b = m[:, None, None, :]
+    P_b = P[:, None, None, None]
+    L_value = lat_b * lams[None, None, :, None]
+    EV = P_gate[:, None, None, None] * L_value - (1.0 - P_gate[:, None, None, None]) * cost_b
+    thr = (1.0 - alphas[None, :, None, None]) * cost_b
+    spec = (EV >= thr) & mask[:, None, None, :]
+    frac = spec.sum(-1) / n[:, None, None]
+    exp_lat = (
+        jnp.where(spec, lat_b * (1.0 - P_b), lat_b) * m_b
+    ).sum(-1) / n[:, None, None]
+    waste = (spec * (1.0 - P_b) * cost_b * rho).sum(-1)
+    exp_cost = (cost * m).sum(-1)[:, None, None] + waste
+    return frac, exp_lat, exp_cost, waste
+
+
+def counterfactual_grid_tenants(P, latencies, costs, mask, alphas, lambdas,
+                                rho=0.5, *, P_lower=None):
+    """§12.1 counterfactual EV grids for a whole fleet of tenants in one
+    XLA call.
+
+    ``P`` is the per-tenant seeded-prior mean (T,); ``latencies`` /
+    ``costs`` / ``mask`` are (T, N) log rows padded to a common N with
+    ``mask`` marking the real ones.  Returns dict of (T, A, L) arrays —
+    ``counterfactual_grid`` stacked over tenants, with per-tenant means
+    taken over each tenant's own row count.  ``P_lower`` switches the
+    SPECULATE gate to the §7.5 credible bound per tenant, as in the
+    single-tenant grid.
+    """
+    P = jnp.atleast_1d(_f(P))
+    P_gate = P if P_lower is None else jnp.atleast_1d(_f(P_lower))
+    lat = jnp.atleast_2d(_f(latencies))
+    cost = jnp.atleast_2d(_f(costs))
+    mask = jnp.atleast_2d(jnp.asarray(mask, bool))
+    frac, exp_lat, exp_cost, waste = _grid_tenants(
+        P, P_gate, lat, cost, mask, _f(alphas), _f(lambdas), _f(rho),
     )
     return {
         "speculate_fraction": np.asarray(frac),

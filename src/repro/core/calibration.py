@@ -15,11 +15,11 @@ set or kept honest by one of these stages (§12.6 knob-to-stage map).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 import statistics
 from typing import Any, Callable, Optional, Sequence
 
 import numpy as np
+from jax.experimental import enable_x64
 
 from .decision import Decision, decision_threshold, expected_value, implied_lambda
 from .posterior import BetaPosterior
@@ -32,6 +32,7 @@ __all__ = [
     "SequentialLogRecord",
     "OfflineReplayReport",
     "offline_replay",
+    "offline_replay_multi_tenant",
     "ShadowReport",
     "shadow_mode",
     "CanaryReport",
@@ -84,6 +85,96 @@ class OfflineReplayReport:
     default_alpha: float
 
 
+def _memoized_predictions(
+    pred: InputPredictor, logs: Sequence[SequentialLogRecord]
+) -> list:
+    """One prediction per *distinct* upstream input.
+
+    Production logs repeat inputs heavily (the AutoReply corpus is one
+    prompt template over and over), and predictors can be arbitrarily
+    expensive Python — so the replay memoizes ``pred.predict`` per input
+    value instead of re-calling it per record.  Unhashable inputs fall
+    back to a direct call.
+    """
+    cache: dict = {}
+    out = []
+    for r in logs:
+        key = r.upstream_input
+        try:
+            hit = key in cache
+        except TypeError:            # unhashable input: no memoization
+            out.append(pred.predict(key))
+            continue
+        if not hit:
+            cache[key] = pred.predict(key)
+        out.append(cache[key])
+    return out
+
+
+def _seed_from_logs(
+    logs: Sequence[SequentialLogRecord],
+    predictors: dict[str, InputPredictor],
+    tier_policy: TierPolicy,
+):
+    """§12.1 bootstrap: effective k, dependency type, per-predictor match
+    rates and the data-seeded prior from the best predictor's (s, f)."""
+    outputs = [r.upstream_output for r in logs]
+    ek = effective_k(outputs)
+    dep_type = auto_assign(outputs)
+
+    match_rates: dict[str, float] = {}
+    best_sf: tuple[int, int] = (0, len(logs))
+    best_rate = -1.0
+    for pname, pred in predictors.items():
+        s = f = 0
+        for r, p in zip(logs, _memoized_predictions(pred, logs)):
+            if p is None:
+                f += 1
+                continue
+            ok = check_success(r.upstream_output, p.i_hat, tier_policy).success
+            s, f = s + int(ok), f + int(not ok)
+        rate = s / max(1, s + f)
+        match_rates[pname] = rate
+        if rate > best_rate:
+            best_rate, best_sf = rate, (s, f)
+    seeded = BetaPosterior.data_seeded(dep_type, *best_sf, k=max(2, ek.k_raw))
+    return ek, dep_type, match_rates, seeded
+
+
+def _grid_points(g: dict, t: Optional[int], alphas, lambdas) -> list[GridPoint]:
+    """Unpack a ``counterfactual_grid``(-``_tenants``) result dict into the
+    row-major (alpha, lambda) GridPoint list the report carries."""
+    sel = (lambda arr, i, j: arr[i, j]) if t is None else (
+        lambda arr, i, j: arr[t, i, j])
+    return [
+        GridPoint(
+            a, lam,
+            float(sel(g["speculate_fraction"], i, j)),
+            float(sel(g["expected_latency_s"], i, j)),
+            float(sel(g["expected_cost_usd"], i, j)),
+            float(sel(g["expected_waste_usd"], i, j)),
+        )
+        for i, a in enumerate(alphas)
+        for j, lam in enumerate(lambdas)
+    ]
+
+
+def _go_and_default(
+    grid: list[GridPoint], go_min_speculate_fraction: float
+) -> tuple[bool, float]:
+    # go/no-go: does any balanced-or-lower grid point speculate usefully?
+    balanced = [g for g in grid if g.alpha <= 0.5]
+    go = any(g.speculate_fraction >= go_min_speculate_fraction for g in balanced)
+    # deployment default alpha: smallest alpha whose grid point speculates on
+    # a majority of rows (cost-conservative default)
+    default_alpha = next(
+        (g.alpha for g in sorted(grid, key=lambda g: g.alpha)
+         if g.speculate_fraction >= go_min_speculate_fraction),
+        0.0,
+    )
+    return go, default_alpha
+
+
 def offline_replay(
     edge: tuple[str, str],
     logs: Sequence[SequentialLogRecord],
@@ -96,63 +187,43 @@ def offline_replay(
     go_min_speculate_fraction: float = 0.5,
 ) -> OfflineReplayReport:
     """§12.1: everything bootstrappable from sequential logs before any
-    speculation is enabled."""
+    speculation is enabled.
+
+    The counterfactual EV grid runs through the jit'd batch engine
+    (``batch_decision.counterfactual_grid_tenants``, one XLA call for the
+    whole (alpha, lambda) cross product) under float64, matching the
+    historical per-cell Python loop to f64 rounding; predictor match
+    rates memoize ``pred.predict`` per distinct upstream input.
+    """
     if not logs:
         raise ValueError("offline replay requires at least one log record")
     tier_policy = tier_policy or TierPolicy()
+    ek, dep_type, match_rates, seeded = _seed_from_logs(
+        logs, predictors, tier_policy)
 
-    # effective branching factor + dependency-type auto-assignment
-    outputs = [r.upstream_output for r in logs]
-    ek = effective_k(outputs)
-    dep_type = auto_assign(outputs)
+    # counterfactual EV grid (§12.1): replay D4 at each (alpha, lambda).
+    # The log axis is padded to a power-of-two bucket under the masked
+    # tenant kernel — padded rows contribute an exact 0.0 to every sum,
+    # so results are bitwise-identical to the unpadded call, and a sweep
+    # over hundreds of ragged per-edge log lists compiles one executable
+    # per bucket instead of one per distinct log count.
+    from .batch_decision import counterfactual_grid_tenants
 
-    # per-predictor empirical tier-1/2 match rate -> data-seeded prior from
-    # the best predictor's (s, f)
-    match_rates: dict[str, float] = {}
-    best_sf: tuple[int, int] = (0, len(logs))
-    best_rate = -1.0
-    for pname, pred in predictors.items():
-        s = f = 0
-        for r in logs:
-            p = pred.predict(r.upstream_input)
-            if p is None:
-                f += 1
-                continue
-            ok = check_success(r.upstream_output, p.i_hat, tier_policy).success
-            s, f = s + int(ok), f + int(not ok)
-        rate = s / max(1, s + f)
-        match_rates[pname] = rate
-        if rate > best_rate:
-            best_rate, best_sf = rate, (s, f)
-    seeded = BetaPosterior.data_seeded(dep_type, *best_sf, k=max(2, ek.k_raw))
-
-    # counterfactual EV grid (§12.1): replay D4 at each (alpha, lambda)
-    P = seeded.mean
-    grid: list[GridPoint] = []
-    lat = np.array([r.latency_s for r in logs])
-    cost = np.array([r.cost_usd for r in logs])
-    for a, lam in itertools.product(alphas, lambdas):
-        L_value = lat * lam
-        ev = P * L_value - (1.0 - P) * cost
-        thr = (1.0 - a) * cost
-        spec = ev >= thr
-        frac = float(spec.mean())
-        # expected latency: speculated rows reclaim P*latency; waiters keep it
-        exp_lat = float(np.where(spec, lat * (1.0 - P), lat).mean())
-        waste = float((spec * (1.0 - P) * cost * rho).mean() * len(logs))
-        exp_cost = float(cost.sum() + waste)
-        grid.append(GridPoint(a, lam, frac, exp_lat, exp_cost, waste))
-
-    # go/no-go: does any balanced-or-lower grid point speculate usefully?
-    balanced = [g for g in grid if g.alpha <= 0.5]
-    go = any(g.speculate_fraction >= go_min_speculate_fraction for g in balanced)
-    # deployment default alpha: smallest alpha whose grid point speculates on
-    # a majority of rows (cost-conservative default)
-    default_alpha = next(
-        (g.alpha for g in sorted(grid, key=lambda g: g.alpha)
-         if g.speculate_fraction >= go_min_speculate_fraction),
-        0.0,
-    )
+    n = len(logs)
+    n_pad = max(16, 1 << (n - 1).bit_length())
+    lat = np.zeros(n_pad)
+    cost = np.zeros(n_pad)
+    mask = np.zeros(n_pad, bool)
+    lat[:n] = [r.latency_s for r in logs]
+    cost[:n] = [r.cost_usd for r in logs]
+    mask[:n] = True
+    with enable_x64():
+        g = counterfactual_grid_tenants(
+            seeded.mean, lat[None], cost[None], mask[None],
+            np.asarray(alphas, float), np.asarray(lambdas, float), rho=rho,
+        )
+    grid = _grid_points(g, 0, alphas, lambdas)
+    go, default_alpha = _go_and_default(grid, go_min_speculate_fraction)
     return OfflineReplayReport(
         edge=edge,
         k_raw=ek.k_raw,
@@ -165,6 +236,79 @@ def offline_replay(
         go=go,
         default_alpha=default_alpha,
     )
+
+
+def offline_replay_multi_tenant(
+    edge: tuple[str, str],
+    logs: Sequence[SequentialLogRecord],
+    predictors: dict[str, InputPredictor],
+    *,
+    tier_policy: TierPolicy | None = None,
+    alphas: Sequence[float] = (0.0, 0.25, 0.5, 0.75, 1.0),
+    lambdas: Sequence[float] = (0.005, 0.01, 0.05, 0.1),
+    rho: float = 0.5,
+    go_min_speculate_fraction: float = 0.5,
+) -> dict[str, OfflineReplayReport]:
+    """Fleet-backed §12.1: one report per tenant, one XLA grid call total.
+
+    Records are grouped by ``SequentialLogRecord.tenant``; each tenant
+    gets its own effective-k / dependency-type / data-seeded prior
+    bootstrap (cheap, scalar-side), then every tenant's counterfactual EV
+    grid is computed in a single jit'd
+    ``batch_decision.counterfactual_grid_tenants`` call over the padded
+    ``tenants x logs`` batch — the same move the multi-tenant replay
+    engine makes for Phase-2 sweeps.  Per-tenant reports agree with
+    running :func:`offline_replay` on each tenant's slice to f64 rounding.
+    """
+    if not logs:
+        raise ValueError("offline replay requires at least one log record")
+    tier_policy = tier_policy or TierPolicy()
+    groups: dict[str, list[SequentialLogRecord]] = {}
+    for r in logs:
+        groups.setdefault(r.tenant, []).append(r)
+    tenants = sorted(groups)
+
+    seeds = {t: _seed_from_logs(groups[t], predictors, tier_policy)
+             for t in tenants}
+
+    from .batch_decision import counterfactual_grid_tenants
+
+    n_max = max(len(groups[t]) for t in tenants)
+    n_max = max(16, 1 << (n_max - 1).bit_length())  # bucket, as above
+    T = len(tenants)
+    P = np.array([seeds[t][3].mean for t in tenants])
+    lat = np.zeros((T, n_max))
+    cost = np.zeros((T, n_max))
+    mask = np.zeros((T, n_max), bool)
+    for i, t in enumerate(tenants):
+        rows = groups[t]
+        lat[i, : len(rows)] = [r.latency_s for r in rows]
+        cost[i, : len(rows)] = [r.cost_usd for r in rows]
+        mask[i, : len(rows)] = True
+    with enable_x64():
+        g = counterfactual_grid_tenants(
+            P, lat, cost, mask,
+            np.asarray(alphas, float), np.asarray(lambdas, float), rho=rho,
+        )
+
+    reports = {}
+    for i, t in enumerate(tenants):
+        ek, dep_type, match_rates, seeded = seeds[t]
+        grid = _grid_points(g, i, alphas, lambdas)
+        go, default_alpha = _go_and_default(grid, go_min_speculate_fraction)
+        reports[t] = OfflineReplayReport(
+            edge=edge,
+            k_raw=ek.k_raw,
+            p_mode=ek.p_mode,
+            k_eff=ek.k_eff,
+            dep_type=dep_type,
+            seeded_prior=seeded,
+            predictor_match_rates=match_rates,
+            grid=grid,
+            go=go,
+            default_alpha=default_alpha,
+        )
+    return reports
 
 
 # ---------------------------------------------------------------------------

@@ -34,6 +34,8 @@ class TriggerEvent:
     edge: Optional[tuple[str, str]]
     action: str
     detail: str
+    tenant: Optional[str] = None    # multi-tenant fleets key state per
+                                    # (tenant, edge); None = single-tenant
 
 
 @dataclasses.dataclass
@@ -50,6 +52,14 @@ class DriftMonitor:
     """Stateful evaluator of the six §12.5 triggers.
 
     Thresholds carry the paper's defaults; every one is overridable.
+
+    Multi-tenant fleets pass ``tenant=`` (scalar) / ``tenants=`` (batch):
+    per-edge state — enable bit, alpha offset, breach runs, posterior
+    history — is then keyed by ``(tenant, edge)``, so one tenant's drift
+    trigger never flips the kill-switch of another tenant that happens to
+    share the same edge name.  ``tenant=None`` keeps the historical
+    edge-only keying (single-tenant deployments, and backward
+    compatibility with persisted state).
     """
 
     posterior_drop_frac: float = 0.20
@@ -66,14 +76,24 @@ class DriftMonitor:
     _credible_breach_run: dict[tuple[str, str], int] = dataclasses.field(default_factory=dict)
     events: list[TriggerEvent] = dataclasses.field(default_factory=list)
 
-    def state(self, edge: tuple[str, str]) -> EdgeState:
-        return self.edges.setdefault(edge, EdgeState())
+    @staticmethod
+    def _key(edge: tuple[str, str], tenant: Optional[str] = None):
+        """Per-tenant kill-switch state key: the bare edge tuple when no
+        tenant is given (historical layout), else ``(tenant, edge)``."""
+        return edge if tenant is None else (tenant, edge)
+
+    def state(self, edge: tuple[str, str],
+              tenant: Optional[str] = None) -> EdgeState:
+        return self.edges.setdefault(self._key(edge, tenant), EdgeState())
 
     # ------------------------------------------------------------ trigger 1
-    def observe_posterior_mean(self, edge: tuple[str, str], mean: float) -> Optional[TriggerEvent]:
+    def observe_posterior_mean(
+        self, edge: tuple[str, str], mean: float,
+        tenant: Optional[str] = None,
+    ) -> Optional[TriggerEvent]:
         """Posterior mean drops > 20% over a 100-trial window vs the prior 500
         -> lower alpha_edge by 0.2 for the next hour."""
-        st = self.state(edge)
+        st = self.state(edge, tenant)
         st.posterior_means.append(mean)
         hist = st.posterior_means
         # Only the trailing recent+baseline observations are ever read (and
@@ -93,6 +113,7 @@ class DriftMonitor:
                 TriggerKind.POSTERIOR_DROP, "edge", edge,
                 action="alpha_edge -= 0.2 for 1h",
                 detail=f"recent={recent:.3f} baseline={baseline:.3f}",
+                tenant=tenant,
             )
             self.events.append(ev)
             return ev
@@ -100,23 +121,26 @@ class DriftMonitor:
 
     # ------------------------------------------------------------ trigger 2
     def _credible_breach_step(
-        self, edge: tuple[str, str], breached: bool, floor: float
+        self, edge: tuple[str, str], breached: bool, floor: float,
+        tenant: Optional[str] = None,
     ) -> Optional[TriggerEvent]:
         """Shared run-length bookkeeping for trigger 2 (scalar and batch)."""
-        run = self._credible_breach_run.get(edge, 0)
+        key = self._key(edge, tenant)
+        run = self._credible_breach_run.get(key, 0)
         run = run + 1 if breached else 0
-        self._credible_breach_run[edge] = run
+        self._credible_breach_run[key] = run
         if run >= self.credible_consecutive_n:
-            st = self.state(edge)
+            st = self.state(edge, tenant)
             st.enabled = False
             st.needs_shadow_rerun = True
             ev = TriggerEvent(
                 TriggerKind.CREDIBLE_BOUND_FLOOR, "edge", edge,
                 action="disable; fresh shadow-mode run required to re-enable",
                 detail=f"P_lower below {floor:.4f} for {run} consecutive decisions",
+                tenant=tenant,
             )
             self.events.append(ev)
-            self._credible_breach_run[edge] = 0
+            self._credible_breach_run[key] = 0
             return ev
         return None
 
@@ -128,12 +152,13 @@ class DriftMonitor:
         C_spec: float,
         L_value: float,
         gamma: float = 0.1,
+        tenant: Optional[str] = None,
     ) -> Optional[TriggerEvent]:
         """P_lower < (1-alpha) * C / (L*lambda + C) for N consecutive decisions
         -> disable edge; require a fresh shadow run to re-enable."""
         floor = (1.0 - alpha) * C_spec / (L_value + C_spec)
         breached = posterior.lower_bound(gamma) < floor
-        return self._credible_breach_step(edge, breached, floor)
+        return self._credible_breach_step(edge, breached, floor, tenant)
 
     def check_credible_bound_batch(
         self,
@@ -144,12 +169,18 @@ class DriftMonitor:
         C_spec,
         L_value,
         gamma: float = 0.1,
+        tenants: Optional[list] = None,
     ) -> list[Optional[TriggerEvent]]:
         """Trigger 2 across a fleet of edges in one vectorized call.
 
         ``post_alpha`` / ``post_beta`` are the per-edge posterior
         parameters; ``alpha`` / ``C_spec`` / ``L_value`` broadcast against
-        them.  The P_lower inversion — the expensive part at fleet scale —
+        them.  ``tenants`` (aligned with ``edges``, entries may be None)
+        keys the breach runs and enable bits per (tenant, edge) — the
+        multi-tenant replay engine's
+        ``MultiTenantReport.final_posterior_rows`` emits exactly this row
+        layout, so a whole fleet's posterior trajectories feed trigger 2
+        in one call (see :meth:`check_credible_bound_fleet`).  The P_lower inversion — the expensive part at fleet scale —
         runs as a single jax ``betaincinv`` call
         (``batch_decision.batch_lower_bound``); the per-edge consecutive-
         breach bookkeeping is shared with :meth:`check_credible_bound`.
@@ -166,6 +197,10 @@ class DriftMonitor:
         from .batch_decision import batch_lower_bound
 
         n = len(edges)
+        if tenants is None:
+            tenants = [None] * n
+        if len(tenants) != n:
+            raise ValueError("tenants must align with edges")
         post_alpha = np.broadcast_to(np.asarray(post_alpha, float), (n,))
         post_beta = np.broadcast_to(np.asarray(post_beta, float), (n,))
         if np.any(post_alpha <= 0) or np.any(post_beta <= 0):
@@ -179,9 +214,30 @@ class DriftMonitor:
         P_lower = batch_lower_bound(post_alpha, post_beta, gamma)
         floors = (1.0 - alpha) * C_spec / (L_value + C_spec)
         return [
-            self._credible_breach_step(edge, bool(p < f), float(f))
-            for edge, p, f in zip(edges, P_lower, floors)
+            self._credible_breach_step(edge, bool(p < f), float(f), tenant)
+            for edge, tenant, p, f in zip(edges, tenants, P_lower, floors)
         ]
+
+    def check_credible_bound_fleet(
+        self,
+        tenant_edges: list[tuple[str, tuple[str, str]]],
+        post_alpha,
+        post_beta,
+        alpha,
+        C_spec,
+        L_value,
+        gamma: float = 0.1,
+    ) -> list[Optional[TriggerEvent]]:
+        """Trigger 2 for a sharded fleet's posterior snapshot in one call.
+
+        ``tenant_edges`` is the ``[(tenant, edge), ...]`` row layout of
+        ``MultiTenantReport.final_posterior_rows`` — each row's breach run
+        and kill-switch state is keyed per (tenant, edge)."""
+        return self.check_credible_bound_batch(
+            [e for _, e in tenant_edges], post_alpha, post_beta,
+            alpha, C_spec, L_value, gamma,
+            tenants=[t for t, _ in tenant_edges],
+        )
 
     # ------------------------------------------------------------ trigger 3
     def check_tier2_false_accept(
@@ -252,10 +308,12 @@ class DriftMonitor:
         return ev
 
     # --------------------------------------------------------------- queries
-    def effective_alpha(self, edge: tuple[str, str], alpha: float) -> float:
+    def effective_alpha(self, edge: tuple[str, str], alpha: float,
+                        tenant: Optional[str] = None) -> float:
         if self.global_alpha_zero:
             return 0.0
-        return min(1.0, max(0.0, alpha + self.state(edge).alpha_offset))
+        return min(1.0, max(0.0, alpha + self.state(edge, tenant).alpha_offset))
 
-    def edge_enabled(self, edge: tuple[str, str]) -> bool:
-        return self.state(edge).enabled
+    def edge_enabled(self, edge: tuple[str, str],
+                     tenant: Optional[str] = None) -> bool:
+        return self.state(edge, tenant).enabled

@@ -57,7 +57,16 @@ from .betainc import betaincinv
 from .planner import PlannerParams
 from .workflow import Workflow
 
-__all__ = ["FleetLowered", "FleetReport", "lower_workflow", "fleet_replay"]
+__all__ = [
+    "FleetLowered",
+    "FleetReport",
+    "FleetStack",
+    "MultiTenantReport",
+    "lower_workflow",
+    "fleet_replay",
+    "stack_tenants",
+    "multi_tenant_replay",
+]
 
 
 # ----------------------------------------------------------------- lowering
@@ -242,18 +251,24 @@ class FleetReport:
     finish_s: np.ndarray        # (E, G, V)
     post_alpha: np.ndarray      # (E, G, V) posterior after each episode
     post_beta: np.ndarray       # (E, G, V)
+    ep_mask: np.ndarray = None  # (E,) bool; False rows were identity
+                                # (padded) episodes with zeroed stats
 
     def pareto(self) -> dict:
         """Per-grid-point mean (latency, cost, waste) — the §12.3 canary
-        Pareto the calibration stage consumes."""
+        Pareto the calibration stage consumes.  Means are taken over the
+        real episodes only (``ep_mask``), so padded identity rows do not
+        dilute the statistics."""
+        rows = slice(None) if self.ep_mask is None else np.asarray(
+            self.ep_mask, bool)
         return {
             "alphas": self.alphas,
             "lambdas": self.lambdas,
-            "latency_s": self.makespan_s.mean(0),
-            "cost_usd": self.total_cost_usd.mean(0),
-            "waste_usd": self.waste_usd.mean(0),
-            "launched": self.launched.sum(0),
-            "committed": self.committed.sum(0),
+            "latency_s": self.makespan_s[rows].mean(0),
+            "cost_usd": self.total_cost_usd[rows].mean(0),
+            "waste_usd": self.waste_usd[rows].mean(0),
+            "launched": self.launched[rows].sum(0),
+            "committed": self.committed[rows].sum(0),
         }
 
 
@@ -267,6 +282,7 @@ def fleet_replay(
     pred_ok: Optional[np.ndarray] = None,
     chunk_P: Optional[np.ndarray] = None,
     throttle_every: int = 1,
+    ep_mask: Optional[np.ndarray] = None,
 ) -> FleetReport:
     """Replay E episodes x G grid points in one jit'd XLA call.
 
@@ -281,6 +297,11 @@ def fleet_replay(
       chunk_P: (E, V, K) refined per-chunk confidences P_k for §9.1
         mid-stream re-estimation; omit to disable streaming cancels.
       throttle_every: §9.1 throttling — re-evaluate every N chunks.
+      ep_mask: (E,) bool — episodes with a False mask are identity scan
+        steps: the posterior carry passes through unchanged, per-episode
+        stats report as zero (posterior columns report the carried
+        values).  This is what lets ragged per-tenant episode logs pad to
+        a common length without perturbing anyone's trajectory.
 
     The per-edge Beta posterior is carried sequentially across episodes
     (scan), independently per grid point (vmap), exactly like running the
@@ -310,17 +331,24 @@ def fleet_replay(
         chunk_P = np.asarray(chunk_P, float)
         K = chunk_P.shape[-1]
         has_refiner = lowered.has_refiner
+    if ep_mask is None:
+        ep_mask = np.ones(E, bool)
+    else:
+        ep_mask = np.asarray(ep_mask, bool)
+        if ep_mask.shape != (E,):
+            raise ValueError(f"ep_mask must have shape ({E},)")
 
     ys = _fleet_scan(
         _pack_static(lowered, has_refiner),
         _f(lowered.a0), _f(lowered.b0), _f(lowered.discount),
         _f(alphas), _f(lambdas), _f(lowered.gamma),
         jnp.asarray(success), jnp.asarray(pred_ok, bool),
-        _f(chunk_P), int(throttle_every), int(K),
+        _f(chunk_P), jnp.asarray(ep_mask), int(throttle_every), int(K),
         bool(lowered.use_lower_bound),
     )
     np_out = {k: np.asarray(v) for k, v in ys.items()}
-    return FleetReport(alphas=alphas, lambdas=lambdas, **np_out)
+    return FleetReport(alphas=alphas, lambdas=lambdas, ep_mask=ep_mask,
+                       **np_out)
 
 
 def _pack_static(lowered: FleetLowered, has_refiner: np.ndarray):
@@ -339,30 +367,54 @@ def _pack_static(lowered: FleetLowered, has_refiner: np.ndarray):
     )
 
 
-@functools.partial(
-    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
-)
-def _fleet_scan(static, a0, b0, discount, alphas, lambdas, gamma,
-                success, pred_ok, chunk_P, throttle_every, K,
-                use_lower_bound):
-    G = alphas.shape[0]
-    V = a0.shape[0]
-    post0 = jnp.broadcast_to(jnp.stack([a0, b0], -1)[None], (G, V, 2))
-
+def _scan_core(static, post0, discount, alphas, lambdas, gamma,
+               success, pred_ok, chunk_P, ep_mask, throttle_every, K,
+               use_lower_bound):
+    """Episode scan for one workflow: carry (G, V, 2) posteriors across E
+    episodes, vmapped over the G grid points.  ``ep_mask`` turns padded
+    episodes into identity steps (unchanged carry, zeroed stats) so ragged
+    per-tenant logs can share one scan length.  Returns the final carry —
+    the donation target for repeated calibration rounds — plus the stats.
+    """
     episode = functools.partial(
         _episode, static, discount, (K, throttle_every),
         use_lower_bound, gamma,
     )
 
     def ep_step(post_ab, xs):
-        succ_e, pred_e, chunks_e = xs
+        succ_e, pred_e, chunks_e, mask_e = xs
         # vmap over grid points: independent posterior trajectory each
         post_new, stats = jax.vmap(
             episode, in_axes=(0, 0, 0, None, None, None)
         )(post_ab, alphas, lambdas, succ_e, pred_e, chunks_e)
+        post_new = jnp.where(mask_e, post_new, post_ab)
+        # masked steps are identity updates: stats zero out, the posterior
+        # columns keep reporting the carried (unchanged) values
+        stats = {
+            k: jnp.where(mask_e, v, jnp.zeros_like(v))
+            for k, v in stats.items()
+        }
+        stats["post_alpha"] = jnp.where(mask_e, stats["post_alpha"],
+                                        post_ab[..., 0])
+        stats["post_beta"] = jnp.where(mask_e, stats["post_beta"],
+                                       post_ab[..., 1])
         return post_new, stats
 
-    _, ys = jax.lax.scan(ep_step, post0, (success, pred_ok, chunk_P))
+    return jax.lax.scan(ep_step, post0, (success, pred_ok, chunk_P, ep_mask))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
+)
+def _fleet_scan(static, a0, b0, discount, alphas, lambdas, gamma,
+                success, pred_ok, chunk_P, ep_mask, throttle_every, K,
+                use_lower_bound):
+    G = alphas.shape[0]
+    V = a0.shape[0]
+    post0 = jnp.broadcast_to(jnp.stack([a0, b0], -1)[None], (G, V, 2))
+    _, ys = _scan_core(static, post0, discount, alphas, lambdas, gamma,
+                       success, pred_ok, chunk_P, ep_mask, throttle_every,
+                       K, use_lower_bound)
     return ys
 
 
@@ -488,3 +540,421 @@ def _episode(static, discount, chunk_cfg, use_lower_bound, gamma,
         "post_beta": b_new,
     }
     return post_new, stats
+
+
+# ---------------------------------------------------------- multi-tenant
+def _pad_lowered(lowered: FleetLowered, V: int) -> FleetLowered:
+    """Pad a lowering to V ops with inert slots.
+
+    Padded ops have zero duration/cost, no parents, no candidate edge and
+    a unit Beta prior, so they never launch, never contribute to makespan,
+    cost or waste, and their posterior carry is a fixed point — a tenant
+    padded to a larger ``V_max`` replays bitwise-identically to its
+    unpadded lowering on the real op columns.
+    """
+    pad = V - lowered.n_ops
+    if pad < 0:
+        raise ValueError(f"cannot pad {lowered.n_ops} ops down to {V}")
+    if pad == 0:
+        return lowered
+
+    def zeros(x):
+        return np.concatenate([x, np.zeros(pad, x.dtype)])
+
+    def fill(x, value):
+        return np.concatenate([x, np.full(pad, value, x.dtype)])
+
+    def square(x):
+        out = np.zeros((V, V), x.dtype)
+        out[: lowered.n_ops, : lowered.n_ops] = x
+        return out
+
+    return FleetLowered(
+        names=lowered.names + tuple(f"__pad{i}" for i in range(pad)),
+        dur=zeros(lowered.dur), op_cost=zeros(lowered.op_cost),
+        parent_mask=square(lowered.parent_mask),
+        has_edge=zeros(lowered.has_edge),
+        u_onehot=square(lowered.u_onehot),
+        u_streams=zeros(lowered.u_streams),
+        lat_save=zeros(lowered.lat_save),
+        in_tok=zeros(lowered.in_tok), out_tok=zeros(lowered.out_tok),
+        in_price=zeros(lowered.in_price), out_price=zeros(lowered.out_price),
+        pred_cost=zeros(lowered.pred_cost), has_pred=zeros(lowered.has_pred),
+        streams=zeros(lowered.streams), has_refiner=zeros(lowered.has_refiner),
+        n_chunks=fill(lowered.n_chunks, 1.0),
+        a0=fill(lowered.a0, 1.0), b0=fill(lowered.b0, 1.0),
+        discount=fill(lowered.discount, 1.0),
+        use_lower_bound=lowered.use_lower_bound, gamma=lowered.gamma,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetStack:
+    """T tenants stacked along a new leading batch axis.
+
+    Each tenant is a :class:`FleetLowered` padded to the common ``V_max``
+    plus its episode log padded to the common ``E_max`` (``ep_mask`` marks
+    the real episodes; padded ones are identity scan steps).  The stack is
+    what :func:`multi_tenant_replay` partitions across devices.
+    """
+
+    tenants: tuple[str, ...]
+    lowered: tuple[FleetLowered, ...]   # padded to the common V_max
+    n_ops: tuple[int, ...]              # pre-padding op counts
+    n_episodes: tuple[int, ...]         # pre-padding episode counts
+    success: np.ndarray                 # (T, E_max, V_max) bool
+    pred_ok: np.ndarray                 # (T, E_max, V_max) bool
+    chunk_P: np.ndarray                 # (T, E_max, V_max, K)
+    ep_mask: np.ndarray                 # (T, E_max) bool
+    has_refiner: np.ndarray             # (T, V_max) bool (zeroed where the
+                                        # tenant supplied no chunk_P)
+    use_lower_bound: bool
+
+    @property
+    def T(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def V(self) -> int:
+        return self.success.shape[2]
+
+    @property
+    def E(self) -> int:
+        return self.success.shape[1]
+
+    @property
+    def K(self) -> int:
+        return self.chunk_P.shape[-1]
+
+    @property
+    def gammas(self) -> np.ndarray:
+        return np.array([l.gamma for l in self.lowered])
+
+    def edge_keys(self) -> tuple[tuple[tuple[int, tuple[str, str]], ...], ...]:
+        """Per tenant: (op index, (upstream, downstream)) for each
+        speculation-candidate edge — the taxonomy keys the drift monitor
+        and calibration stages address posteriors by."""
+        out = []
+        for low in self.lowered:
+            keys = []
+            for v in low.edge_ops():
+                u = int(np.argmax(low.u_onehot[v]))
+                keys.append((v, (low.names[u], low.names[v])))
+            out.append(tuple(keys))
+        return tuple(out)
+
+    def device_args(self):
+        """Device-side argument tuple for the replay executable, memoized
+        per float dtype (the ``_f`` convention resolves f32/f64 from
+        ``jax_enable_x64`` at call time).
+
+        Repeated calibration rounds over an unchanged stack — the
+        replay / re-gate / replay loop the donated posterior carry exists
+        for — would otherwise re-run ~20 ``np.stack`` copies and
+        host->device transfers per round (two V_max x V_max matrices per
+        tenant among them); memoizing here makes every round after the
+        first reuse the staged buffers.  The memo writes straight into
+        ``__dict__`` (allowed on frozen dataclasses) and pins the arrays
+        for the stack's lifetime.
+        """
+        key = f"_device_args_{jnp.result_type(float).name}"
+        cached = self.__dict__.get(key)
+        if cached is not None:
+            return cached
+        lows = self.lowered
+        static = (
+            jnp.asarray(np.stack([l.parent_mask for l in lows])),
+            jnp.asarray(np.stack([l.u_onehot for l in lows])),
+            _f(np.stack([l.dur for l in lows])),
+            _f(np.stack([l.op_cost for l in lows])),
+            jnp.asarray(np.stack([l.has_edge for l in lows])),
+            jnp.asarray(np.stack([l.u_streams for l in lows])),
+            _f(np.stack([l.lat_save for l in lows])),
+            _f(np.stack([l.in_tok for l in lows])),
+            _f(np.stack([l.out_tok for l in lows])),
+            _f(np.stack([l.in_price for l in lows])),
+            _f(np.stack([l.out_price for l in lows])),
+            _f(np.stack([l.pred_cost for l in lows])),
+            jnp.asarray(np.stack([l.has_pred for l in lows])),
+            jnp.asarray(np.stack([l.streams for l in lows])),
+            jnp.asarray(self.has_refiner),
+            _f(np.stack([l.n_chunks for l in lows])),
+        )
+        cached = (
+            static,
+            _f(np.stack([l.a0 for l in lows])),
+            _f(np.stack([l.b0 for l in lows])),
+            _f(np.stack([l.discount for l in lows])),
+            _f(self.gammas),
+            jnp.asarray(self.success),
+            jnp.asarray(self.pred_ok),
+            _f(self.chunk_P),
+            jnp.asarray(self.ep_mask),
+        )
+        self.__dict__[key] = cached
+        return cached
+
+
+def stack_tenants(
+    lowereds,
+    successes,
+    *,
+    pred_oks=None,
+    chunk_Ps=None,
+    tenants=None,
+) -> FleetStack:
+    """Stack per-tenant (lowering, episode log) pairs into one batch.
+
+    Ragged shapes are padded: ops to ``V_max`` (inert slots, see
+    :func:`_pad_lowered`), episodes to ``E_max`` (masked identity steps).
+    Every tenant keeps its own taxonomy-keyed prior ``(a0, b0)``, discount
+    and §7.5 gamma; ``use_lower_bound`` must agree across tenants because
+    it selects the compiled gate expression.
+    """
+    T = len(lowereds)
+    if T == 0:
+        raise ValueError("stack_tenants requires at least one tenant")
+    if len(successes) != T:
+        raise ValueError("one success array per tenant required")
+    if tenants is None:
+        tenants = tuple(f"tenant{t}" for t in range(T))
+    tenants = tuple(tenants)
+    if len(set(tenants)) != T:
+        raise ValueError("tenant names must be unique")
+    pred_oks = list(pred_oks) if pred_oks is not None else [None] * T
+    chunk_Ps = list(chunk_Ps) if chunk_Ps is not None else [None] * T
+    if len(pred_oks) != T or len(chunk_Ps) != T:
+        raise ValueError("pred_oks / chunk_Ps must align with tenants")
+    use_lb = {bool(l.use_lower_bound) for l in lowereds}
+    if len(use_lb) != 1:
+        raise ValueError(
+            "use_lower_bound must agree across stacked tenants (it selects "
+            "the compiled §7.5 gate); split mixed fleets into two stacks"
+        )
+
+    n_ops = tuple(l.n_ops for l in lowereds)
+    successes = [np.asarray(s, bool) for s in successes]
+    for t, (low, suc) in enumerate(zip(lowereds, successes)):
+        if suc.ndim != 2 or suc.shape[1] != low.n_ops:
+            raise ValueError(
+                f"tenant {tenants[t]!r}: success must be (E, {low.n_ops})"
+            )
+    n_eps = tuple(s.shape[0] for s in successes)
+    V = max(n_ops)
+    E = max(n_eps)
+    provided_K = {np.asarray(c).shape[-1] for c in chunk_Ps if c is not None}
+    if len(provided_K) > 1:
+        raise ValueError("chunk_P K must agree across tenants that stream")
+    K = provided_K.pop() if provided_K else 1
+
+    padded = tuple(_pad_lowered(l, V) for l in lowereds)
+    success = np.zeros((T, E, V), bool)
+    pred_ok = np.zeros((T, E, V), bool)
+    chunk_P = np.ones((T, E, V, K))
+    ep_mask = np.zeros((T, E), bool)
+    has_refiner = np.zeros((T, V), bool)
+    for t, low in enumerate(lowereds):
+        e_t, v_t = n_eps[t], n_ops[t]
+        success[t, :e_t, :v_t] = successes[t]
+        po = pred_oks[t]
+        if po is None:
+            po = np.broadcast_to(low.has_pred, (e_t, v_t))
+        pred_ok[t, :e_t, :v_t] = np.asarray(po, bool)
+        cp = chunk_Ps[t]
+        if cp is not None:
+            cp = np.asarray(cp, float)
+            if cp.shape != (e_t, v_t, K):
+                raise ValueError(
+                    f"tenant {tenants[t]!r}: chunk_P must be "
+                    f"({e_t}, {v_t}, {K})"
+                )
+            chunk_P[t, :e_t, :v_t] = cp
+            has_refiner[t, :v_t] = low.has_refiner
+        ep_mask[t, :e_t] = True
+
+    return FleetStack(
+        tenants=tenants, lowered=padded, n_ops=n_ops, n_episodes=n_eps,
+        success=success, pred_ok=pred_ok, chunk_P=chunk_P, ep_mask=ep_mask,
+        has_refiner=has_refiner, use_lower_bound=use_lb.pop(),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTenantReport:
+    """Per-tenant fleet reports plus the donatable posterior carry.
+
+    Stat arrays are numpy with a leading T axis over the stacked tenants
+    (then E episodes, G grid points, V_max ops as in
+    :class:`FleetReport`); rows past a tenant's real episode count are
+    identity steps (zero stats, carried posteriors).  ``post_final`` stays
+    a jax array — feed it back as ``post0`` (with ``donate=True``) so
+    repeated calibration rounds reuse the same device buffer.
+    """
+
+    tenants: tuple[str, ...]
+    alphas: np.ndarray
+    lambdas: np.ndarray
+    n_ops: tuple[int, ...]
+    n_episodes: tuple[int, ...]
+    ep_mask: np.ndarray
+    edge_keys: tuple
+    post_final: object          # jax (T, G, V, 2)
+    makespan_s: np.ndarray      # (T, E, G)
+    total_cost_usd: np.ndarray
+    waste_usd: np.ndarray
+    launched: np.ndarray
+    committed: np.ndarray
+    cancelled: np.ndarray
+    EV_usd: np.ndarray          # (T, E, G, V)
+    threshold_usd: np.ndarray
+    speculate: np.ndarray
+    edge_launched: np.ndarray
+    edge_committed: np.ndarray
+    edge_waste_usd: np.ndarray
+    start_s: np.ndarray
+    finish_s: np.ndarray
+    post_alpha: np.ndarray
+    post_beta: np.ndarray
+
+    def tenant_report(self, t: int) -> FleetReport:
+        """Slice tenant ``t`` back to a single-workflow :class:`FleetReport`
+        (real episodes and ops only)."""
+        e_t, v_t = self.n_episodes[t], self.n_ops[t]
+        kw = {}
+        for f in dataclasses.fields(FleetReport):
+            if f.name in ("alphas", "lambdas"):
+                continue
+            arr = getattr(self, f.name)[t]
+            kw[f.name] = arr[:e_t, :, :v_t] if arr.ndim == 3 else arr[:e_t]
+        return FleetReport(alphas=self.alphas, lambdas=self.lambdas, **kw)
+
+    def final_posterior_rows(self, grid_index: int = 0):
+        """Flatten the final per-(tenant, edge) posteriors at one grid
+        point into the row layout
+        ``DriftMonitor.check_credible_bound_batch`` consumes:
+        ``([(tenant, edge), ...], post_alpha, post_beta)``."""
+        post = np.asarray(self.post_final)
+        tenant_edges, a, b = [], [], []
+        for t, keys in enumerate(self.edge_keys):
+            for v, key in keys:
+                tenant_edges.append((self.tenants[t], key))
+                a.append(post[t, grid_index, v, 0])
+                b.append(post[t, grid_index, v, 1])
+        return tenant_edges, np.asarray(a), np.asarray(b)
+
+    def pareto(self) -> dict:
+        """Per-tenant §12.3 Pareto dicts keyed by tenant name."""
+        return {
+            name: self.tenant_report(t).pareto()
+            for t, name in enumerate(self.tenants)
+        }
+
+
+@functools.lru_cache(maxsize=None)
+def _mt_executable(mesh, axis_name, throttle_every, K, use_lower_bound,
+                   donate):
+    """Compile (and cache) the tenant-vmapped, optionally shard_map'd
+    episode scan.  The cache key carries the mesh object itself, so one
+    process can serve sharded and unsharded fleets side by side."""
+
+    def run(static, post0, discount, alphas, lambdas, gamma,
+            success, pred_ok, chunk_P, ep_mask):
+        def one(st, p0, d, g, s, pk, cp, em):
+            return _scan_core(st, p0, d, alphas, lambdas, g, s, pk, cp, em,
+                              throttle_every, K, use_lower_bound)
+
+        return jax.vmap(one)(static, post0, discount, gamma,
+                             success, pred_ok, chunk_P, ep_mask)
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        t = PartitionSpec(axis_name)
+        r = PartitionSpec()
+        run = shard_map(
+            run, mesh=mesh,
+            # leading tenant axis partitioned; the (alpha, lambda) grid is
+            # replicated and rides along under the per-shard vmap
+            in_specs=(t, t, t, r, r, t, t, t, t, t),
+            out_specs=t,
+            check_rep=False,
+        )
+    return jax.jit(run, donate_argnums=(1,) if donate else ())
+
+
+def multi_tenant_replay(
+    stack: FleetStack,
+    alphas,
+    lambdas,
+    *,
+    throttle_every: int = 1,
+    mesh=None,
+    axis_name: str = "fleet",
+    post0=None,
+    donate: bool = False,
+) -> MultiTenantReport:
+    """Replay T tenants x E episodes x G grid points in one XLA call.
+
+    The tenant axis is vmapped over per-tenant DAGs, priors, gammas and
+    episode logs; with ``mesh`` (a 1-D mesh such as
+    ``repro.launch.mesh.make_fleet_mesh()``) the ``tenants x grid`` work
+    is partitioned across devices via ``shard_map`` along the tenant
+    axis, each shard carrying its tenants' full grid sweep.  When T does
+    not divide the mesh extent the call falls back to the unsharded
+    executable (mirroring ``sharding.rules.shard_if_divisible``).
+
+    ``post0`` (a previous report's ``post_final``) replaces the stacked
+    priors as the scan carry; with ``donate=True`` its device buffer is
+    donated to the new carry, so repeated calibration rounds — replay,
+    re-gate, replay — update posteriors in place instead of reallocating
+    per round.  Donation consumes the passed-in array: the previous
+    report's ``post_final`` (including ``final_posterior_rows``) becomes
+    unreadable afterwards, which is why it is opt-in — read the old
+    round's posteriors (drift gating) *before* donating them into the
+    next round.
+
+    Per-tenant results are bitwise-identical (float64) to T independent
+    :func:`fleet_replay` calls — pinned by tests/test_fleet_multitenant.py
+    and the 8-device case in tests/test_multidevice.py.
+    """
+    alphas = np.atleast_1d(np.asarray(alphas, float))
+    lambdas = np.atleast_1d(np.asarray(lambdas, float))
+    if lambdas.shape[0] == 1 and alphas.shape[0] > 1:
+        lambdas = np.broadcast_to(lambdas, alphas.shape).copy()
+    if alphas.shape != lambdas.shape:
+        raise ValueError("alphas and lambdas must be paired (same length)")
+    T, G, V = stack.T, alphas.shape[0], stack.V
+
+    if mesh is not None:
+        from ..sharding.rules import fleet_axis_spec
+
+        if fleet_axis_spec(mesh, T, axis=axis_name) is None:
+            mesh = None  # indivisible tenant axis: replicate = don't shard
+
+    (static, a0, b0, discount, gammas,
+     success, pred_ok, chunk_P, ep_mask) = stack.device_args()
+    if post0 is None:
+        post0 = jnp.broadcast_to(
+            jnp.stack([a0, b0], -1)[:, None], (T, G, V, 2)
+        )
+    else:
+        if tuple(post0.shape) != (T, G, V, 2):
+            raise ValueError(f"post0 must have shape ({T}, {G}, {V}, 2)")
+        post0 = _f(post0)
+
+    fn = _mt_executable(
+        mesh, axis_name, int(throttle_every), int(stack.K),
+        bool(stack.use_lower_bound), bool(donate),
+    )
+    post_final, ys = fn(
+        static, post0, discount, _f(alphas), _f(lambdas), gammas,
+        success, pred_ok, chunk_P, ep_mask,
+    )
+    np_out = {k: np.asarray(v) for k, v in ys.items()}
+    return MultiTenantReport(
+        tenants=stack.tenants, alphas=alphas, lambdas=lambdas,
+        n_ops=stack.n_ops, n_episodes=stack.n_episodes,
+        ep_mask=stack.ep_mask, edge_keys=stack.edge_keys(),
+        post_final=post_final, **np_out,
+    )

@@ -9,7 +9,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_host_mesh", "HardwareSpec", "V5E"]
+__all__ = [
+    "make_production_mesh",
+    "make_host_mesh",
+    "make_fleet_mesh",
+    "HardwareSpec",
+    "V5E",
+]
 
 import dataclasses
 
@@ -45,3 +51,12 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (real or forced) host devices exist —
     used by multi-device CPU tests, not the dry-run."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_fleet_mesh(n: int | None = None, *, axis: str = "fleet"):
+    """1-D mesh for the multi-tenant replay engine: the ``tenants x grid``
+    batch axis of ``repro.core.fleet.multi_tenant_replay`` is shard_map'd
+    over this axis.  Defaults to every visible (real or
+    XLA_FLAGS-forced) device."""
+    n = len(jax.devices()) if n is None else n
+    return jax.make_mesh((n,), (axis,))

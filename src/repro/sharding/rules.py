@@ -23,6 +23,7 @@ from ..configs.base import ModelConfig
 __all__ = [
     "param_rules",
     "batch_spec",
+    "fleet_axis_spec",
     "shard_if_divisible",
     "constrain",
     "named_sharding_tree",
@@ -87,6 +88,17 @@ def batch_spec(mesh: Mesh, batch: int, *, extra_dims: int = 1) -> P:
     extent = math.prod(mesh.shape[a] for a in data_axes)
     first = data_axes if batch % extent == 0 else None
     return P(first, *([None] * extra_dims))
+
+
+def fleet_axis_spec(mesh: Mesh, n: int, axis: str = "fleet") -> Optional[P]:
+    """Partition spec for the fleet engine's leading ``tenants x grid``
+    batch axis: ``P(axis)`` when the mesh-axis extent divides ``n``,
+    else ``None`` — the caller (``core.fleet.multi_tenant_replay``) falls
+    back to an unsharded call, the batch-axis analogue of
+    ``shard_if_divisible``'s replication fallback."""
+    if axis not in mesh.shape or n % mesh.shape[axis] != 0:
+        return None
+    return P(axis)
 
 
 def constrain(x: jax.Array, spec: P) -> jax.Array:

@@ -1,0 +1,43 @@
+"""benchmarks/run.py --smoke wired into tier-1: tiny-episode parity
+(scalar<->fleet Pareto, bitwise multi-tenant) plus schema validation of
+both the freshly-built record and every checked-in BENCH_*.json — so
+benchmark or record-format drift breaks fast tests instead of rotting
+until the next manual benchmark run."""
+import json
+import pathlib
+import sys
+
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import run as bench_run
+
+
+def test_smoke_mode_parity_and_schema():
+    rec = bench_run.smoke()
+    # the smoke record is the full BENCH_fleet.json shape at tiny sizes
+    assert rec["multi_tenant"]["parity"][
+        "bitwise_f64_vs_independent_fleet_replay"] is True
+    assert rec["parity"]["launched_match"] and rec["parity"]["committed_match"]
+    assert rec["credible_bound"]["parity"]["launched_match"]
+    # tiny sizes: the smoke path must never masquerade as the real record
+    assert rec["episodes"] < 100
+
+
+def test_checked_in_bench_files_carry_required_schema():
+    checked = bench_run.validate_bench_files()
+    assert "BENCH_fleet.json" in checked
+    fleet = json.loads((bench_run.ROOT / "BENCH_fleet.json").read_text())
+    mt = fleet["multi_tenant"]
+    # acceptance shape: >= 8 tenants in one sharded call, with the
+    # 1/2/4/8 forced-host-device scaling rows recorded
+    assert mt["tenants"] >= 8
+    assert mt["parity"]["bitwise_f64_vs_independent_fleet_replay"] is True
+    assert [r["devices"] for r in mt["scaling"]] == [1, 2, 4, 8]
+    assert all(r["shards"] == r["devices"] for r in mt["scaling"])
+
+
+def test_smoke_rejects_malformed_record():
+    with pytest.raises(AssertionError, match="missing keys"):
+        bench_run.validate_fleet_record({"benchmark": "x"})

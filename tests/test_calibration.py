@@ -2,11 +2,14 @@
 import numpy as np
 import pytest
 
+import itertools
+
 from repro.core.calibration import (
     SequentialLogRecord,
     TokenEstimator,
     canary,
     offline_replay,
+    offline_replay_multi_tenant,
     online_calibration,
     shadow_mode,
 )
@@ -69,6 +72,139 @@ class TestOfflineReplay:
         rep = offline_replay(("a", "b"), logs, {"modal": pred},
                              lambdas=(0.005, 0.01))
         assert not rep.go
+
+    def test_grid_matches_pre_batch_scalar_loop(self):
+        """The jit'd counterfactual grid reproduces the historical
+        per-cell Python loop (itertools.product over the grid, numpy per
+        log row) to f64 rounding on the AutoReply config — the §12.1
+        replay semantics did not move when the grid moved into XLA."""
+        rng = np.random.default_rng(0)
+        intents = rng.choice(["billing", "support", "sales"],
+                             p=[0.7, 0.2, 0.1], size=200)
+        lats = rng.uniform(0.5, 3.0, size=200)
+        costs = rng.uniform(0.005, 0.03, size=200)
+        logs = [SequentialLogRecord("email", i, "x", "y", float(l), float(c))
+                for i, l, c in zip(intents, lats, costs)]
+        pred = HistoricalModalPredictor()
+        pred.observe_many([("email", i) for i in intents])
+        alphas = (0.0, 0.25, 0.5, 0.75, 1.0)
+        lambdas = (0.005, 0.01, 0.05, 0.1)
+        rho = 0.37
+        rep = offline_replay(("clf", "drafter"), logs, {"modal": pred},
+                             alphas=alphas, lambdas=lambdas, rho=rho)
+
+        # the pre-batch reference loop, verbatim
+        P = rep.seeded_prior.mean
+        lat = np.array([r.latency_s for r in logs])
+        cost = np.array([r.cost_usd for r in logs])
+        ref = []
+        for a, lam in itertools.product(alphas, lambdas):
+            ev = P * (lat * lam) - (1.0 - P) * cost
+            spec = ev >= (1.0 - a) * cost
+            frac = float(spec.mean())
+            exp_lat = float(np.where(spec, lat * (1.0 - P), lat).mean())
+            waste = float((spec * (1.0 - P) * cost * rho).mean() * len(logs))
+            ref.append((frac, exp_lat, float(cost.sum() + waste), waste))
+        assert len(rep.grid) == len(ref)
+        for g, (frac, exp_lat, exp_cost, waste) in zip(rep.grid, ref):
+            assert g.speculate_fraction == pytest.approx(frac, rel=1e-12)
+            assert g.expected_latency_s == pytest.approx(exp_lat, rel=1e-12)
+            assert g.expected_cost_usd == pytest.approx(exp_cost, rel=1e-12)
+            assert g.expected_waste_usd == pytest.approx(
+                waste, rel=1e-12, abs=1e-15)
+
+    def test_ragged_log_counts_share_bucketed_executable(self):
+        """Review regression: the jit'd grid must not recompile per
+        distinct log count — a sweep over ragged per-edge logs pads the
+        log axis to power-of-two buckets (bitwise-exact: padded rows are
+        masked zeros), so many lengths share one XLA executable."""
+        from repro.core import batch_decision as bd
+
+        pred = HistoricalModalPredictor()
+        pred.observe("e", "x")
+        bd._grid_tenants.clear_cache()
+        base = None
+        for n in (33, 40, 51, 64):      # all in the 64-bucket
+            logs = [SequentialLogRecord("e", "x", "a", "b", 1.0, 0.01)
+                    for _ in range(n)]
+            rep = offline_replay(("u", "v"), logs, {"m": pred})
+            base = base or rep
+            assert bd._grid_tenants._cache_size() == 1, \
+                f"n={n} triggered a recompile"
+        # and the bucket padding is invisible in the results: fractions
+        # are exact row counts over n, not over the padded length
+        assert {g.speculate_fraction for g in base.grid} <= {0.0, 1.0}
+
+    def test_predictions_memoized_per_distinct_input(self):
+        """Satellite regression: the replay used to call pred.predict once
+        per (predictor, record) — O(predictors x logs) Python-side model
+        calls.  Repeated upstream inputs now hit a per-input memo."""
+
+        class CountingPredictor:
+            def __init__(self):
+                self.calls = 0
+                self.inner = HistoricalModalPredictor()
+
+            def predict(self, upstream_input):
+                self.calls += 1
+                return self.inner.predict(upstream_input)
+
+        logs = [SequentialLogRecord("email", "billing", "x", "y", 2.0, 0.0135)
+                for _ in range(100)]
+        logs += [SequentialLogRecord("ticket", "support", "x", "y", 2.0, 0.0135)
+                 for _ in range(100)]
+        preds = {"a": CountingPredictor(), "b": CountingPredictor()}
+        for p in preds.values():
+            p.inner.observe_many(
+                [("email", "billing"), ("ticket", "support")])
+        rep = offline_replay(("clf", "drafter"), logs, preds)
+        # 2 distinct inputs x 2 predictors, not 200 x 2
+        assert preds["a"].calls == 2 and preds["b"].calls == 2
+        assert set(rep.predictor_match_rates) == {"a", "b"}
+
+    def test_multi_tenant_matches_per_tenant_reports(self):
+        """offline_replay_multi_tenant (one padded XLA grid call for the
+        whole fleet) == offline_replay per tenant slice: same seeded
+        priors, go verdicts and grids to f64 rounding, despite ragged
+        per-tenant log counts."""
+        rng = np.random.default_rng(7)
+        logs = []
+        for t, (n, p_mode) in enumerate([(150, 0.75), (90, 0.4), (40, 0.9)]):
+            rest = (1.0 - p_mode) / 2.0
+            intents = rng.choice(["billing", "support", "sales"],
+                                 p=[p_mode, rest, rest], size=n)
+            for i in intents:
+                logs.append(SequentialLogRecord(
+                    f"in{t}", i, "x", "y",
+                    float(rng.uniform(0.5, 3.0)),
+                    float(rng.uniform(0.005, 0.03)),
+                    tenant=f"t{t}"))
+        rng.shuffle(logs)
+        pred = HistoricalModalPredictor()
+        pred.observe_many([(r.upstream_input, r.upstream_output)
+                           for r in logs])
+        fleet = offline_replay_multi_tenant(
+            ("clf", "drafter"), logs, {"modal": pred})
+        assert set(fleet) == {"t0", "t1", "t2"}
+        for t in fleet:
+            subset = [r for r in logs if r.tenant == t]
+            solo = offline_replay(("clf", "drafter"), subset,
+                                  {"modal": pred})
+            ft = fleet[t]
+            assert ft.seeded_prior.alpha == solo.seeded_prior.alpha
+            assert ft.seeded_prior.beta == solo.seeded_prior.beta
+            assert ft.dep_type == solo.dep_type
+            assert ft.go == solo.go
+            assert ft.default_alpha == solo.default_alpha
+            for a, b in zip(ft.grid, solo.grid):
+                assert a.speculate_fraction == pytest.approx(
+                    b.speculate_fraction, rel=1e-12)
+                assert a.expected_latency_s == pytest.approx(
+                    b.expected_latency_s, rel=1e-12)
+                assert a.expected_cost_usd == pytest.approx(
+                    b.expected_cost_usd, rel=1e-12)
+                assert a.expected_waste_usd == pytest.approx(
+                    b.expected_waste_usd, rel=1e-12, abs=1e-15)
 
 
 class TestShadowMode:
@@ -232,6 +368,60 @@ class TestDrift:
             mon_s.check_credible_bound(edges[0],
                                        BetaPosterior(alpha=0.0, beta=2.0),
                                        0.5, C, L)
+
+    def test_per_tenant_kill_switch_isolation(self):
+        """Satellite: kill-switch state keyed per (tenant, edge) — one
+        tenant's drift trigger must not disable the same edge name for
+        another tenant, nor for the un-tenanted key."""
+        mon = DriftMonitor(credible_consecutive_n=3)
+        edge = ("clf", "drafter")
+        bad = BetaPosterior(alpha=1.0, beta=9.0)    # breaches the floor
+        good = BetaPosterior(alpha=50.0, beta=1.0)  # comfortably above
+        ev = None
+        for _ in range(3):
+            ev = mon.check_credible_bound(edge, bad, 0.5, 0.0135, 0.064,
+                                          tenant="acme") or ev
+            assert mon.check_credible_bound(edge, good, 0.5, 0.0135, 0.064,
+                                            tenant="globex") is None
+        assert ev is not None and ev.tenant == "acme"
+        assert not mon.edge_enabled(edge, tenant="acme")
+        assert mon.state(edge, tenant="acme").needs_shadow_rerun
+        assert mon.edge_enabled(edge, tenant="globex")
+        assert mon.edge_enabled(edge)          # legacy un-tenanted key
+        # alpha offsets stay per-tenant too
+        mon.state(edge, tenant="acme").alpha_offset = -0.2
+        assert mon.effective_alpha(edge, 0.5, tenant="acme") == pytest.approx(0.3)
+        assert mon.effective_alpha(edge, 0.5, tenant="globex") == pytest.approx(0.5)
+
+    def test_credible_bound_batch_tenant_rows(self):
+        """The batch checker accepts the fleet row layout ([(tenant,
+        edge)] via check_credible_bound_fleet) and books breach runs per
+        (tenant, edge) exactly like scalar per-tenant calls."""
+        mon_b = DriftMonitor(credible_consecutive_n=2)
+        mon_s = DriftMonitor(credible_consecutive_n=2)
+        rows = [("t1", ("a", "b")), ("t2", ("a", "b")), ("t1", ("a", "c"))]
+        posts = [BetaPosterior(1.0, 9.0), BetaPosterior(50.0, 1.0),
+                 BetaPosterior(1.0, 9.0)]
+        for _ in range(2):
+            b_evs = mon_b.check_credible_bound_fleet(
+                rows, [p.alpha for p in posts], [p.beta for p in posts],
+                0.5, 0.0135, 0.064)
+            s_evs = [
+                mon_s.check_credible_bound(e, p, 0.5, 0.0135, 0.064,
+                                           tenant=t)
+                for (t, e), p in zip(rows, posts)
+            ]
+            for be, se in zip(b_evs, s_evs):
+                assert (be is None) == (se is None)
+                if be is not None:
+                    assert (be.kind, be.edge, be.tenant) == (
+                        se.kind, se.edge, se.tenant)
+        assert mon_b._credible_breach_run == mon_s._credible_breach_run
+        for t, e in rows:
+            assert mon_b.edge_enabled(e, tenant=t) == \
+                mon_s.edge_enabled(e, tenant=t)
+        assert not mon_b.edge_enabled(("a", "b"), tenant="t1")
+        assert mon_b.edge_enabled(("a", "b"), tenant="t2")
 
     def test_cost_slo_zeroes_alpha_globally(self):
         mon = DriftMonitor(monthly_budget_usd=100.0)

@@ -101,6 +101,45 @@ def test_elastic_reshard_dp1_to_dp2():
     assert ok == "True" and int(shards) == 8 and int(step) == 7
 
 
+def test_multi_tenant_fleet_sharded_matches_unsharded():
+    """The multi-tenant replay engine shard_map'd over 8 forced host
+    devices (one tenant per device) returns the same report as the
+    unsharded vmap — and the posterior carry really is partitioned
+    8-ways (so repeated calibration rounds donate per-device buffers)."""
+    out = run_subprocess("""
+        import dataclasses
+        import sys
+        from pathlib import Path
+        sys.path.insert(0, str(Path({src!r}).parent))
+        import numpy as np
+        from benchmarks.workflow_sim import DEFAULT_ALPHAS, LAMBDA_USD_PER_S, _mt_stack
+        from repro.core.fleet import multi_tenant_replay
+        from repro.launch.mesh import make_fleet_mesh
+        stack = _mt_stack(tenants=8, episodes=40)
+        alphas = np.asarray(DEFAULT_ALPHAS)
+        base = multi_tenant_replay(stack, alphas, LAMBDA_USD_PER_S,
+                                   donate=False)
+        mesh = make_fleet_mesh()
+        sharded = multi_tenant_replay(stack, alphas, LAMBDA_USD_PER_S,
+                                      mesh=mesh)
+        ok = True
+        for f in dataclasses.fields(base):
+            a, b = getattr(base, f.name), getattr(sharded, f.name)
+            if isinstance(a, np.ndarray):
+                ok = ok and bool(np.array_equal(a, b))
+        ok = ok and bool(np.array_equal(np.asarray(base.post_final),
+                                        np.asarray(sharded.post_final)))
+        shards = len(sharded.post_final.sharding.device_set)
+        # chained round: donate the sharded carry back in
+        r2 = multi_tenant_replay(stack, alphas, LAMBDA_USD_PER_S, mesh=mesh,
+                                 post0=sharded.post_final, donate=True)
+        chained = int(np.asarray(r2.post_final).shape[0])
+        print("OK", ok, shards, chained)
+    """.format(src=SRC))
+    _, ok, shards, chained = out.split()
+    assert ok == "True" and int(shards) == 8 and int(chained) == 8
+
+
 def test_gpipe_on_pod_axis_with_dp():
     """PP on one axis composed with DP on the other (2 stages x 4 dp)."""
     out = run_subprocess("""
