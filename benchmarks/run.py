@@ -31,12 +31,16 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 _FLEET_KEYS = {
     "benchmark", "alphas", "episodes", "grid_points", "scalar_total_s",
     "fleet_total_s", "speedup", "parity", "pareto_fleet",
-    "credible_bound", "multi_tenant",
+    "credible_bound", "multi_tenant", "episode_sharded",
 }
 _CREDIBLE_KEYS = {"benchmark", "gamma", "speedup", "parity", "pareto_fleet"}
 _MT_KEYS = {
     "benchmark", "tenants", "grid_points", "episodes", "one_call_s",
     "per_tenant_calls_s", "speedup", "parity", "scaling",
+}
+_ES_KEYS = {
+    "benchmark", "episodes", "segments", "grid_points", "unsharded_s",
+    "sharded_s", "speedup", "parity", "scaling",
 }
 _ROWS_KEYS = {"module", "rows"}
 
@@ -55,6 +59,16 @@ def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
     for row in rec["multi_tenant"]["scaling"]:
         _require(row, {"devices", "shards", "wall_s"},
                  f"{what}.multi_tenant.scaling")
+    es = rec["episode_sharded"]
+    _require(es, _ES_KEYS, f"{what}.episode_sharded")
+    _require(es["parity"],
+             {"bitwise_f64_vs_fleet_replay",
+              "grid_reroute_fraction_bitwise",
+              "grid_reroute_max_rel_error"},
+             f"{what}.episode_sharded.parity")
+    for row in es["scaling"]:
+        _require(row, {"devices", "shards", "wall_s"},
+                 f"{what}.episode_sharded.scaling")
 
 
 def validate_bench_files() -> list[str]:

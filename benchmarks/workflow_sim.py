@@ -34,6 +34,7 @@ from repro.core import (
     Operation,
     PlannerParams,
     Workflow,
+    episode_sharded_replay,
     execute,
     fleet_replay,
     lower_workflow,
@@ -129,12 +130,12 @@ def sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
     return results
 
 
-def fleet_sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
-                seed: int = SEED, *, use_lower_bound: bool = False,
-                gamma: float = 0.1) -> dict:
-    """The same sweep through the vectorized fleet replay engine: one
-    XLA call for all episodes x alphas.  ``use_lower_bound=True`` gates
-    on the jax-native betaincinv credible bound inside that same call."""
+def _autoreply_fleet(episodes: int, seed: int = SEED, *,
+                     use_lower_bound: bool = False, gamma: float = 0.1):
+    """The AutoReply workflow lowered for the fleet engine plus its
+    synthetic episode log: returns (lowered, success, drafter_index).
+    Shared by the fleet sweep, the episode-sharded record and the
+    multi-device tests."""
     draws = _draws(episodes, seed)
     wf = build_workflow("billing")
     edge_key = ("classifier", "drafter")
@@ -150,6 +151,17 @@ def fleet_sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
     vi = lowered.names.index("drafter")
     success = np.zeros((episodes, lowered.n_ops), bool)
     success[:, vi] = draws == 0        # modal prediction is "billing"
+    return lowered, success, vi
+
+
+def fleet_sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
+                seed: int = SEED, *, use_lower_bound: bool = False,
+                gamma: float = 0.1) -> dict:
+    """The same sweep through the vectorized fleet replay engine: one
+    XLA call for all episodes x alphas.  ``use_lower_bound=True`` gates
+    on the jax-native betaincinv credible bound inside that same call."""
+    lowered, success, vi = _autoreply_fleet(
+        episodes, seed, use_lower_bound=use_lower_bound, gamma=gamma)
     report = fleet_replay(lowered, success, np.asarray(alphas),
                           LAMBDA_USD_PER_S)
     results = {}
@@ -334,9 +346,197 @@ def multi_tenant_record(tenants: int = 8, alphas=DEFAULT_ALPHAS,
     return record
 
 
+def _episode_sharded_shards(lowered, success, alphas, mesh,
+                            n_segments) -> int:
+    """Count the devices the episode-sharded stats pass really
+    partitioned over.  The public report is numpy, so the check reaches
+    one level down: rebuild the executable's inputs and read the output
+    sharding off the cached compiled call."""
+    import jax.numpy as jnp
+
+    from repro.core import fleet
+    from repro.core.batch_decision import _f
+
+    alphas = np.atleast_1d(np.asarray(alphas, float))
+    lams = np.full_like(alphas, LAMBDA_USD_PER_S)
+    chunks = fleet.chunk_episodes(lowered, success, n_segments)
+    static = fleet._pack_static(lowered, chunks.has_refiner)
+    post0 = jnp.broadcast_to(
+        jnp.stack([_f(lowered.a0), _f(lowered.b0)], -1)[None],
+        (alphas.shape[0], lowered.n_ops, 2))
+    args = (_f(lowered.discount), _f(alphas), _f(lams), _f(lowered.gamma),
+            jnp.asarray(chunks.success), jnp.asarray(chunks.pred_ok),
+            _f(chunks.chunk_P), jnp.asarray(chunks.ep_mask))
+    starts, _ = fleet._boundary_scan(static, post0, *args, throttle_every=1,
+                                     K=1, use_lower_bound=False)
+    fn = fleet._seg_executable(mesh, "fleet", 1, 1, False)
+    _, ys = fn(static, starts, *args)
+    return len(ys["makespan_s"].sharding.device_set)
+
+
+_ES_SCALING_BODY = """
+    import os, sys, time, json
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+    sys.path[:0] = {paths!r}
+    import jax
+    import numpy as np
+    from benchmarks.workflow_sim import (
+        DEFAULT_ALPHAS, LAMBDA_USD_PER_S, _autoreply_fleet,
+        _episode_sharded_shards)
+    from repro.core import episode_sharded_replay
+    from repro.launch.mesh import make_fleet_mesh
+    lowered, success, _ = _autoreply_fleet(episodes={episodes})
+    alphas = np.asarray(DEFAULT_ALPHAS)
+    mesh = make_fleet_mesh()
+    kw = dict(n_segments={segments}, mesh=mesh)
+    episode_sharded_replay(lowered, success, alphas, LAMBDA_USD_PER_S, **kw)
+    t0 = time.perf_counter()
+    episode_sharded_replay(lowered, success, alphas, LAMBDA_USD_PER_S, **kw)
+    wall = time.perf_counter() - t0
+    shards = _episode_sharded_shards(lowered, success, alphas, mesh,
+                                     {segments})
+    print(json.dumps({{"devices": len(jax.devices()), "shards": shards,
+                       "wall_s": wall}}))
+    sys.stdout.flush()
+    os._exit(0)  # skip XLA teardown: it can segfault under forced device
+                 # counts with GB-scale live buffers, after the row above
+                 # has already been emitted
+"""
+
+
+def episode_sharded_scaling(devices=(1, 2, 4, 8), episodes: int = 1_000_000,
+                            segments: int = 8) -> list[dict]:
+    """Time the segment-sharded single-tenant replay under 1/2/4/8 forced
+    host devices (fresh subprocess each, as in
+    :func:`multi_tenant_scaling`).  Same 2-core caveat: wall-clock past
+    the physical core count is overhead-bound; the ``shards`` column is
+    what verifies the episode axis really was partitioned."""
+    root = str(pathlib.Path(__file__).resolve().parents[1])
+    paths = [root, str(pathlib.Path(root) / "src")]
+    rows = []
+    for d in devices:
+        code = textwrap.dedent(_ES_SCALING_BODY.format(
+            devices=d, paths=paths, episodes=episodes, segments=segments))
+        proc = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=1200, env={**os.environ, "PYTHONPATH": paths[1]},
+        )
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"episode-sharded scaling subprocess ({d} devices) "
+                f"failed:\n{proc.stderr[-2000:]}")
+        row = json.loads(proc.stdout.strip().splitlines()[-1])
+        row["host_cpus"] = os.cpu_count()
+        rows.append(row)
+    return rows
+
+
+def episode_sharded_record(episodes: int = 1_000_000,
+                           alphas=DEFAULT_ALPHAS, seed: int = SEED,
+                           segments: int = 8,
+                           scaling_devices=(1, 2, 4, 8)) -> dict:
+    """The BENCH_fleet.json ``episode_sharded`` section: one tenant's
+    E-episode AutoReply log replayed as C independent scan segments with
+    the posterior-handoff boundary pass.  Bitwise-f64 parity against the
+    unsharded ``fleet_replay`` is asserted at the full episode count
+    *before* any timing is reported, as is the decision-fraction parity
+    of the log-axis-sharded §12.1 counterfactual grid the calibration
+    reroute rides on."""
+    from jax.experimental import enable_x64
+
+    from repro.core.batch_decision import (
+        counterfactual_grid,
+        counterfactual_grid_sharded,
+    )
+
+    alphas_arr = np.asarray(alphas)
+
+    # --- parity first (f64, in-process): every field of the sharded
+    # report must equal the sequential scan at the full episode count.
+    with enable_x64():
+        lowered, success, _ = _autoreply_fleet(episodes, seed)
+        base = fleet_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S)
+        sharded = episode_sharded_replay(
+            lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+            n_segments=segments)
+        for f in dataclasses.fields(base):
+            if not np.array_equal(getattr(base, f.name),
+                                  getattr(sharded, f.name)):
+                raise AssertionError(
+                    f"episode-sharded parity broke: field {f.name}")
+        del base, sharded
+
+    # --- grid-reroute parity: the log-axis-sharded counterfactual grid
+    # (what offline_replay uses past its shard_threshold) vs the
+    # unsharded grid — decision fractions bitwise, float sums to reorder
+    # tolerance.
+    rng = np.random.default_rng(seed)
+    n_rows = min(episodes, 4096)
+    glat = rng.uniform(0.2, 3.0, n_rows)
+    gcost = rng.uniform(0.001, 0.03, n_rows)
+    g_alphas = np.array([0.0, 0.25, 0.5, 0.75, 1.0])
+    g_lams = np.array([0.005, 0.01, 0.05, 0.1])
+    with enable_x64():
+        g0 = counterfactual_grid(0.62, glat, gcost, g_alphas, g_lams,
+                                 rho=0.41)
+        g1 = counterfactual_grid_sharded(0.62, glat, gcost, g_alphas,
+                                         g_lams, rho=0.41,
+                                         segments=max(2, segments))
+    if not np.array_equal(g0["speculate_fraction"],
+                          g1["speculate_fraction"]):
+        raise AssertionError("sharded grid decision fractions diverged")
+    grid_rel = max(
+        float(np.max(np.abs(g0[k] - g1[k])
+                     / np.maximum(np.abs(g0[k]), 1e-300)))
+        for k in ("expected_latency_s", "expected_cost_usd",
+                  "expected_waste_usd"))
+    if grid_rel > 1e-12:
+        raise AssertionError(
+            f"sharded grid drifted past reorder tolerance: {grid_rel:.2e}")
+
+    # --- then speed (fleet default dtype).  Even on one in-process
+    # device the sharded path wins (~2x at 1M episodes): vmapping the
+    # stats pass over C segments vectorizes the per-episode body across
+    # the segment batch dim, cutting the sequential scan depth C-fold —
+    # which more than repays the extra boundary pass.  The multi-device
+    # story lives in the scaling rows (on this 2-core container in the
+    # shards column rather than the wall-clock; EXPERIMENTS.md §Perf).
+    lowered, success, _ = _autoreply_fleet(episodes, seed)
+    fleet_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S)
+    t0 = time.perf_counter()
+    fleet_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S)
+    unsharded_s = time.perf_counter() - t0
+
+    episode_sharded_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+                           n_segments=segments)
+    t0 = time.perf_counter()
+    episode_sharded_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+                           n_segments=segments)
+    sharded_s = time.perf_counter() - t0
+
+    return {
+        "benchmark": "autoreply_episode_sharded_replay",
+        "episodes": episodes,
+        "segments": segments,
+        "grid_points": len(alphas_arr),
+        "unsharded_s": unsharded_s,
+        "sharded_s": sharded_s,
+        "speedup": unsharded_s / sharded_s,
+        "parity": {
+            "bitwise_f64_vs_fleet_replay": True,
+            "grid_reroute_fraction_bitwise": True,
+            "grid_reroute_max_rel_error": grid_rel,
+        },
+        "scaling": episode_sharded_scaling(
+            scaling_devices, episodes, segments) if scaling_devices else [],
+    }
+
+
 def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
                   seed: int = SEED, *, write: bool = True,
-                  tenants: int = 8, scaling_devices=(1, 2, 4, 8)) -> dict:
+                  tenants: int = 8, scaling_devices=(1, 2, 4, 8),
+                  episode_sharded_episodes: int = 1_000_000,
+                  episode_sharded_segments: int = 8) -> dict:
     """Measure scalar vs fleet wall time on the identical sweep — both the
     posterior-mean gate and the §7.5 credible-bound gate — plus the
     multi-tenant sharded-engine record, and persist everything to
@@ -417,6 +617,11 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
             tenants=tenants, alphas=alphas, episodes=episodes, seed=seed,
             scaling_devices=scaling_devices,
         ),
+        "episode_sharded": episode_sharded_record(
+            episodes=episode_sharded_episodes, alphas=alphas, seed=seed,
+            segments=episode_sharded_segments,
+            scaling_devices=scaling_devices,
+        ),
     }
     if write:
         BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
@@ -433,6 +638,7 @@ def smoke() -> dict:
     return fleet_speedup(
         alphas=(0.0, 0.5, 0.9, 1.0), episodes=24,
         write=False, tenants=3, scaling_devices=(),
+        episode_sharded_episodes=48, episode_sharded_segments=3,
     )
 
 
@@ -475,5 +681,17 @@ def benchmarks() -> list[tuple[str, float, str]]:
         f"{mt['tenants']}T x {mt['grid_points']}G x {mt['episodes']}E in one "
         f"call; {mt['speedup']:.1f}x vs {mt['tenants']} fleet_replay calls; "
         f"bitwise-f64 per-tenant parity; scaling {scaling or 'n/a'}",
+    ))
+    es = record["episode_sharded"]
+    n_es = es["episodes"] * es["grid_points"]
+    es_scaling = " ".join(
+        f"{r['devices']}dev={r['wall_s']:.1f}s" for r in es["scaling"]
+    )
+    rows.append((
+        "workflow_episode_sharded_replay", es["sharded_s"] / n_es * 1e6,
+        f"{es['episodes']}E x {es['grid_points']}G as {es['segments']} "
+        f"segments; bitwise-f64 parity vs fleet_replay pre-timing; "
+        f"{es['speedup']:.2f}x vs unsharded scan on one device (segment-"
+        f"vmap cuts scan depth); scaling {es_scaling or 'n/a'}",
     ))
     return rows

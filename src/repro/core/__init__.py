@@ -35,10 +35,14 @@ from .workflow import Edge, Operation, Workflow
 from .planner import Plan, PlannerParams, plan_workflow
 from .executor import ExecutionReport, ExecutorConfig, execute
 from .fleet import (
+    EpisodeChunks,
     FleetLowered,
     FleetReport,
     FleetStack,
     MultiTenantReport,
+    chunk_episodes,
+    compose_segment_posteriors,
+    episode_sharded_replay,
     fleet_replay,
     lower_workflow,
     multi_tenant_replay,
@@ -75,6 +79,8 @@ __all__ = [
     "FleetLowered", "FleetReport", "lower_workflow", "fleet_replay",
     "FleetStack", "MultiTenantReport", "stack_tenants",
     "multi_tenant_replay",
+    "EpisodeChunks", "chunk_episodes", "compose_segment_posteriors",
+    "episode_sharded_replay",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

@@ -24,6 +24,7 @@ __all__ = [
     "batch_evaluate",
     "batch_lower_bound",
     "counterfactual_grid",
+    "counterfactual_grid_sharded",
     "counterfactual_grid_tenants",
     "batch_posterior_update",
     "batch_implied_lambda",
@@ -127,6 +128,137 @@ def counterfactual_grid(P, latencies, costs, alphas, lambdas, rho=0.5,
         "expected_latency_s": np.asarray(exp_lat),
         "expected_cost_usd": np.asarray(exp_cost),
         "expected_waste_usd": np.asarray(waste),
+    }
+
+
+@functools.lru_cache(maxsize=None)
+def _grid_sharded_exec(mesh, axis_name):
+    """Compile (and cache per mesh) the log-axis-sharded §12.1 grid: the
+    N log rows are split into C contiguous segments (masked tail padding,
+    same scheme as ``fleet.chunk_episodes``), each segment reduces to raw
+    per-(alpha, lambda) partial sums, and the segment axis is optionally
+    ``shard_map``'d over the 1-D fleet mesh — each device sees only its
+    rows, with zero cross-device traffic until the final O(C·A·L)
+    combine."""
+
+    def run(P, P_gate, lat, cost, mask, alphas, lams, rho):
+        # lat / cost / mask / rho: (C, Nc) segments; returns per-segment
+        # raw sums (count, lat_sum, waste_sum, cost_sum) — the combine
+        # happens outside so decision *counts* stay exact integers.
+        def one(lat_c, cost_c, m_c, rho_c):
+            m = m_c.astype(lat_c.dtype)
+            L_value = lat_c[None, None, :] * lams[None, :, None]
+            EV = P_gate * L_value - (1.0 - P_gate) * cost_c[None, None, :]
+            thr = (1.0 - alphas[:, None, None]) * cost_c[None, None, :]
+            spec = (EV >= thr) & m_c[None, None, :]
+            count = spec.astype(lat_c.dtype).sum(-1)
+            lat_sum = (
+                jnp.where(spec, lat_c[None, None, :] * (1.0 - P),
+                          lat_c[None, None, :]) * m[None, None, :]
+            ).sum(-1)
+            waste = (
+                spec * (1.0 - P) * cost_c[None, None, :] * rho_c
+            ).sum(-1)
+            return count, lat_sum, waste, (cost_c * m).sum()
+
+        return jax.vmap(one)(lat, cost, mask, rho)
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        c = PartitionSpec(axis_name)
+        r = PartitionSpec()
+        run = shard_map(
+            run, mesh=mesh,
+            in_specs=(r, r, c, c, c, r, r, c),
+            out_specs=c,
+            check_rep=False,
+        )
+    return jax.jit(run)
+
+
+def counterfactual_grid_sharded(P, latencies, costs, alphas, lambdas,
+                                rho=0.5, *, P_lower=None, segments=None,
+                                mesh=None, axis_name="fleet"):
+    """§12.1 counterfactual EV grid with the *log-row axis sharded*.
+
+    Same contract as :func:`counterfactual_grid` (including scalar *or*
+    per-row ``rho``), for logs too large to want on one device: the N
+    rows split into ``segments`` contiguous chunks (default: the mesh
+    extent, or the visible device count), each chunk reduces
+    independently, and raw partial sums combine at the end.  The segment
+    length is bucketed to a power of two (masked zero rows are exact
+    no-ops), so ragged large-log sweeps reuse one executable per
+    (segments, bucket).  A mesh without the fleet axis, or one whose
+    extent does not divide ``segments``, falls back to the unsharded
+    executable (``sharding.rules.fleet_axis_spec``).
+
+    ``speculate_fraction`` is **bitwise-identical** to the unsharded
+    grid (decision counts are exact integers; one final division); the
+    latency / cost / waste expectations differ only by float summation
+    order (<= ~1e-15 relative, pinned by the --smoke parity gate).
+    ``calibration.offline_replay`` reroutes here when the log count
+    exceeds its ``shard_threshold``.
+    """
+    P = _f(P)
+    P_gate = P if P_lower is None else _f(P_lower)
+    lat = np.atleast_1d(np.asarray(latencies, float))
+    cost = np.atleast_1d(np.asarray(costs, float))
+    n = lat.shape[0]
+    if n == 0:
+        raise ValueError("counterfactual_grid_sharded requires >= 1 log row")
+    if cost.shape != lat.shape:
+        raise ValueError("latencies and costs must have the same length")
+    # per-row rho (same contract as counterfactual_grid) segments along
+    # with the rows; a scalar broadcasts to every row first
+    rho_rows = np.broadcast_to(np.asarray(rho, float), lat.shape).copy()
+    if segments is None:
+        if mesh is not None and axis_name in mesh.shape:
+            segments = mesh.shape[axis_name]
+        else:
+            segments = max(1, len(jax.devices()))
+    C = int(segments)
+    if C < 1:
+        raise ValueError(f"segments must be >= 1, got {segments}")
+    if mesh is not None:
+        from ..sharding.rules import fleet_axis_spec
+
+        if fleet_axis_spec(mesh, C, axis=axis_name) is None:
+            mesh = None  # missing axis / indivisible: run unsharded
+    # bucket the segment length to a power of two (masked zero rows are
+    # exact no-ops in every sum) so a sweep over many ragged large logs
+    # compiles one executable per (C, bucket) instead of one per
+    # distinct log count — the sharded twin of offline_replay's
+    # power-of-two bucketing on the unsharded path
+    Nc_raw = -(-n // C)
+    Nc = max(16, 1 << (Nc_raw - 1).bit_length())
+    pad = C * Nc - n
+    mask = np.ones(n, bool)
+
+    def seg(x, fill):
+        if pad:
+            x = np.concatenate([x, np.full(pad, fill, x.dtype)])
+        return x.reshape(C, Nc)
+
+    fn = _grid_sharded_exec(mesh, axis_name)
+    count, lat_sum, waste_sum, cost_sum = fn(
+        P, P_gate, _f(seg(lat, 0.0)), _f(seg(cost, 0.0)),
+        jnp.asarray(seg(mask, False)), _f(alphas), _f(lambdas),
+        _f(seg(rho_rows, 0.0)),
+    )
+    count = np.asarray(count).sum(0)
+    lat_sum = np.asarray(lat_sum).sum(0)
+    waste = np.asarray(waste_sum).sum(0)
+    cost_total = np.asarray(cost_sum).sum(0)
+    # XLA lowers .mean() as sum * (1/n); mirror that here so the exact
+    # integer decision counts divide to bitwise-identical fractions
+    inv_n = np.asarray(_f(1.0)) / n
+    return {
+        "speculate_fraction": count * inv_n,
+        "expected_latency_s": lat_sum * inv_n,
+        "expected_cost_usd": cost_total + waste,
+        "expected_waste_usd": waste,
     }
 
 

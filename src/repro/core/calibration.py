@@ -185,6 +185,8 @@ def offline_replay(
     lambdas: Sequence[float] = (0.005, 0.01, 0.05, 0.1),
     rho: float = 0.5,
     go_min_speculate_fraction: float = 0.5,
+    shard_threshold: int = 1 << 17,
+    mesh=None,
 ) -> OfflineReplayReport:
     """§12.1: everything bootstrappable from sequential logs before any
     speculation is enabled.
@@ -194,12 +196,46 @@ def offline_replay(
     whole (alpha, lambda) cross product) under float64, matching the
     historical per-cell Python loop to f64 rounding; predictor match
     rates memoize ``pred.predict`` per distinct upstream input.
+
+    Million-row logs — the scale the episode-sharded fleet engine
+    targets — reroute through the *log-axis-sharded* grid when
+    ``len(logs)`` exceeds ``shard_threshold``:
+    ``batch_decision.counterfactual_grid_sharded`` splits the rows into
+    contiguous segments (``shard_map``'d over ``mesh`` when given, e.g.
+    ``repro.launch.mesh.make_fleet_mesh()``), so one tenant's replay no
+    longer funnels every row through a single device.  Decision
+    fractions stay bitwise-identical to the unsharded
+    ``counterfactual_grid`` (exact integer counts, one division);
+    latency / waste expectations move only by float summation order
+    (<= ~1e-15 relative).
     """
     if not logs:
         raise ValueError("offline replay requires at least one log record")
     tier_policy = tier_policy or TierPolicy()
     ek, dep_type, match_rates, seeded = _seed_from_logs(
         logs, predictors, tier_policy)
+
+    n = len(logs)
+    if n > shard_threshold:
+        # episode-scale logs: segment the row axis across the fleet mesh
+        from .batch_decision import counterfactual_grid_sharded
+
+        lat = np.array([r.latency_s for r in logs])
+        cost = np.array([r.cost_usd for r in logs])
+        with enable_x64():
+            g = counterfactual_grid_sharded(
+                seeded.mean, lat, cost,
+                np.asarray(alphas, float), np.asarray(lambdas, float),
+                rho=rho, mesh=mesh,
+            )
+        grid = _grid_points(g, None, alphas, lambdas)
+        go, default_alpha = _go_and_default(grid, go_min_speculate_fraction)
+        return OfflineReplayReport(
+            edge=edge, k_raw=ek.k_raw, p_mode=ek.p_mode, k_eff=ek.k_eff,
+            dep_type=dep_type, seeded_prior=seeded,
+            predictor_match_rates=match_rates, grid=grid, go=go,
+            default_alpha=default_alpha,
+        )
 
     # counterfactual EV grid (§12.1): replay D4 at each (alpha, lambda).
     # The log axis is padded to a power-of-two bucket under the masked
@@ -209,7 +245,6 @@ def offline_replay(
     # per bucket instead of one per distinct log count.
     from .batch_decision import counterfactual_grid_tenants
 
-    n = len(logs)
     n_pad = max(16, 1 << (n - 1).bit_length())
     lat = np.zeros(n_pad)
     cost = np.zeros(n_pad)
@@ -379,7 +414,16 @@ def shadow_mode(
     stability_tol: float = 0.05,
 ) -> ShadowReport:
     """§12.2: speculative decisions served and discarded; posterior, tier-2
-    threshold, token estimators, and rho tuned with zero user exposure."""
+    threshold, token estimators, and rho tuned with zero user exposure.
+
+    Zero exposure includes the *live* posterior: the caller's object is
+    never mutated — shadow trials accumulate on an internal copy
+    (returned as ``ShadowReport.posterior``), and the live belief only
+    moves when the operator promotes the shadow result at stage
+    boundaries (§12.6).  Previously the passed-in posterior was updated
+    in place, which let a shadow run bleed into production gating.
+    """
+    posterior = posterior.copy()
     means: list[float] = []
     policy = TierPolicy()
     for i_actual, i_hat in trials:

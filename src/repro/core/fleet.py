@@ -58,12 +58,16 @@ from .planner import PlannerParams
 from .workflow import Workflow
 
 __all__ = [
+    "EpisodeChunks",
     "FleetLowered",
     "FleetReport",
     "FleetStack",
     "MultiTenantReport",
     "lower_workflow",
     "fleet_replay",
+    "chunk_episodes",
+    "compose_segment_posteriors",
+    "episode_sharded_replay",
     "stack_tenants",
     "multi_tenant_replay",
 ]
@@ -273,6 +277,58 @@ class FleetReport:
 
 
 # -------------------------------------------------------------- fleet sweep
+def _normalize_grid(alphas, lambdas):
+    """Paired (alpha, lambda) grid points; a scalar lambda broadcasts."""
+    alphas = np.atleast_1d(np.asarray(alphas, float))
+    lambdas = np.atleast_1d(np.asarray(lambdas, float))
+    if lambdas.shape[0] == 1 and alphas.shape[0] > 1:
+        lambdas = np.broadcast_to(lambdas, alphas.shape).copy()
+    if alphas.shape != lambdas.shape:
+        raise ValueError("alphas and lambdas must be paired (same length)")
+    return alphas, lambdas
+
+
+def _normalize_episodes(lowered, success, pred_ok, chunk_P, ep_mask):
+    """Defaulted / validated episode arrays shared by ``fleet_replay``,
+    :func:`chunk_episodes` and :func:`episode_sharded_replay`: ``pred_ok``
+    defaults to the lowering's predictor mask, ``chunk_P`` to a single
+    unit chunk with streaming refiners disabled, ``ep_mask`` to all-real
+    episodes."""
+    success = np.asarray(success, bool)
+    if success.ndim != 2:
+        raise ValueError("success must have shape (E, V)")
+    E, V = success.shape
+    if V != lowered.n_ops:
+        raise ValueError(f"success has {V} ops, workflow has {lowered.n_ops}")
+    if pred_ok is None:
+        pred_ok = np.broadcast_to(lowered.has_pred, (E, V)).copy()
+    if chunk_P is None:
+        K = 1
+        chunk_P = np.ones((E, V, 1))
+        has_refiner = np.zeros(V, bool)
+    else:
+        chunk_P = np.asarray(chunk_P, float)
+        K = chunk_P.shape[-1]
+        has_refiner = lowered.has_refiner
+    if ep_mask is None:
+        ep_mask = np.ones(E, bool)
+    else:
+        ep_mask = np.asarray(ep_mask, bool)
+        if ep_mask.shape != (E,):
+            raise ValueError(f"ep_mask must have shape ({E},)")
+    return (success, np.asarray(pred_ok, bool), chunk_P, ep_mask,
+            has_refiner, K)
+
+
+def _normalize_replay_args(lowered, success, alphas, lambdas, pred_ok,
+                           chunk_P, ep_mask):
+    alphas, lambdas = _normalize_grid(alphas, lambdas)
+    (success, pred_ok, chunk_P, ep_mask, has_refiner,
+     K) = _normalize_episodes(lowered, success, pred_ok, chunk_P, ep_mask)
+    return (alphas, lambdas, success, pred_ok, chunk_P, ep_mask,
+            has_refiner, K)
+
+
 def fleet_replay(
     lowered: FleetLowered,
     success: np.ndarray,
@@ -311,33 +367,9 @@ def fleet_replay(
     the conservative mode tracks the evolving counts exactly like the
     scalar executor's ``post.lower_bound(gamma)``.
     """
-    success = np.asarray(success, bool)
-    E, V = success.shape
-    if V != lowered.n_ops:
-        raise ValueError(f"success has {V} ops, workflow has {lowered.n_ops}")
-    alphas = np.atleast_1d(np.asarray(alphas, float))
-    lambdas = np.atleast_1d(np.asarray(lambdas, float))
-    if lambdas.shape[0] == 1 and alphas.shape[0] > 1:
-        lambdas = np.broadcast_to(lambdas, alphas.shape).copy()
-    if alphas.shape != lambdas.shape:
-        raise ValueError("alphas and lambdas must be paired (same length)")
-    if pred_ok is None:
-        pred_ok = np.broadcast_to(lowered.has_pred, (E, V)).copy()
-    if chunk_P is None:
-        K = 1
-        chunk_P = np.ones((E, V, 1))
-        has_refiner = np.zeros(V, bool)
-    else:
-        chunk_P = np.asarray(chunk_P, float)
-        K = chunk_P.shape[-1]
-        has_refiner = lowered.has_refiner
-    if ep_mask is None:
-        ep_mask = np.ones(E, bool)
-    else:
-        ep_mask = np.asarray(ep_mask, bool)
-        if ep_mask.shape != (E,):
-            raise ValueError(f"ep_mask must have shape ({E},)")
-
+    (alphas, lambdas, success, pred_ok, chunk_P, ep_mask, has_refiner,
+     K) = _normalize_replay_args(
+        lowered, success, alphas, lambdas, pred_ok, chunk_P, ep_mask)
     ys = _fleet_scan(
         _pack_static(lowered, has_refiner),
         _f(lowered.a0), _f(lowered.b0), _f(lowered.discount),
@@ -832,7 +864,18 @@ class MultiTenantReport:
         """Flatten the final per-(tenant, edge) posteriors at one grid
         point into the row layout
         ``DriftMonitor.check_credible_bound_batch`` consumes:
-        ``([(tenant, edge), ...], post_alpha, post_beta)``."""
+        ``([(tenant, edge), ...], post_alpha, post_beta)``.
+
+        ``grid_index`` must address one of the replay's G grid points;
+        out-of-range (or negative) indices raise instead of silently
+        wrapping — a wrapped index would hand the drift monitor a
+        *different operating point's* posteriors, which is exactly the
+        kind of row mixup the kill-switch exists to prevent."""
+        G = self.post_final.shape[1]
+        if not (0 <= int(grid_index) < G):
+            raise IndexError(
+                f"grid_index {grid_index} out of range: this report has "
+                f"{G} grid point(s) (valid: 0..{G - 1})")
         post = np.asarray(self.post_final)
         tenant_edges, a, b = [], [], []
         for t, keys in enumerate(self.edge_keys):
@@ -958,3 +1001,307 @@ def multi_tenant_replay(
         ep_mask=stack.ep_mask, edge_keys=stack.edge_keys(),
         post_final=post_final, **np_out,
     )
+
+
+# -------------------------------------------------------- episode sharding
+@dataclasses.dataclass(frozen=True)
+class EpisodeChunks:
+    """One tenant's episode log split into C contiguous segments.
+
+    Segments share a common padded length S = ceil(E / C); the ragged
+    tail is padded with masked identity scan steps (``ep_mask`` False),
+    the same move :func:`stack_tenants` uses for ragged per-tenant logs —
+    so every segment is a fixed-shape scan and the segment axis can be
+    partitioned across devices.
+    """
+
+    n_episodes: int            # E, pre-padding
+    success: np.ndarray        # (C, S, V) bool
+    pred_ok: np.ndarray        # (C, S, V) bool
+    chunk_P: np.ndarray        # (C, S, V, K)
+    ep_mask: np.ndarray        # (C, S) bool; False rows are padding /
+                               # caller-masked identity steps
+    has_refiner: np.ndarray    # (V,) bool (zeroed when no chunk_P given)
+
+    @property
+    def n_segments(self) -> int:
+        return self.success.shape[0]
+
+    @property
+    def seg_len(self) -> int:
+        return self.success.shape[1]
+
+    @property
+    def K(self) -> int:
+        return self.chunk_P.shape[-1]
+
+
+def chunk_episodes(
+    lowered: FleetLowered,
+    success,
+    n_segments: int,
+    *,
+    pred_ok=None,
+    chunk_P=None,
+    ep_mask=None,
+) -> EpisodeChunks:
+    """Split an (E, V) episode log into C contiguous fixed-shape segments.
+
+    Defaults mirror :func:`fleet_replay` (``pred_ok`` from the lowering's
+    predictor mask, streaming disabled without ``chunk_P``).  E = 0 is
+    rejected outright: an empty log would chunk into an all-identity
+    segment whose replay silently reports zero stats — callers with no
+    episodes should not be replaying at all.
+    """
+    (success, pred_ok, chunk_P, ep_mask, has_refiner,
+     _K) = _normalize_episodes(lowered, success, pred_ok, chunk_P, ep_mask)
+    E = success.shape[0]
+    if E == 0:
+        raise ValueError(
+            "chunk_episodes requires at least one episode: an E=0 log "
+            "would emit an all-identity (fully masked) segment that "
+            "replays to zero stats instead of failing loudly")
+    C = int(n_segments)
+    if C < 1:
+        raise ValueError(f"n_segments must be >= 1, got {n_segments}")
+    S = -(-E // C)
+    pad = C * S - E
+
+    def seg(x, fill):
+        if pad:
+            x = np.concatenate(
+                [x, np.full((pad,) + x.shape[1:], fill, x.dtype)])
+        return x.reshape((C, S) + x.shape[1:])
+
+    return EpisodeChunks(
+        n_episodes=E,
+        success=seg(success, False),
+        pred_ok=seg(pred_ok, False),
+        chunk_P=seg(chunk_P, 1.0),
+        ep_mask=seg(ep_mask, False),
+        has_refiner=has_refiner,
+    )
+
+
+def _scan_posterior_only(static, post0, discount, alphas, lambdas, gamma,
+                         success, pred_ok, chunk_P, ep_mask, throttle_every,
+                         K, use_lower_bound):
+    """The episode scan reduced to its carry: the identical per-episode
+    arithmetic as ``_scan_core`` (same ``_episode`` body, same masked
+    identity steps, so the carry evolves bitwise-equally), but no
+    per-episode stats are stacked — jit DCE prunes the unused stat
+    outputs, so a boundary pass over E episodes materializes O(G x V)
+    instead of O(E x G x V)."""
+    episode = functools.partial(
+        _episode, static, discount, (K, throttle_every),
+        use_lower_bound, gamma,
+    )
+
+    def ep_step(post_ab, xs):
+        succ_e, pred_e, chunks_e, mask_e = xs
+        post_new, _ = jax.vmap(
+            episode, in_axes=(0, 0, 0, None, None, None)
+        )(post_ab, alphas, lambdas, succ_e, pred_e, chunks_e)
+        return jnp.where(mask_e, post_new, post_ab), None
+
+    post, _ = jax.lax.scan(
+        ep_step, post0, (success, pred_ok, chunk_P, ep_mask))
+    return post
+
+
+@functools.partial(
+    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
+)
+def _boundary_scan(static, post0, discount, alphas, lambdas, gamma,
+                   success, pred_ok, chunk_P, ep_mask, throttle_every, K,
+                   use_lower_bound):
+    """Posterior-handoff pass: a sequential ``lax.scan`` over the C
+    segments, emitting the exact posterior carry at each segment *start*
+    (plus the final carry).  Exact for every discount — see
+    :func:`episode_sharded_replay` for why the handoff must be
+    sequential when bitwise parity with the unsharded scan is the
+    contract."""
+
+    def seg_step(post_ab, xs):
+        succ_c, pred_c, chunks_c, mask_c = xs
+        post_end = _scan_posterior_only(
+            static, post_ab, discount, alphas, lambdas, gamma,
+            succ_c, pred_c, chunks_c, mask_c, throttle_every, K,
+            use_lower_bound)
+        return post_end, post_ab
+
+    post_final, starts = jax.lax.scan(
+        seg_step, post0, (success, pred_ok, chunk_P, ep_mask))
+    return starts, post_final
+
+
+@functools.lru_cache(maxsize=None)
+def _seg_executable(mesh, axis_name, throttle_every, K, use_lower_bound):
+    """Compile (and cache) the segment-vmapped, optionally shard_map'd
+    stats pass of the episode-sharded replay.  Mirrors ``_mt_executable``
+    with segments in place of tenants: the workflow statics, grid and
+    per-op discounts are replicated; the segment axis (boundary carries +
+    episode arrays) is partitioned."""
+
+    def run(static, starts, discount, alphas, lambdas, gamma,
+            success, pred_ok, chunk_P, ep_mask):
+        def one(p0, s, pk, cp, em):
+            return _scan_core(static, p0, discount, alphas, lambdas, gamma,
+                              s, pk, cp, em, throttle_every, K,
+                              use_lower_bound)
+
+        return jax.vmap(one)(starts, success, pred_ok, chunk_P, ep_mask)
+
+    if mesh is not None:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec
+
+        c = PartitionSpec(axis_name)
+        r = PartitionSpec()
+        run = shard_map(
+            run, mesh=mesh,
+            in_specs=(r, c, r, r, r, r, c, c, c, c),
+            out_specs=c,
+            check_rep=False,
+        )
+    return jax.jit(run)
+
+
+def compose_segment_posteriors(a0, b0, seg_s, seg_f):
+    """Closed-form conjugate composition of segment posteriors
+    (``discount=1`` only).
+
+    Under the undiscounted update the posterior after a segment is
+    ``Beta(a + Δs, b + Δf)`` where (Δs, Δf) are the segment's success /
+    failure *counts* on launched episodes — pure sufficient statistics.
+    Composition is therefore associative, and one
+    ``lax.associative_scan`` over the per-segment (Δs, Δf) rebuilds
+    every segment-boundary posterior from the prior in O(log C) depth.
+
+    This is the analytical cross-check for the sequential handoff pass,
+    not its replacement: (1) the D4 gate reads the carry, so (Δs, Δf)
+    themselves depend on the incoming posterior and must be *collected*
+    along the exact trajectory, and (2) ``prior + Σcounts`` rounds once
+    where the in-scan carry rounds per episode, so the composition
+    matches the handoff to 1 ULP rather than bitwise (exact when the
+    prior is integer-valued).  tests/test_episode_sharding.py pins the
+    agreement.
+
+    Args: ``a0`` / ``b0`` broadcastable to ``seg_s[0]``; ``seg_s`` /
+    ``seg_f`` with a leading segment axis.  Returns the (C, ..., 2)
+    posterior at each segment *start* (prior + exclusive prefix sums).
+    """
+    deltas = jnp.stack([_f(seg_s), _f(seg_f)], axis=-1)
+    prefix = jax.lax.associative_scan(jnp.add, deltas, axis=0)
+    excl = jnp.concatenate(
+        [jnp.zeros_like(prefix[:1]), prefix[:-1]], axis=0)
+    prior = jnp.stack(
+        [jnp.broadcast_to(_f(a0), deltas.shape[1:-1]),
+         jnp.broadcast_to(_f(b0), deltas.shape[1:-1])], axis=-1)
+    return np.asarray(prior[None] + excl)
+
+
+def episode_sharded_replay(
+    lowered: FleetLowered,
+    success,
+    alphas,
+    lambdas,
+    *,
+    n_segments: Optional[int] = None,
+    pred_ok=None,
+    chunk_P=None,
+    throttle_every: int = 1,
+    ep_mask=None,
+    mesh=None,
+    axis_name: str = "fleet",
+    return_boundaries: bool = False,
+) -> "FleetReport | tuple[FleetReport, np.ndarray]":
+    """Replay a single tenant's E-episode log as C independent scan
+    segments — the fleet engine's episode-axis analogue of
+    :func:`multi_tenant_replay`'s tenant axis, for million-episode §12.1
+    logs that one sequential scan would serialize.
+
+    Two passes:
+
+    1. **Posterior handoff** (:func:`_boundary_scan`): a sequential scan
+       over segments carrying only the (G, V, 2) posterior, emitting the
+       exact carry at every segment boundary.  O(E) sequential work but
+       O(C·G·V) memory — none of the ~17 per-episode stat arrays are
+       materialized, which is what dominates an unsharded million-episode
+       replay.
+    2. **Stats pass** (:func:`_seg_executable`): given its boundary
+       carry, each segment is independent; the C segments run vmapped
+       (and, with ``mesh`` — e.g. ``repro.launch.mesh.make_fleet_mesh()``
+       — ``shard_map``'d along the 1-D fleet axis via
+       ``sharding.rules.fleet_axis_spec``, falling back to the unsharded
+       executable when C is indivisible) and materialize the full
+       per-episode trajectories in parallel.
+
+    Why the handoff is sequential in *both* discount regimes: the D4
+    gate reads the carried posterior, so each segment's sufficient
+    statistics depend on its incoming carry — a one-shot parallel
+    composition would speculate on decisions and break the bitwise
+    contract.  Under ``discount=1`` the conjugate closed form *does*
+    compose associatively (:func:`compose_segment_posteriors`, one
+    ``lax.associative_scan`` over per-segment (Δs, Δf)) and is pinned to
+    the handoff to 1 ULP; under ``discount<1`` the forgetting recurrence
+    makes the handoff of the (a, b) carry the only exact route, so the
+    engine documents and uses this two-pass scheme for every discount.
+
+    Parity contract (tests/test_episode_sharding.py): bitwise-f64 equal
+    to :func:`fleet_replay` on the same log — decisions, flags, times,
+    posteriors exactly; EV/waste to the established 1-ULP FMA allowance
+    — for every (C, discount, lower-bound, streaming) combination.
+
+    ``n_segments`` defaults to the mesh extent (or the visible device
+    count without a mesh).  ``return_boundaries=True`` additionally
+    returns the (C, G, V, 2) segment-start posteriors.
+    """
+    alphas, lambdas = _normalize_grid(alphas, lambdas)
+    if n_segments is None:
+        if mesh is not None and axis_name in mesh.shape:
+            n_segments = mesh.shape[axis_name]
+        else:
+            n_segments = max(1, len(jax.devices()))
+    chunks = chunk_episodes(
+        lowered, success, n_segments,
+        pred_ok=pred_ok, chunk_P=chunk_P, ep_mask=ep_mask)
+    E, C = chunks.n_episodes, chunks.n_segments
+    # the report's ep_mask keeps the caller's (E,) view, not the padded one
+    ep_mask_full = chunks.ep_mask.reshape(-1)[:E]
+
+    if mesh is not None:
+        from ..sharding.rules import fleet_axis_spec
+
+        if fleet_axis_spec(mesh, C, axis=axis_name) is None:
+            mesh = None  # indivisible segment axis: run unsharded
+
+    static = _pack_static(lowered, chunks.has_refiner)
+    G = alphas.shape[0]
+    V = lowered.n_ops
+    post0 = jnp.broadcast_to(
+        jnp.stack([_f(lowered.a0), _f(lowered.b0)], -1)[None], (G, V, 2))
+    args = (
+        _f(lowered.discount), _f(alphas), _f(lambdas), _f(lowered.gamma),
+        jnp.asarray(chunks.success), jnp.asarray(chunks.pred_ok),
+        _f(chunks.chunk_P), jnp.asarray(chunks.ep_mask),
+    )
+    throttle_every = int(throttle_every)
+    K = int(chunks.K)
+    use_lb = bool(lowered.use_lower_bound)
+
+    starts, _ = _boundary_scan(static, post0, *args,
+                               throttle_every=throttle_every, K=K,
+                               use_lower_bound=use_lb)
+    fn = _seg_executable(mesh, axis_name, throttle_every, K, use_lb)
+    _, ys = fn(static, starts, *args)
+
+    out = {}
+    for k, v in ys.items():
+        v = np.asarray(v)
+        out[k] = v.reshape((C * chunks.seg_len,) + v.shape[2:])[:E]
+    report = FleetReport(alphas=alphas, lambdas=lambdas,
+                         ep_mask=ep_mask_full, **out)
+    if return_boundaries:
+        return report, np.asarray(starts)
+    return report

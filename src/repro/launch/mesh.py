@@ -54,9 +54,12 @@ def make_host_mesh(data: int = 1, model: int = 1):
 
 
 def make_fleet_mesh(n: int | None = None, *, axis: str = "fleet"):
-    """1-D mesh for the multi-tenant replay engine: the ``tenants x grid``
-    batch axis of ``repro.core.fleet.multi_tenant_replay`` is shard_map'd
-    over this axis.  Defaults to every visible (real or
-    XLA_FLAGS-forced) device."""
+    """1-D mesh for the fleet replay engines.  Two batch axes ride it:
+    the ``tenants x grid`` axis of
+    ``repro.core.fleet.multi_tenant_replay`` and the episode-segment
+    axis of ``repro.core.fleet.episode_sharded_replay`` (one tenant's
+    million-episode log as C independent scan segments) — both
+    shard_map'd via ``sharding.rules.fleet_axis_spec``.  Defaults to
+    every visible (real or XLA_FLAGS-forced) device."""
     n = len(jax.devices()) if n is None else n
     return jax.make_mesh((n,), (axis,))

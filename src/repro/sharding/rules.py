@@ -91,11 +91,12 @@ def batch_spec(mesh: Mesh, batch: int, *, extra_dims: int = 1) -> P:
 
 
 def fleet_axis_spec(mesh: Mesh, n: int, axis: str = "fleet") -> Optional[P]:
-    """Partition spec for the fleet engine's leading ``tenants x grid``
-    batch axis: ``P(axis)`` when the mesh-axis extent divides ``n``,
-    else ``None`` — the caller (``core.fleet.multi_tenant_replay``) falls
-    back to an unsharded call, the batch-axis analogue of
-    ``shard_if_divisible``'s replication fallback."""
+    """Partition spec for a fleet engine's leading batch axis — the
+    ``tenants x grid`` axis of ``core.fleet.multi_tenant_replay`` or the
+    episode-segment axis of ``core.fleet.episode_sharded_replay``:
+    ``P(axis)`` when the mesh-axis extent divides ``n``, else ``None`` —
+    the caller falls back to an unsharded call, the batch-axis analogue
+    of ``shard_if_divisible``'s replication fallback."""
     if axis not in mesh.shape or n % mesh.shape[axis] != 0:
         return None
     return P(axis)

@@ -21,8 +21,18 @@ def test_smoke_mode_parity_and_schema():
         "bitwise_f64_vs_independent_fleet_replay"] is True
     assert rec["parity"]["launched_match"] and rec["parity"]["committed_match"]
     assert rec["credible_bound"]["parity"]["launched_match"]
+    # episode-sharded gate: the two-pass engine replayed the tiny log
+    # bitwise-equal to the sequential scan, and the log-axis-sharded
+    # §12.1 grid (the offline_replay reroute) kept decision fractions
+    # bitwise with float sums inside reorder tolerance
+    es = rec["episode_sharded"]
+    assert es["parity"]["bitwise_f64_vs_fleet_replay"] is True
+    assert es["parity"]["grid_reroute_fraction_bitwise"] is True
+    assert es["parity"]["grid_reroute_max_rel_error"] <= 1e-12
+    assert es["segments"] > 1
     # tiny sizes: the smoke path must never masquerade as the real record
     assert rec["episodes"] < 100
+    assert es["episodes"] < 100
 
 
 def test_checked_in_bench_files_carry_required_schema():
@@ -36,6 +46,14 @@ def test_checked_in_bench_files_carry_required_schema():
     assert mt["parity"]["bitwise_f64_vs_independent_fleet_replay"] is True
     assert [r["devices"] for r in mt["scaling"]] == [1, 2, 4, 8]
     assert all(r["shards"] == r["devices"] for r in mt["scaling"])
+    # acceptance shape: the single-tenant 1M-episode sharded replay row,
+    # bitwise parity asserted before timing, 1/2/4/8 device rows with the
+    # segment axis really partitioned (shards == devices)
+    es = fleet["episode_sharded"]
+    assert es["episodes"] >= 1_000_000
+    assert es["parity"]["bitwise_f64_vs_fleet_replay"] is True
+    assert [r["devices"] for r in es["scaling"]] == [1, 2, 4, 8]
+    assert all(r["shards"] == r["devices"] for r in es["scaling"])
 
 
 def test_smoke_rejects_malformed_record():

@@ -175,6 +175,25 @@ def test_posterior_carry_chains_across_rounds():
             np.asarray(full.post_final), np.asarray(r2.post_final))
 
 
+def test_final_posterior_rows_bounds_checks_grid_index():
+    """Regression (satellite): ``final_posterior_rows`` trusted the
+    caller's ``grid_index`` — an out-of-range or negative index either
+    crashed deep in numpy or silently wrapped to a *different operating
+    point's* posteriors before feeding the kill-switch.  It now raises a
+    clear IndexError at the boundary and still serves every valid
+    index."""
+    with enable_x64():
+        stack, lowereds, succs, preds = _stack_for((0, 2), [4, 4])
+        report = multi_tenant_replay(stack, GRID_ALPHAS, GRID_LAMS)
+        G = len(GRID_ALPHAS)
+        for g in range(G):
+            rows, a, b = report.final_posterior_rows(g)
+            assert len(rows) == len(a) == len(b) > 0
+        for bad in (G, G + 5, -1, -G):
+            with pytest.raises(IndexError, match="grid_index"):
+                report.final_posterior_rows(bad)
+
+
 def test_stack_rejects_mixed_lower_bound_and_bad_shapes():
     lowered, success, pred_ok = _lower_dag(make_random_dag(0, episodes=4))
     lb_low, lb_suc, lb_pred = _lower_dag(

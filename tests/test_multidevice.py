@@ -140,6 +140,43 @@ def test_multi_tenant_fleet_sharded_matches_unsharded():
     assert ok == "True" and int(shards) == 8 and int(chained) == 8
 
 
+def test_episode_sharded_fleet_matches_unsharded():
+    """The episode-sharded replay shard_map'd over 8 forced host devices
+    (one segment per device) returns a report bitwise-equal (f64) to the
+    unsharded sequential ``fleet_replay`` scan — and the segment-stats
+    pass really is partitioned 8-ways."""
+    out = run_subprocess("""
+        import dataclasses
+        import sys
+        from pathlib import Path
+        sys.path.insert(0, str(Path({src!r}).parent))
+        import numpy as np
+        from jax.experimental import enable_x64
+        from benchmarks.workflow_sim import (
+            DEFAULT_ALPHAS, LAMBDA_USD_PER_S, _autoreply_fleet,
+            _episode_sharded_shards)
+        from repro.core import episode_sharded_replay, fleet_replay
+        from repro.launch.mesh import make_fleet_mesh
+        alphas = np.asarray(DEFAULT_ALPHAS)
+        mesh = make_fleet_mesh()
+        with enable_x64():
+            lowered, success, _ = _autoreply_fleet(episodes=64)
+            base = fleet_replay(lowered, success, alphas, LAMBDA_USD_PER_S)
+            sharded = episode_sharded_replay(
+                lowered, success, alphas, LAMBDA_USD_PER_S,
+                n_segments=8, mesh=mesh)
+            ok = True
+            for f in dataclasses.fields(base):
+                a, b = getattr(base, f.name), getattr(sharded, f.name)
+                ok = ok and bool(np.array_equal(a, b))
+            shards = _episode_sharded_shards(
+                lowered, success, alphas, mesh, 8)
+        print("OK", ok, shards)
+    """.format(src=SRC))
+    _, ok, shards = out.split()
+    assert ok == "True" and int(shards) == 8
+
+
 def test_gpipe_on_pod_axis_with_dp():
     """PP on one axis composed with DP on the other (2 stages x 4 dp)."""
     out = run_subprocess("""
