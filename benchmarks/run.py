@@ -30,10 +30,14 @@ ROOT = pathlib.Path(__file__).resolve().parents[1]
 # at each level of the record.
 _FLEET_KEYS = {
     "benchmark", "alphas", "episodes", "grid_points", "scalar_total_s",
-    "fleet_total_s", "speedup", "parity", "pareto_fleet",
-    "credible_bound", "multi_tenant", "episode_sharded",
+    "fleet_total_s", "speedup", "parity", "pareto_dtype", "pareto_fleet",
+    "credible_bound", "multi_tenant", "episode_sharded", "online_service",
 }
-_CREDIBLE_KEYS = {"benchmark", "gamma", "speedup", "parity", "pareto_fleet"}
+_CREDIBLE_KEYS = {"benchmark", "gamma", "speedup", "parity", "pareto_dtype",
+                  "pareto_fleet"}
+_OS_KEYS = {"benchmark", "rows", "reps", "rounds", "parity", "batches"}
+_OS_BATCH_KEYS = {"B", "reps", "ticks_per_s", "us_per_decision",
+                  "scalar_us_per_decision", "speedup"}
 _MT_KEYS = {
     "benchmark", "tenants", "grid_points", "episodes", "one_call_s",
     "per_tenant_calls_s", "speedup", "parity", "scaling",
@@ -69,6 +73,15 @@ def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
     for row in es["scaling"]:
         _require(row, {"devices", "shards", "wall_s"},
                  f"{what}.episode_sharded.scaling")
+    osvc = rec["online_service"]
+    _require(osvc, _OS_KEYS, f"{what}.online_service")
+    _require(osvc["parity"],
+             {"bitwise_f64_vs_scalar_evaluate", "lower_bound_flags_match"},
+             f"{what}.online_service.parity")
+    if not osvc["batches"]:
+        raise AssertionError(f"{what}.online_service: no batch rows")
+    for row in osvc["batches"]:
+        _require(row, _OS_BATCH_KEYS, f"{what}.online_service.batches")
 
 
 def validate_bench_files() -> list[str]:

@@ -532,37 +532,222 @@ def episode_sharded_record(episodes: int = 1_000_000,
     }
 
 
+def online_service_record(batch_sizes=(1, 64, 1024), n_rows: int = 64,
+                          reps: int = 20, seed: int = SEED,
+                          require_speedup: float | None = 20.0) -> dict:
+    """The BENCH_fleet.json ``online_service`` section: the jit'd batched
+    decision service (device-resident posterior table, one donated tick
+    per batch) vs the scalar ``ThreadedSpeculativeRunner.decide`` loop.
+
+    Parity is asserted before any timing: under ``enable_x64`` every
+    batched decision (flag, EV, threshold, margin) must be bitwise equal
+    to ``decision.evaluate`` on the same posterior rows — the
+    contraction-pinned gate, not the fleet engine's 1-ULP FMA tolerance —
+    and the §7.5 lower-bound tick must flag-match the scipy-backed scalar
+    path.  Timing then runs at the fleet default dtype: per batch size B,
+    ``reps`` warm ticks (each tick's flags pulled to host — the honest
+    per-tick round-trip an online service pays) against B scalar
+    ``decide`` calls per rep.  ``require_speedup`` (full runs) asserts
+    the B=max per-decision speedup floor.
+    """
+    from jax.experimental import enable_x64
+
+    from repro.core.decision import Decision
+    from repro.core.online import OnlineDecisionService
+    from repro.core.posterior import BetaPosterior
+    from repro.serving.spec_bridge import EngineOp, ThreadedSpeculativeRunner
+
+    rng = np.random.default_rng(seed)
+
+    def build_service(**kw):
+        svc = OnlineDecisionService(**kw)
+        for i in range(n_rows):
+            svc.register_edge(("classifier", f"drafter{i}"),
+                              dep_type=DependencyType.ROUTER_K_WAY,
+                              k=2 + i % 7)
+        return svc
+
+    op = EngineOp("drafter", engine=None, max_new_tokens=160)
+    runner = ThreadedSpeculativeRunner(lambda: (None, None), op)
+    pricing_in, pricing_out = 3e-6, 15e-6      # paper/frontier-default
+
+    def requests(B):
+        return dict(
+            rows=rng.integers(0, n_rows, B),
+            alpha=rng.uniform(0.0, 1.0, B),
+            lam=rng.uniform(1e-3, 0.5, B),
+            lat=rng.uniform(0.05, 4.0, B),
+        )
+
+    def svc_tick(svc, req, **kw):
+        return svc.tick(
+            req["rows"], alpha=req["alpha"], lambda_usd_per_s=req["lam"],
+            latency_s=req["lat"], input_tokens=32, output_tokens=160,
+            input_price=pricing_in, output_price=pricing_out, **kw)
+
+    # --- parity first (f64): bitwise vs the scalar runner's evaluate
+    with enable_x64():
+        svc = build_service()
+        B_par = max(batch_sizes)
+        req = requests(B_par)
+        snap = svc.posterior_snapshot()
+        d = svc_tick(svc, req)
+        for i in range(B_par):
+            r = int(req["rows"][i])
+            post = BetaPosterior(alpha=float(snap[r, 0]), beta=float(snap[r, 1]))
+            ref = runner.decide_full(post, float(req["alpha"][i]),
+                                     float(req["lam"][i]), float(req["lat"][i]))
+            if (bool(d.flag[i]) != (ref.decision is Decision.SPECULATE)
+                    or d.EV_usd[i] != ref.EV_usd
+                    or d.threshold_usd[i] != ref.threshold_usd
+                    or d.margin_usd[i] != ref.margin_usd):
+                raise AssertionError(
+                    f"online service / scalar decide divergence at row {i}")
+        # §7.5 flag parity (EV inherits the betaincinv-vs-ppf allowance)
+        d_lb = svc_tick(svc, req, use_lower_bound=True)
+        for i in range(B_par):
+            r = int(req["rows"][i])
+            post = BetaPosterior(alpha=float(snap[r, 0]), beta=float(snap[r, 1]))
+            ref = runner.decide_full(post, float(req["alpha"][i]),
+                                     float(req["lam"][i]), float(req["lat"][i]),
+                                     use_lower_bound=True)
+            if bool(d_lb.flag[i]) != (ref.decision is Decision.SPECULATE):
+                raise AssertionError(
+                    f"online service lower-bound flag divergence at row {i}")
+
+    # --- then speed (fleet default dtype).  This container's 2 cores are
+    # shared with the harness, so each side takes the best of several
+    # rounds — the standard noise-robust estimator; both sides get the
+    # same treatment.
+    svc = build_service()
+    posts = [BetaPosterior(alpha=float(a), beta=float(b))
+             for a, b in svc.posterior_snapshot()]
+    rounds = 10
+    batches = []
+    for B in batch_sizes:
+        # many short rounds: co-tenant CPU bursts last longer than one
+        # round, so the min reliably lands in a quiet window
+        reps_eff = max(4, min(reps, 4096 // max(1, B)))
+        req = requests(B)
+        # the packed hot path: a production batcher accumulates requests
+        # into exactly this block between ticks, so the timed loop hands
+        # it over zero-copy (the scalar loop likewise receives its
+        # ready-made per-request args); the block is built in the
+        # service's working dtype so the timed executable is the real
+        # zero-copy one even under process-wide x64
+        import jax
+
+        fdtype = np.dtype(
+            "float64" if jax.config.jax_enable_x64 else "float32")
+        row_packed = req["rows"].astype(np.int32)
+        reqs_packed = np.zeros((B, 7), fdtype)
+        for j, key in enumerate(("alpha", "lam", "lat")):
+            reqs_packed[:, j] = req[key]
+        reqs_packed[:, 3], reqs_packed[:, 4] = 32, 160
+        reqs_packed[:, 5], reqs_packed[:, 6] = pricing_in, pricing_out
+        svc.tick_packed(row_packed, reqs_packed)    # warm the executable
+        svc.tick_packed(row_packed, reqs_packed)
+        tick_s = float("inf")
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            for _ in range(reps_eff):
+                d = svc.tick_packed(row_packed, reqs_packed)
+                d.speculate                     # per-tick host round-trip
+            tick_s = min(tick_s, (time.perf_counter() - t0) / reps_eff)
+
+        args = [(posts[int(req["rows"][i])], float(req["alpha"][i]),
+                 float(req["lam"][i]), float(req["lat"][i]))
+                for i in range(B)]
+        for a in args[: min(B, 8)]:             # warm scalar caches
+            runner.decide(*a)
+        scalar_s = float("inf")
+        for _ in range(rounds):
+            t0 = time.perf_counter()
+            for _ in range(reps_eff):
+                for a in args:
+                    runner.decide(*a)
+            scalar_s = min(scalar_s, (time.perf_counter() - t0) / reps_eff)
+
+        batches.append({
+            "B": int(B),
+            "reps": reps_eff,               # actual warm reps per round
+            "ticks_per_s": 1.0 / tick_s,
+            "us_per_decision": tick_s / B * 1e6,
+            "scalar_us_per_decision": scalar_s / B * 1e6,
+            "speedup": scalar_s / tick_s,
+        })
+
+    record = {
+        "benchmark": "online_decision_service",
+        "rows": n_rows,
+        "reps": reps,                   # requested cap; per-batch rows
+        "rounds": rounds,               # carry the actual reps used
+        "parity": {
+            "bitwise_f64_vs_scalar_evaluate": True,
+            "lower_bound_flags_match": True,
+        },
+        "batches": batches,
+    }
+    if require_speedup is not None:
+        top = batches[-1]
+        if top["speedup"] < require_speedup:
+            raise AssertionError(
+                f"online service speedup at B={top['B']} is "
+                f"{top['speedup']:.1f}x < required {require_speedup}x")
+    return record
+
+
 def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
                   seed: int = SEED, *, write: bool = True,
                   tenants: int = 8, scaling_devices=(1, 2, 4, 8),
                   episode_sharded_episodes: int = 1_000_000,
-                  episode_sharded_segments: int = 8) -> dict:
+                  episode_sharded_segments: int = 8,
+                  online_batch_sizes=(1, 64, 1024),
+                  online_rows: int = 64,
+                  online_reps: int = 20,
+                  online_require_speedup: float | None = 20.0) -> dict:
     """Measure scalar vs fleet wall time on the identical sweep — both the
     posterior-mean gate and the §7.5 credible-bound gate — plus the
-    multi-tenant sharded-engine record, and persist everything to
-    BENCH_fleet.json (``write=False`` returns the record without touching
-    the file — the --smoke path).  Methodology (EXPERIMENTS.md §Perf): jit
-    warm-up excluded, identical inputs, parity asserted before timing is
-    reported.  The parity contract (exact launch/commit counts between
-    the f64 scalar gate and the f32 fleet gate) relies on this workload's
-    decision margins — |EV - threshold| is ~1e-2 relative here, orders
-    above both the f32 mean error and the ~1e-5 f32 quantile error, same
-    as the pre-existing mean-gate record."""
+    multi-tenant sharded-engine and online-decision-service records, and
+    persist everything to BENCH_fleet.json (``write=False`` returns the
+    record without touching the file — the --smoke path).  Methodology
+    (EXPERIMENTS.md §Perf): jit warm-up excluded, identical inputs, parity
+    asserted before timing is reported.
+
+    The published ``pareto_fleet`` rows (and the parity gate feeding them)
+    run under ``enable_x64`` so the numbers sit in the same dtype tier as
+    the bitwise-f64 parity claims next to them (``pareto_dtype`` labels
+    the row); the *timed* sweeps stay at the fleet default dtype, matching
+    every historical speedup row.  The cross-dtype launch/commit equality
+    the timing relies on holds because this workload's decision margins —
+    |EV - threshold| ~1e-2 relative — sit orders above both the f32 mean
+    error and the ~1e-5 f32 quantile error."""
+    from jax.experimental import enable_x64
+
     n_runs = len(alphas) * episodes
 
     t0 = time.perf_counter()
     scalar = sweep(alphas, episodes, seed)
     scalar_s = time.perf_counter() - t0
 
+    # parity + published pareto rows at f64 (the scalar sweep is plain
+    # Python/scipy and therefore dtype-independent — one run serves both
+    # the timing above and this parity gate)
+    with enable_x64():
+        fleet = fleet_sweep(alphas, episodes, seed)
+    parity = assert_pareto_parity(scalar, fleet, alphas)
+
     # warm up the jit cache at the timed shape (the episode count is a
     # traced scan length, so only a full-size call compiles the right
     # executable)
     fleet_sweep(alphas, episodes, seed)
     t0 = time.perf_counter()
-    fleet = fleet_sweep(alphas, episodes, seed)
+    fleet32 = fleet_sweep(alphas, episodes, seed)
     fleet_s = time.perf_counter() - t0
-
-    parity = assert_pareto_parity(scalar, fleet, alphas)
+    # the run that produced the published timing is itself parity-checked
+    # at its own (f32) dtype — the f64 gate above covers the published
+    # pareto rows, this one covers the timed executable
+    parity_f32 = assert_pareto_parity(scalar, fleet32, alphas)
 
     # §7.5 conservative mode: the scalar path pays a scipy beta.ppf per
     # Phase-2 decision; the fleet path inverts in-XLA via betaincinv.
@@ -570,12 +755,15 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
     scalar_lb = sweep(alphas, episodes, seed, use_lower_bound=True)
     scalar_lb_s = time.perf_counter() - t0
 
+    with enable_x64():
+        fleet_lb = fleet_sweep(alphas, episodes, seed, use_lower_bound=True)
+    parity_lb = assert_pareto_parity(scalar_lb, fleet_lb, alphas)
+
     fleet_sweep(alphas, episodes, seed, use_lower_bound=True)  # warm-up
     t0 = time.perf_counter()
-    fleet_lb = fleet_sweep(alphas, episodes, seed, use_lower_bound=True)
+    fleet_lb32 = fleet_sweep(alphas, episodes, seed, use_lower_bound=True)
     fleet_lb_s = time.perf_counter() - t0
-
-    parity_lb = assert_pareto_parity(scalar_lb, fleet_lb, alphas)
+    parity_lb32 = assert_pareto_parity(scalar_lb, fleet_lb32, alphas)
 
     record = {
         "benchmark": "autoreply_alpha_sweep",
@@ -590,9 +778,11 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
         "speedup": scalar_s / fleet_s,
         "parity": {
             "max_rel_error": parity["max_rel_error"],
+            "timed_f32_max_rel_error": parity_f32["max_rel_error"],
             "launched_match": True,
             "committed_match": True,
         },
+        "pareto_dtype": "float64",
         "pareto_fleet": {
             str(a): fleet[a] for a in alphas
         },
@@ -606,9 +796,11 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
             "speedup": scalar_lb_s / fleet_lb_s,
             "parity": {
                 "max_rel_error": parity_lb["max_rel_error"],
+                "timed_f32_max_rel_error": parity_lb32["max_rel_error"],
                 "launched_match": True,
                 "committed_match": True,
             },
+            "pareto_dtype": "float64",
             "pareto_fleet": {
                 str(a): fleet_lb[a] for a in alphas
             },
@@ -621,6 +813,11 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
             episodes=episode_sharded_episodes, alphas=alphas, seed=seed,
             segments=episode_sharded_segments,
             scaling_devices=scaling_devices,
+        ),
+        "online_service": online_service_record(
+            batch_sizes=online_batch_sizes, n_rows=online_rows,
+            reps=online_reps, seed=seed,
+            require_speedup=online_require_speedup,
         ),
     }
     if write:
@@ -639,6 +836,8 @@ def smoke() -> dict:
         alphas=(0.0, 0.5, 0.9, 1.0), episodes=24,
         write=False, tenants=3, scaling_devices=(),
         episode_sharded_episodes=48, episode_sharded_segments=3,
+        online_batch_sizes=(1, 8), online_rows=8, online_reps=3,
+        online_require_speedup=None,
     )
 
 
@@ -693,5 +892,17 @@ def benchmarks() -> list[tuple[str, float, str]]:
         f"segments; bitwise-f64 parity vs fleet_replay pre-timing; "
         f"{es['speedup']:.2f}x vs unsharded scan on one device (segment-"
         f"vmap cuts scan depth); scaling {es_scaling or 'n/a'}",
+    ))
+    os_rec = record["online_service"]
+    top = os_rec["batches"][-1]
+    per_b = " ".join(
+        f"B{b['B']}={b['us_per_decision']:.2f}us/dec({b['speedup']:.0f}x)"
+        for b in os_rec["batches"]
+    )
+    rows.append((
+        "online_decision_service", top["us_per_decision"],
+        f"{os_rec['rows']} rows; bitwise-f64 decide parity pre-timing; "
+        f"{top['ticks_per_s']:.0f} ticks/s at B={top['B']}; {per_b} vs "
+        f"scalar decide loop",
     ))
     return rows

@@ -48,6 +48,15 @@ from .fleet import (
     multi_tenant_replay,
     stack_tenants,
 )
+from .online import (
+    OnlineDecisionService,
+    ServiceState,
+    TickDecisions,
+    TelemetryBatch,
+    canary_batch,
+    online_calibration_batch,
+    shadow_mode_batch,
+)
 from .streaming import (
     RhoEstimator,
     StreamingReestimator,
@@ -81,6 +90,11 @@ __all__ = [
     "multi_tenant_replay",
     "EpisodeChunks", "chunk_episodes", "compose_segment_posteriors",
     "episode_sharded_replay",
+    # online decision service (beyond-paper jit'd request path) + the
+    # §12.2-12.4 stages folded onto its posterior table
+    "OnlineDecisionService", "ServiceState", "TickDecisions",
+    "TelemetryBatch", "shadow_mode_batch", "canary_batch",
+    "online_calibration_batch",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

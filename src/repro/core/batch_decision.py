@@ -21,6 +21,7 @@ import numpy as np
 from .betainc import betaincinv
 
 __all__ = [
+    "d4_gate",
     "batch_evaluate",
     "batch_lower_bound",
     "counterfactual_grid",
@@ -34,13 +35,41 @@ __all__ = [
 ]
 
 
+def d4_gate(P_gate, alpha, lam, latency_s, in_tok, out_tok, in_price,
+            out_price, zero=None):
+    """Traceable D4 gate core (§6.1): the one expression both the batch
+    path and the online decision service lower.
+
+    With ``zero=None`` the expressions match the historical fused lowering
+    (XLA CPU contracts ``a*b + c`` into one FMA, so EV / threshold agree
+    with the scalar ``decision.evaluate`` only to 1 ULP — the established
+    fleet-parity tolerance).  With ``zero`` a *traced* runtime 0.0 scalar,
+    every product feeding an add is pinned to its correctly-rounded value:
+    ``x + zero`` either survives as ``round(x) + 0`` or contracts to
+    ``fma(a, b, 0) == round(a*b)`` — either way the twice-rounded scalar
+    result — making EV / threshold / margin **bitwise-f64 equal** to the
+    scalar path.  (``zero`` must be traced; a literal would be folded
+    away.  All products here are >= +0.0 in the decision domain, so the
+    ``-0.0 + 0.0 -> +0.0`` edge of the trick cannot bite.)
+    """
+    rnd = (lambda x: x) if zero is None else (lambda x: x + zero)
+    C_spec = rnd(in_tok * in_price) + rnd(out_tok * out_price)
+    L_value = latency_s * lam
+    EV = rnd(P_gate * L_value) - rnd((1.0 - P_gate) * C_spec)
+    threshold = rnd((1.0 - alpha) * C_spec)
+    return EV, threshold, EV >= threshold, C_spec, L_value
+
+
 @functools.partial(jax.jit, static_argnames=())
 def _batch_evaluate(P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price):
-    C_spec = in_tok * in_price + out_tok * out_price
-    L_value = latency_s * lam
-    EV = P * L_value - (1.0 - P) * C_spec
-    threshold = (1.0 - alpha) * C_spec
-    return EV, threshold, EV >= threshold, C_spec, L_value
+    return d4_gate(P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price)
+
+
+@jax.jit
+def _batch_evaluate_exact(P, alpha, lam, latency_s, in_tok, out_tok,
+                          in_price, out_price, zero):
+    return d4_gate(P, alpha, lam, latency_s, in_tok, out_tok, in_price,
+                   out_price, zero)
 
 
 def _f(x):
@@ -51,7 +80,7 @@ def _f(x):
 
 def batch_evaluate(
     P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price,
-    *, P_lower=None,
+    *, P_lower=None, exact=False,
 ):
     """Vectorized D4 gate.  All inputs broadcastable arrays.  Returns
     (EV, threshold, speculate_mask, C_spec, L_value).
@@ -61,11 +90,19 @@ def batch_evaluate(
     whose ``P_used`` is the bound) runs on the one-sided lower credible
     bound instead of the posterior mean.  Compute it in bulk with
     :func:`batch_lower_bound`.
+
+    ``exact=True`` runs the contraction-pinned lowering (see
+    :func:`d4_gate`): EV / threshold / decision flags come out
+    **bitwise-f64 equal** to the scalar ``decision.evaluate`` instead of
+    the default 1-ULP FMA tolerance — the contract the online decision
+    service (``repro.core.online``) serves under.
     """
     gate_P = P if P_lower is None else P_lower
     args = [_f(x) for x in (
         gate_P, alpha, lam, latency_s, in_tok, out_tok, in_price, out_price
     )]
+    if exact:
+        return _batch_evaluate_exact(*args, _f(0.0))
     return _batch_evaluate(*args)
 
 

@@ -11,6 +11,13 @@ Staged in order of increasing exposure:
 Every §12 knob (dependency-type tag, p_structural, n0, alpha, lambda,
 tier-2 threshold, token estimators, per-edge enable bit, credible gamma) is
 set or kept honest by one of these stages (§12.6 knob-to-stage map).
+
+Stages 2–4 also exist as table-batched twins over the online decision
+service's posterior snapshot (``repro.core.online.shadow_mode_batch`` /
+``canary_batch`` / ``online_calibration_batch``): one calibration round
+for a whole fleet of edges as array ops, matching these scalar stages
+bitwise at f64 (posteriors, implied lambdas, rates) and exactly
+(promotion / trigger flags).
 """
 from __future__ import annotations
 
@@ -400,6 +407,39 @@ class ShadowReport:
     rho_mean: float
 
 
+def _stability_converged(means: Sequence[float], window: int, tol: float) -> bool:
+    """§12.2 posterior-stability check: the trailing ``window`` means move
+    by at most ``tol``.  Shared by the scalar stage and the table-batched
+    twin (``repro.core.online.shadow_mode_batch``) so the two can never
+    drift apart."""
+    return (
+        len(means) >= window
+        and max(means[-window:]) - min(means[-window:]) <= tol
+    )
+
+
+def _tier2_threshold_sweep(
+    graded_subset: Sequence[tuple[Any, Any, bool]],
+    thresholds: Sequence[float],
+) -> tuple[float, float]:
+    """Tier-2 threshold grid sweep: maximize F1 against the human-graded
+    subset (first strict improvement wins, matching the historical loop).
+    Shared with ``repro.core.online.shadow_mode_batch``."""
+    best_thr, best_f1 = 0.95, -1.0
+    for thr in thresholds:
+        tp = fp = fn = 0
+        for i, i_hat, label in graded_subset:
+            pred = check_success(i, i_hat, TierPolicy(similarity_threshold=thr)).success
+            tp += int(pred and label)
+            fp += int(pred and not label)
+            fn += int((not pred) and label)
+        denom = 2 * tp + fp + fn
+        f1 = (2 * tp / denom) if denom else 0.0
+        if f1 > best_f1:
+            best_f1, best_thr = f1, thr
+    return best_thr, best_f1
+
+
 def shadow_mode(
     edge: tuple[str, str],
     posterior: BetaPosterior,
@@ -431,24 +471,11 @@ def shadow_mode(
         posterior.update(ok)
         means.append(posterior.mean)
 
-    converged = len(trials) >= n_shadow and (
-        len(means) >= stability_window
-        and max(means[-stability_window:]) - min(means[-stability_window:]) <= stability_tol
-    )
+    converged = len(trials) >= n_shadow and _stability_converged(
+        means, stability_window, stability_tol)
 
     # tier-2 threshold grid sweep: maximize F1 against the human-graded subset
-    best_thr, best_f1 = 0.95, -1.0
-    for thr in thresholds:
-        tp = fp = fn = 0
-        for i, i_hat, label in graded_subset:
-            pred = check_success(i, i_hat, TierPolicy(similarity_threshold=thr)).success
-            tp += int(pred and label)
-            fp += int(pred and not label)
-            fn += int((not pred) and label)
-        denom = 2 * tp + fp + fn
-        f1 = (2 * tp / denom) if denom else 0.0
-        if f1 > best_f1:
-            best_f1, best_thr = f1, thr
+    best_thr, best_f1 = _tier2_threshold_sweep(graded_subset, thresholds)
 
     est = TokenEstimator()
     for t in output_token_counts:
@@ -488,6 +515,43 @@ class CanaryReport:
     promote: bool              # go/no-go to full rollout
 
 
+def _canary_sweep_eval(
+    sweep: dict[float, tuple[float, float]],
+    chosen_alpha: float,
+    control_latency_s: float,
+    control_cost_usd: float,
+    budget_guardrail_usd: Optional[float],
+) -> tuple[list[CanaryArm], list[float], bool]:
+    """Arms list, Pareto frontier and promote verdict for one edge's
+    canary sweep — shared by the scalar stage and the table-batched
+    ``repro.core.online.canary_batch`` so the two can never drift."""
+    arms = [CanaryArm("control", None, control_latency_s, control_cost_usd)]
+    for a, (lat, cost) in sorted(sweep.items()):
+        arms.append(CanaryArm(f"alpha={a}", a, lat, cost))
+
+    # Pareto frontier over the sweep arms
+    pts = sorted((lat, cost, a) for a, (lat, cost) in sweep.items())
+    pareto: list[float] = []
+    best_cost = float("inf")
+    for lat, cost, a in pts:
+        if cost < best_cost - 1e-12:
+            pareto.append(a)
+            best_cost = cost
+
+    chosen = sweep.get(chosen_alpha)
+    promote = False
+    if chosen is not None:
+        lat_ok = chosen[0] <= control_latency_s
+        budget_ok = budget_guardrail_usd is None or chosen[1] <= budget_guardrail_usd
+        # Pareto-dominates sequential: no worse on both, better on one
+        dominates = (
+            chosen[0] <= control_latency_s and chosen[1] <= control_cost_usd
+            and (chosen[0] < control_latency_s or chosen[1] < control_cost_usd)
+        ) or (lat_ok and budget_ok)
+        promote = bool(lat_ok and budget_ok and dominates)
+    return arms, pareto, promote
+
+
 def canary(
     control_latency_s: float,
     control_cost_usd: float,
@@ -504,18 +568,9 @@ def canary(
     """§12.3: percentage rollout with a held-out sequential control, the
     alpha sweep tracing the (latency, cost) Pareto frontier, and the
     implied-lambda audit at the chosen operating point."""
-    arms = [CanaryArm("control", None, control_latency_s, control_cost_usd)]
-    for a, (lat, cost) in sorted(sweep.items()):
-        arms.append(CanaryArm(f"alpha={a}", a, lat, cost))
-
-    # Pareto frontier over the sweep arms
-    pts = sorted((lat, cost, a) for a, (lat, cost) in sweep.items())
-    pareto: list[float] = []
-    best_cost = float("inf")
-    for lat, cost, a in pts:
-        if cost < best_cost - 1e-12:
-            pareto.append(a)
-            best_cost = cost
+    arms, pareto, promote = _canary_sweep_eval(
+        sweep, chosen_alpha, control_latency_s, control_cost_usd,
+        budget_guardrail_usd)
 
     lam_imp = implied_lambda(P, C_spec, chosen_alpha, L_upstream_s)
     ratio = lam_imp / lambda_declared if lambda_declared > 0 else float("inf")
@@ -526,17 +581,6 @@ def canary(
     else:
         audit = "consistent"
 
-    chosen = sweep.get(chosen_alpha)
-    promote = False
-    if chosen is not None:
-        lat_ok = chosen[0] <= control_latency_s
-        budget_ok = budget_guardrail_usd is None or chosen[1] <= budget_guardrail_usd
-        # Pareto-dominates sequential: no worse on both, better on one
-        dominates = (
-            chosen[0] <= control_latency_s and chosen[1] <= control_cost_usd
-            and (chosen[0] < control_latency_s or chosen[1] < control_cost_usd)
-        ) or (lat_ok and budget_ok)
-        promote = lat_ok and budget_ok and dominates
     return CanaryReport(
         arms=arms,
         pareto_alphas=pareto,
@@ -569,6 +613,19 @@ class OnlineReport:
     lambda_refresh_due: bool
 
 
+def _calibration_bucket(
+    mid: float, rate: float, n: int, bucket_width: float
+) -> tuple[CalibrationBucket, bool]:
+    """One §12.4 calibration bucket with its binomial-CI verdicts —
+    shared by the scalar stage and the table-batched
+    ``repro.core.online.online_calibration_batch``.  Returns
+    (bucket, overpredicted)."""
+    # binomial 95% CI half-width
+    half = 1.96 * np.sqrt(max(rate * (1 - rate), 1e-9) / n) if n else 1.0
+    within = abs(rate - mid) <= max(half, bucket_width / 2)
+    return CalibrationBucket(mid, rate, n, within), rate < mid - half
+
+
 def online_calibration(
     log: TelemetryLog,
     *,
@@ -582,11 +639,9 @@ def online_calibration(
     buckets = []
     overpredicted = []
     for mid, (rate, n) in raw.items():
-        # binomial 95% CI half-width
-        half = 1.96 * np.sqrt(max(rate * (1 - rate), 1e-9) / n) if n else 1.0
-        within = abs(rate - mid) <= max(half, bucket_width / 2)
-        buckets.append(CalibrationBucket(mid, rate, n, within))
-        overpredicted.append(rate < mid - half)
+        bucket, over = _calibration_bucket(mid, rate, n, bucket_width)
+        buckets.append(bucket)
+        overpredicted.append(over)
     monotonic_over = len(overpredicted) >= 2 and all(overpredicted)
 
     far = log.tier2_false_accept_rate()

@@ -218,6 +218,59 @@ class DriftMonitor:
             for edge, tenant, p, f in zip(edges, tenants, P_lower, floors)
         ]
 
+    def ingest_online_triggers(
+        self,
+        row_keys: list,
+        triggered,
+        breach_runs=None,
+        consecutive_n: Optional[int] = None,
+    ) -> list[TriggerEvent]:
+        """Fold the online decision service's in-graph trigger-2 state back
+        into this monitor (the scalar event log stays the source of truth).
+
+        ``row_keys`` is the service's ``[(tenant, edge), ...]`` row layout
+        (``OnlineDecisionService.row_key``); ``triggered`` the tick's
+        kill-switch mask; ``breach_runs`` (optional) the device-side
+        consecutive-breach counters to mirror into the host bookkeeping.
+        The service already reset a triggered row's run to 0 in-graph —
+        exactly what ``_credible_breach_step`` does — so ingesting is
+        idempotent with the scalar checker's semantics.  Pass
+        ``consecutive_n`` when the service's trigger N differs from this
+        monitor's, so the audit log records the run length that actually
+        fired.
+        """
+        triggered = np.asarray(triggered, bool)
+        if triggered.shape[0] > len(row_keys):
+            # TickDecisions.drift_triggered is padded to the table size;
+            # the padding rows can never trigger, so accept and drop them
+            triggered = triggered[: len(row_keys)]
+        if len(row_keys) != triggered.shape[0]:
+            raise ValueError("row_keys must align with triggered")
+        n = self.credible_consecutive_n if consecutive_n is None else int(consecutive_n)
+        if breach_runs is not None:
+            runs = np.asarray(breach_runs, int)
+            if runs.shape[0] != len(row_keys):
+                raise ValueError("breach_runs must align with row_keys")
+            for (tenant, edge), run in zip(row_keys, runs):
+                self._credible_breach_run[self._key(edge, tenant)] = int(run)
+        events = []
+        for (tenant, edge), trig in zip(row_keys, triggered):
+            if not trig:
+                continue
+            st = self.state(edge, tenant)
+            st.enabled = False
+            st.needs_shadow_rerun = True
+            ev = TriggerEvent(
+                TriggerKind.CREDIBLE_BOUND_FLOOR, "edge", edge,
+                action="disable; fresh shadow-mode run required to re-enable",
+                detail=(f"P_lower below row floor for {n} consecutive "
+                        f"ticks (online service)"),
+                tenant=tenant,
+            )
+            self.events.append(ev)
+            events.append(ev)
+        return events
+
     def check_credible_bound_fleet(
         self,
         tenant_edges: list[tuple[str, tuple[str, str]]],

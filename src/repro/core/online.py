@@ -1,0 +1,1037 @@
+"""Jit'd online decision service — the serving-side twin of the fleet
+replay engine.
+
+Four PRs vectorized the *offline* paths (fleet replay, multi-tenant and
+episode sharding, §12.1 grids); this module is the first end-to-end jit'd
+*request* path.  Posterior and drift state live on device as structure-of-
+arrays tables instead of per-edge Python objects:
+
+* an ``(N, 2)`` alpha/beta posterior table, keyed by a host-side
+  ``(tenant, edge) -> row`` registry,
+* per-row taxonomy-keyed priors, §7.5 gammas, §14.3 discounts and the
+  trigger-2 credible floor,
+* drift bookkeeping (consecutive-breach run lengths, enable bits) and a
+  fixed-size per-decision telemetry ring buffer (USD rows, flushed per
+  tick — D2 without a host sync per decision).
+
+One double-buffered ``tick(requests) -> (decisions, state')`` call
+(donation of the state buffers is opt-in, the same policy as
+``multi_tenant_replay``) batches B concurrent decision requests: the D4
+expected-value gate
+(the :func:`repro.core.batch_decision.d4_gate` core, contraction-pinned so
+EV / threshold / margin are **bitwise-f64 equal** to the scalar
+``decision.evaluate``), the optional §7.5 lower bound via one vmapped
+``betaincinv``, posterior updates from the tick's settled outcomes (the
+exact discount recurrence of ``BetaPosterior.update``), and in-graph
+kill-switch checks with ``DriftMonitor.check_credible_bound_batch``
+semantics.  The row axis shards over the 1-D "fleet" mesh via
+``sharding.rules.fleet_axis_spec`` with the established unsharded
+fallback.
+
+The §12.2–12.4 calibration stages fold onto the same table:
+:func:`shadow_mode_batch`, :func:`canary_batch` and
+:func:`online_calibration_batch` run a whole fleet's calibration round as
+array ops over a posterior snapshot instead of per-record Python, with
+results that match the scalar ``calibration.shadow_mode`` / ``canary`` /
+``online_calibration`` bitwise at f64 (posteriors, implied lambdas) and
+exactly (promotion / trigger flags).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import statistics
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batch_decision import _f, d4_gate
+from .betainc import betaincinv
+from .calibration import (
+    CanaryReport,
+    OnlineReport,
+    ShadowReport,
+    TokenEstimator,
+    _calibration_bucket,
+    _canary_sweep_eval,
+    _stability_converged,
+    _tier2_threshold_sweep,
+)
+from .decision import Decision, DecisionResult
+from .posterior import BetaPosterior
+from .success import TierPolicy, check_success
+from .taxonomy import DEFAULT_N0, DependencyType, prior_params
+from .telemetry import bucket_key
+
+__all__ = [
+    "OnlineDecisionService",
+    "ServiceState",
+    "TickDecisions",
+    "TelemetryBatch",
+    "TELEMETRY_FIELDS",
+    "shadow_mode_batch",
+    "canary_batch",
+    "online_calibration_batch",
+]
+
+# Per-decision USD telemetry row layout (Appendix C distilled to the D2
+# essentials): every served decision logged in dollars, one ring slot each.
+TELEMETRY_FIELDS = (
+    "row", "speculate", "P_used", "P_mean", "EV_usd", "threshold_usd",
+    "margin_usd", "C_spec_usd", "L_value_usd",
+)
+
+
+_COL = {name: i for i, name in enumerate(TELEMETRY_FIELDS)}
+
+
+class ServiceState(NamedTuple):
+    """Device-resident service state (a pytree of five packed arrays —
+    few, large leaves keep per-tick dispatch overhead low on CPU)."""
+
+    post: jax.Array      # (N, 2) posterior alpha/beta rows
+    rowcfg: jax.Array    # (N, 3) per-row [gamma, discount, trigger-2 floor]
+    flags: jax.Array     # (N, 2) int32 [enabled, breach_run]
+    tel: jax.Array       # (R, F) telemetry ring (last R slots, oldest first)
+    counters: jax.Array  # (2,)   int32 [slots ever appended, real rows ever]
+
+
+def _tick_impl(state, zero, row, reqs, out_row, out_x, consecutive_n,
+               use_lower_bound, check_drift):
+    """One service tick, entirely in-graph.
+
+    ``row`` / ``out_row`` use -1 as the padding sentinel (shape buckets),
+    ``reqs`` packs the per-request floats as columns
+    [alpha, lambda, latency_s, in_tok, out_tok, in_price, out_price].
+
+    Order (documented contract, mirrored by the parity tests):
+
+      1. settle outcomes — sequential discount recurrence over the tick's
+         settled (row, success) pairs, exactly ``BetaPosterior.update``
+         applied in arrival order (same-row outcomes compose correctly);
+      2. answer decisions against the settled table — D4 gate via the
+         contraction-pinned :func:`batch_decision.d4_gate`, optionally on
+         the §7.5 lower bound (one vmapped ``betaincinv``);
+      3. drift/kill-switch — one ``check_credible_bound_batch``-semantics
+         breach step per *touched* row (post-settlement posteriors);
+      4. telemetry — the tick's decision rows (which double as the
+         returned decisions) appended to the ring, oldest slots evicted.
+    """
+    post, rowcfg, flags, tel, counters = state
+
+    # ---- 1. settle this tick's outcomes (exact discount recurrence).
+    # ``a*d + zero`` pins round(a*d) (or is the identity fma), so the
+    # update is bitwise the scalar two-step ``a *= d; a += x``.
+    def step(p, o):
+        r, x = o
+        ri = jnp.maximum(r, 0)
+        a, b = p[ri, 0], p[ri, 1]
+        d = rowcfg[ri, 1]
+        a2 = (a * d + zero) + x
+        b2 = (b * d + zero) + (1.0 - x)
+        new = jnp.where(r >= 0, jnp.stack([a2, b2]), jnp.stack([a, b]))
+        return p.at[ri].set(new), None
+
+    if out_row.shape[0]:          # static: the S=0 executable has no scan
+        post, _ = jax.lax.scan(step, post, (out_row, out_x))
+
+    # ---- 2. batched D4 decisions against the settled table
+    valid = row >= 0
+    ri = jnp.maximum(row, 0)
+    g = post[ri]
+    P_mean = g[:, 0] / (g[:, 0] + g[:, 1])
+    if use_lower_bound:
+        P_used = betaincinv(g[:, 0], g[:, 1], rowcfg[ri, 0])
+    else:
+        P_used = P_mean
+    EV, thr, flag, C_spec, L_value = d4_gate(
+        P_used, reqs[:, 0], reqs[:, 1], reqs[:, 2], reqs[:, 3], reqs[:, 4],
+        reqs[:, 5], reqs[:, 6], zero)
+    enabled_req = flags[ri, 0] > 0
+    served = flag & enabled_req
+
+    # ---- 3. drift / kill-switch (trigger 2 semantics, per touched row)
+    n_rows = post.shape[0]
+    if check_drift:
+        run = flags[:, 1]
+        touched = jnp.zeros(n_rows, jnp.int32).at[ri].add(
+            valid.astype(jnp.int32)) > 0
+        P_low = betaincinv(post[:, 0], post[:, 1], rowcfg[:, 0])
+        breached = touched & (P_low < rowcfg[:, 2])
+        run = jnp.where(touched, jnp.where(breached, run + 1, 0), run)
+        triggered = touched & (run >= consecutive_n)
+        enabled = (flags[:, 0] > 0) & ~triggered
+        run = jnp.where(triggered, 0, run)
+        flags = jnp.stack([enabled.astype(jnp.int32), run], 1)
+    else:
+        triggered = jnp.zeros(n_rows, bool)
+
+    # ---- 4. telemetry: the decision rows ARE the ring rows.  The ring
+    # holds the most recent R slots in order (append + evict is two
+    # memcpys — far cheaper than a modulo scatter on CPU); sentinel rows
+    # (row == -1) are dropped at drain time.
+    dt = post.dtype
+    rows_out = jnp.stack([
+        row.astype(dt), served.astype(dt), P_used, P_mean,
+        EV, thr, EV - thr, C_spec, L_value,
+    ], axis=1)
+    Bp = rows_out.shape[0]
+    R = tel.shape[0]
+    if Bp >= R:
+        tel = rows_out[Bp - R:]
+    else:
+        tel = jnp.concatenate([tel[Bp:], rows_out], 0)
+    counters = counters + jnp.stack(
+        [jnp.asarray(Bp, jnp.int32), valid.sum(dtype=jnp.int32)])
+
+    new_state = ServiceState(post=post, rowcfg=rowcfg, flags=flags,
+                             tel=tel, counters=counters)
+    bools = jnp.stack([flag, enabled_req], 1)
+    return new_state, rows_out, bools, triggered
+
+
+# Donation is opt-in (OnlineDecisionService(donate=True)): aliasing the
+# state buffers caps memory at two table copies — the double-buffer story
+# for HBM-resident million-row tables — but measurably slows CPU dispatch,
+# so the default follows multi_tenant_replay(donate=False).
+_TICK_STATICS = ("use_lower_bound", "check_drift")
+_tick = functools.partial(jax.jit, static_argnames=_TICK_STATICS)(_tick_impl)
+_tick_donated = functools.partial(
+    jax.jit, static_argnames=_TICK_STATICS, donate_argnums=(0,))(_tick_impl)
+
+
+def _bucket(n: int, lo: int = 1) -> int:
+    """Power-of-two shape bucket (compile-cache stability across ticks)."""
+    if n <= 0:
+        return 0
+    return max(lo, 1 << (n - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class _RowConfig:
+    """Host-side registration record for one (tenant, edge) row."""
+
+    tenant: Optional[str]
+    edge: tuple[str, str]
+    alpha0: float
+    beta0: float
+    gamma: float
+    discount: float
+    floor: float
+
+
+@dataclasses.dataclass
+class TickDecisions:
+    """One tick's batched answers.  The device outputs are pulled to host
+    lazily and at most once — reading any field is the tick's single
+    host sync (the decision block is the same (B, F) matrix the
+    telemetry ring stores)."""
+
+    batch: int
+    _rows: Any                # (Bp, F) decision/telemetry block
+    _bools: Any               # (Bp, 2) [raw D4 flag, enabled]
+    _drift: Any               # (N,) bool
+    _cache: dict = dataclasses.field(default_factory=dict)
+
+    def _col(self, name: str) -> np.ndarray:
+        if "rows" not in self._cache:
+            self._cache["rows"] = np.asarray(self._rows)[: self.batch]
+        return self._cache["rows"][:, _COL[name]]
+
+    def _bool(self, j: int) -> np.ndarray:
+        if "bools" not in self._cache:
+            self._cache["bools"] = np.asarray(self._bools)[: self.batch]
+        return self._cache["bools"][:, j]
+
+    @property
+    def speculate(self) -> np.ndarray:      # D4 flag AND kill-switch
+        # identical to the telemetry "speculate" column, but served from
+        # the small bool block (the common flags-only flush stays cheap)
+        return self._bool(0) & self._bool(1)
+
+    @property
+    def flag(self) -> np.ndarray:           # raw D4 flag (parity-pinned)
+        return self._bool(0)
+
+    @property
+    def enabled(self) -> np.ndarray:
+        return self._bool(1)
+
+    @property
+    def EV_usd(self) -> np.ndarray:
+        return self._col("EV_usd")
+
+    @property
+    def threshold_usd(self) -> np.ndarray:
+        return self._col("threshold_usd")
+
+    @property
+    def margin_usd(self) -> np.ndarray:
+        return self._col("margin_usd")
+
+    @property
+    def C_spec_usd(self) -> np.ndarray:
+        return self._col("C_spec_usd")
+
+    @property
+    def L_value_usd(self) -> np.ndarray:
+        return self._col("L_value_usd")
+
+    @property
+    def P_used(self) -> np.ndarray:
+        return self._col("P_used")
+
+    @property
+    def P_mean(self) -> np.ndarray:
+        return self._col("P_mean")
+
+    @property
+    def drift_triggered(self) -> np.ndarray:
+        if "drift" not in self._cache:
+            self._cache["drift"] = np.asarray(self._drift)
+        return self._cache["drift"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetryBatch:
+    """Rows drained from the device telemetry ring, oldest first."""
+
+    fields: dict[str, np.ndarray]
+    dropped: int                     # rows overwritten before this drain
+
+    def __len__(self) -> int:
+        return int(next(iter(self.fields.values())).shape[0]) if self.fields else 0
+
+    def rows(self) -> list[dict]:
+        n = len(self)
+        return [
+            {k: (int(v[i]) if k in ("row", "speculate") else float(v[i]))
+             for k, v in self.fields.items()}
+            for i in range(n)
+        ]
+
+
+class OnlineDecisionService:
+    """Device-resident batched decision service over a (tenant, edge) row
+    registry.
+
+    Registration is host-side and cheap; the first tick (or the first one
+    after a registration / dtype change) builds the device table, padded
+    to a power-of-two row count so registries can grow without retracing.
+    When a ``mesh`` with a ``fleet`` axis divides the padded row count,
+    the table's row axis is sharded across it
+    (``sharding.rules.fleet_axis_spec``); otherwise the established
+    unsharded fallback applies.
+    """
+
+    def __init__(
+        self,
+        *,
+        use_lower_bound: bool = False,
+        credible_consecutive_n: int = 5,
+        telemetry_capacity: int = 4096,
+        mesh=None,
+        axis_name: str = "fleet",
+        min_rows: int = 16,
+        donate: bool = False,
+    ) -> None:
+        if telemetry_capacity < 1:
+            raise ValueError("telemetry_capacity must be >= 1")
+        self.use_lower_bound = use_lower_bound
+        self.credible_consecutive_n = int(credible_consecutive_n)
+        self.telemetry_capacity = int(telemetry_capacity)
+        self.mesh = mesh
+        self.axis_name = axis_name
+        self.min_rows = int(min_rows)
+        self.donate = bool(donate)
+        self._registry: dict[tuple[Optional[str], tuple[str, str]], int] = {}
+        self._rows: list[_RowConfig] = []
+        self._state: Optional[ServiceState] = None
+        self._state_dtype: Optional[str] = None
+        self._built_rows = 0          # rows materialized into the table
+        self._pending: list[tuple[int, bool]] = []
+        # telemetry totals tracked host-side in unbounded Python ints —
+        # the device-side ServiceState.counters are int32 and would wrap
+        # within hours of sustained serving, silently emptying drains
+        self._slots_total = 0
+        self._rows_total = 0
+        self._drained_slots = 0
+        self._drained_rows = 0
+
+    # ------------------------------------------------------------- registry
+    def register_edge(
+        self,
+        edge: tuple[str, str],
+        *,
+        tenant: Optional[str] = None,
+        dep_type: Optional[DependencyType] = None,
+        k: Optional[int] = None,
+        rare_event_p: Optional[float] = None,
+        n0: float = DEFAULT_N0,
+        posterior: Optional[BetaPosterior] = None,
+        gamma: float = 0.1,
+        discount: float = 1.0,
+        floor_alpha: float = 0.5,
+        floor_C_spec_usd: Optional[float] = None,
+        floor_L_value_usd: Optional[float] = None,
+    ) -> int:
+        """Add one (tenant, edge) row; returns its table index.
+
+        The prior is taxonomy-keyed (``prior_params(dep_type, k=...)``)
+        unless an explicit ``posterior`` seeds the row (§12.1 data-seeded
+        deployment).  ``floor_*`` pin the row's trigger-2 credible floor
+        ``(1 - alpha) * C / (L_value + C)`` from its canonical decision
+        context; rows without one never breach.
+        """
+        key = (tenant, tuple(edge))
+        if key in self._registry:
+            raise ValueError(f"edge already registered: {key}")
+        if posterior is not None:
+            a0, b0 = float(posterior.alpha), float(posterior.beta)
+        elif dep_type is not None:
+            a0, b0 = prior_params(dep_type, k=k, rare_event_p=rare_event_p, n0=n0)
+        else:
+            raise ValueError("register_edge needs dep_type or posterior")
+        if a0 <= 0 or b0 <= 0:
+            raise ValueError("Beta parameters must be positive")
+        if not (0.0 < gamma < 1.0):
+            raise ValueError("gamma must be in (0, 1)")
+        if floor_C_spec_usd is not None and floor_L_value_usd is not None:
+            # same expression as DriftMonitor.check_credible_bound
+            floor = (1.0 - floor_alpha) * floor_C_spec_usd / (
+                floor_L_value_usd + floor_C_spec_usd)
+        else:
+            floor = -np.inf
+        row = len(self._rows)
+        self._rows.append(_RowConfig(
+            tenant=tenant, edge=tuple(edge), alpha0=a0, beta0=b0,
+            gamma=float(gamma), discount=float(discount), floor=float(floor),
+        ))
+        self._registry[key] = row
+        # the table grows lazily on the next tick (_ensure_state sees
+        # len(self._rows) > _built_rows), preserving live row state
+        return row
+
+    def row_index(self, edge: tuple[str, str],
+                  tenant: Optional[str] = None) -> int:
+        return self._registry[(tenant, tuple(edge))]
+
+    def row_key(self, row: int) -> tuple[Optional[str], tuple[str, str]]:
+        cfg = self._rows[row]
+        return cfg.tenant, cfg.edge
+
+    def row_gamma(self, row: int) -> float:
+        """The §7.5 gamma the row's lower-bound gate uses."""
+        return self._rows[row].gamma
+
+    @property
+    def n_rows(self) -> int:
+        return len(self._rows)
+
+    # ------------------------------------------------------------ state mgmt
+    def _build_state(self, keep: Optional[dict] = None) -> ServiceState:
+        n = len(self._rows)
+        if n == 0:
+            raise ValueError("no edges registered")
+        n_pad = _bucket(max(n, self.min_rows))
+        post = np.ones((n_pad, 2))
+        rowcfg = np.stack([np.full(n_pad, 0.5), np.ones(n_pad),
+                           np.full(n_pad, -np.inf)], 1)
+        flags = np.zeros((n_pad, 2), np.int32)
+        for i, cfg in enumerate(self._rows):
+            post[i] = cfg.alpha0, cfg.beta0
+            rowcfg[i] = cfg.gamma, cfg.discount, cfg.floor
+            flags[i, 0] = 1
+        tel = np.zeros((self.telemetry_capacity, len(TELEMETRY_FIELDS)))
+        tel[:, _COL["row"]] = -1.0        # empty slots filtered at drain
+        counters = np.zeros(2, np.int32)
+        if keep:
+            m = keep["post"].shape[0]
+            post[:m] = keep["post"]
+            flags[:m] = keep["flags"]
+            tel[:] = keep["tel"]
+            counters[:] = keep["counters"]
+
+        shardings = None
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            from ..sharding.rules import fleet_axis_spec
+
+            spec = fleet_axis_spec(self.mesh, n_pad, axis=self.axis_name)
+            if spec is not None:
+                row_sh = NamedSharding(self.mesh, spec)
+                rep = NamedSharding(self.mesh, PartitionSpec())
+                shardings = ServiceState(
+                    post=row_sh, rowcfg=row_sh, flags=row_sh,
+                    tel=rep, counters=rep,
+                )
+
+        state = ServiceState(
+            post=_f(post), rowcfg=_f(rowcfg),
+            flags=jnp.asarray(flags), tel=_f(tel),
+            counters=jnp.asarray(counters),
+        )
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        return state
+
+    def _ensure_state(self) -> ServiceState:
+        # config read (~0.2us) instead of jnp.result_type (~5us): the
+        # working float dtype only ever changes through jax_enable_x64
+        dtype = "float64" if jax.config.jax_enable_x64 else "float32"
+        if (self._state is not None and self._state_dtype == dtype
+                and len(self._rows) == self._built_rows):
+            return self._state
+        keep = None
+        if self._state is not None:
+            # preserve live posteriors / kill-switch state across a table
+            # growth or a dtype switch (f64 round-trip is value-exact for
+            # the f32 case; the f64 -> f32 direction re-rounds, as any
+            # dtype change must).  Only the rows that were materialized
+            # carry state — rows registered since then take their fresh
+            # configs.
+            st, built = self._state, self._built_rows
+            keep = {
+                "post": np.asarray(st.post, np.float64)[:built],
+                "flags": np.asarray(st.flags)[:built],
+                "tel": np.asarray(st.tel, np.float64),
+                "counters": np.asarray(st.counters),
+            }
+        self._state = self._build_state(keep)
+        self._state_dtype = dtype
+        self._built_rows = len(self._rows)
+        # per-tick constants, rebuilt only here (hot-path dispatch stays
+        # free of dtype machinery)
+        self._np_dtype = np.dtype(dtype)
+        self._zero = self._np_dtype.type(0.0)
+        self._cn = np.int32(self.credible_consecutive_n)
+        self._empty_out = (np.full(0, -1, np.int32),
+                          np.zeros(0, self._np_dtype))
+        return self._state
+
+    @property
+    def state(self) -> ServiceState:
+        return self._ensure_state()
+
+    # -------------------------------------------------------------- queries
+    def posterior_snapshot(self) -> np.ndarray:
+        """(n_rows, 2) alpha/beta copy of the live table."""
+        return np.asarray(self._ensure_state().post)[: self.n_rows].copy()
+
+    def posterior(self, row: int) -> BetaPosterior:
+        a, b = self.posterior_snapshot()[row]
+        return BetaPosterior.from_row(
+            a, b, discount=self._rows[row].discount)
+
+    def set_posterior(self, row: int, alpha: float, beta: float) -> None:
+        if alpha <= 0 or beta <= 0:
+            raise ValueError("Beta parameters must be positive")
+        st = self._ensure_state()
+        post = st.post.at[row].set(_f(np.array([alpha, beta])))
+        self._state = st._replace(post=post)
+
+    def enabled_snapshot(self) -> np.ndarray:
+        flags = np.asarray(self._ensure_state().flags)[: self.n_rows]
+        return flags[:, 0] > 0
+
+    def breach_runs(self) -> np.ndarray:
+        return np.asarray(self._ensure_state().flags)[: self.n_rows, 1].copy()
+
+    # ---------------------------------------------------------------- ticks
+    def observe(self, row: int, success: bool) -> None:
+        """Queue a settled outcome; applied (in order) on the next tick."""
+        row = int(row)
+        if row < 0 or row >= self.n_rows:
+            # same contract as tick(outcomes=...): a bad row must raise
+            # here, not silently scatter onto padding at the next tick
+            raise IndexError("outcome row out of range")
+        self._pending.append((row, bool(success)))
+
+    def tick(
+        self,
+        rows,
+        *,
+        alpha,
+        lambda_usd_per_s,
+        latency_s,
+        input_tokens,
+        output_tokens,
+        input_price,
+        output_price,
+        outcomes: Optional[Sequence[tuple[int, bool]]] = None,
+        use_lower_bound: Optional[bool] = None,
+        check_drift: bool = False,
+    ) -> TickDecisions:
+        """Answer B decision requests in one donated XLA call.
+
+        ``rows`` indexes the table; every other request field broadcasts
+        against it.  ``outcomes`` (plus anything queued via
+        :meth:`observe`) settle *before* the decisions are answered —
+        freshest-belief serving.  ``check_drift`` runs the in-graph
+        trigger-2 breach step on every touched row.
+
+        Request shapes bucket to powers of two (padding rows carry the -1
+        sentinel), so variable batch sizes share executables.  Host
+        arrays are handed to the jit'd call directly in the working dtype
+        — per-tick overhead is dispatch-bound, not transfer-bound.
+        """
+        state = self._ensure_state()
+        fdtype = self._np_dtype
+        rows = np.atleast_1d(np.asarray(rows, np.int32))
+        B = int(rows.shape[0])
+        if B and (rows.min() < 0 or rows.max() >= self.n_rows):
+            raise IndexError("request row out of range")
+        Bp = _bucket(B)
+        req_row = np.full(Bp, -1, np.int32)
+        req_row[:B] = rows
+        reqs = np.zeros((Bp, 7), fdtype)
+        for j, x in enumerate((alpha, lambda_usd_per_s, latency_s,
+                               input_tokens, output_tokens, input_price,
+                               output_price)):
+            reqs[:B, j] = np.asarray(x, fdtype)
+
+        out_row = out_x = None
+        if outcomes is not None:
+            outs = [(int(r), bool(s)) for r, s in outcomes]
+            if any(r < 0 or r >= self.n_rows for r, _ in outs):
+                raise IndexError("outcome row out of range")
+            Sp = _bucket(len(outs), lo=1) if outs else 0
+            out_row = np.full(Sp, -1, np.int32)
+            out_x = np.zeros(Sp, fdtype)
+            for i, (r, s) in enumerate(outs):
+                out_row[i], out_x[i] = r, float(s)
+        return self.tick_packed(
+            req_row, reqs, batch=B, out_row=out_row, out_x=out_x,
+            use_lower_bound=use_lower_bound, check_drift=check_drift)
+
+    def tick_packed(
+        self,
+        row: np.ndarray,
+        reqs: np.ndarray,
+        *,
+        batch: Optional[int] = None,
+        out_row: Optional[np.ndarray] = None,
+        out_x: Optional[np.ndarray] = None,
+        use_lower_bound: Optional[bool] = None,
+        check_drift: bool = False,
+    ) -> TickDecisions:
+        """The zero-copy hot path: the caller hands the packed request
+        block its batcher accumulated between ticks — ``row`` (Bp,) int32
+        with -1 padding sentinels, ``reqs`` (Bp, 7) in the working float
+        dtype with columns [alpha, lambda_usd_per_s, latency_s, in_tok,
+        out_tok, in_price, out_price] — and the tick dispatches with no
+        per-request conversion or validation (out-of-range rows clamp;
+        :meth:`tick` is the validating wrapper).  ``out_row``/``out_x``
+        are the equivalently packed settled outcomes."""
+        state = self._ensure_state()
+        if self._pending:
+            # outcomes queued via observe() settle first (arrival order),
+            # ahead of this call's packed outcomes
+            pend, self._pending = self._pending, []
+            extra_r = np.fromiter((r for r, _ in pend), np.int32, len(pend))
+            extra_x = np.fromiter((float(s) for _, s in pend),
+                                  self._np_dtype, len(pend))
+            if out_row is None:
+                out_row, out_x = self._empty_out
+            out_row = np.concatenate([extra_r, out_row])
+            out_x = np.concatenate([extra_x, out_x])
+            Sp = _bucket(out_row.shape[0], lo=1)
+            if Sp != out_row.shape[0]:
+                pad_r = np.full(Sp, -1, np.int32)
+                pad_r[: out_row.shape[0]] = out_row
+                pad_x = np.zeros(Sp, self._np_dtype)
+                pad_x[: out_x.shape[0]] = out_x
+                out_row, out_x = pad_r, pad_x
+        elif out_row is None:
+            out_row, out_x = self._empty_out
+        ulb = self.use_lower_bound if use_lower_bound is None else bool(use_lower_bound)
+        fn = _tick_donated if self.donate else _tick
+        new_state, rows_out, bools, drift = fn(
+            state, self._zero, row, reqs, out_row, out_x, self._cn,
+            use_lower_bound=ulb, check_drift=check_drift,
+        )
+        self._state = new_state
+        n_real = int((row >= 0).sum())
+        self._slots_total += int(row.shape[0])
+        self._rows_total += n_real
+        # sentinels are tail-only by the packing convention, so the real
+        # batch defaults to the valid count — never report padding slots
+        # as decisions
+        return TickDecisions(
+            batch=n_real if batch is None else batch,
+            _rows=rows_out, _bools=bools, _drift=drift)
+
+    def apply_outcomes(
+        self, outcomes: Optional[Sequence[tuple[int, bool]]] = None
+    ) -> None:
+        """Settle outcomes without answering any requests (a B=0 tick)."""
+        self.tick(
+            np.zeros(0, np.int32), alpha=0.0, lambda_usd_per_s=0.0,
+            latency_s=0.0, input_tokens=0, output_tokens=0,
+            input_price=0.0, output_price=0.0, outcomes=outcomes,
+        )
+
+    def decide(
+        self,
+        edge: Optional[tuple[str, str]] = None,
+        *,
+        tenant: Optional[str] = None,
+        row: Optional[int] = None,
+        posterior: Optional[BetaPosterior] = None,
+        alpha: float,
+        lambda_usd_per_s: float,
+        latency_s: float,
+        input_tokens: int,
+        output_tokens: float,
+        input_price: float,
+        output_price: float,
+        use_lower_bound: Optional[bool] = None,
+    ) -> DecisionResult:
+        """Single-request convenience (the ``serving.spec_bridge`` route):
+        a B=1 tick returning a scalar ``DecisionResult`` whose floats are
+        bitwise-f64 equal to ``decision.evaluate``.  ``posterior=`` syncs
+        the row's table params first (the bridge keeps the caller-held
+        ``BetaPosterior`` authoritative; a disabled row answers WAIT)."""
+        if row is None:
+            if edge is None:
+                raise ValueError("decide needs edge or row")
+            row = self.row_index(edge, tenant)
+        if posterior is not None:
+            self.set_posterior(row, posterior.alpha, posterior.beta)
+        d = self.tick(
+            [row], alpha=alpha, lambda_usd_per_s=lambda_usd_per_s,
+            latency_s=latency_s, input_tokens=input_tokens,
+            output_tokens=output_tokens, input_price=input_price,
+            output_price=output_price, use_lower_bound=use_lower_bound,
+        )
+        return DecisionResult(
+            decision=Decision.SPECULATE if bool(d.speculate[0]) else Decision.WAIT,
+            EV_usd=float(d.EV_usd[0]),
+            threshold_usd=float(d.threshold_usd[0]),
+            C_spec_usd=float(d.C_spec_usd[0]),
+            L_value_usd=float(d.L_value_usd[0]),
+            P_used=float(d.P_used[0]),
+        )
+
+    # ------------------------------------------------------------ telemetry
+    def drain_telemetry(self) -> TelemetryBatch:
+        """Pull the per-decision USD rows written since the last drain
+        (one device sync total — the D2 flush path).  The ring holds the
+        most recent ``telemetry_capacity`` *slots* (a ragged tick consumes
+        its padded bucket; sentinel slots are filtered here); real rows
+        evicted before this drain are counted as ``dropped`` — size the
+        ring to the tick cadence."""
+        st = self._ensure_state()
+        tel = np.asarray(st.tel)
+        # host-side unbounded totals (the device counters are int32 and
+        # may wrap on long-lived services; they remain for in-graph use)
+        slots, total_rows = self._slots_total, self._rows_total
+        R = tel.shape[0]
+        new_slots = slots - self._drained_slots
+        take = min(new_slots, R)
+        window = tel[R - take:] if take else tel[:0]
+        valid = window[:, _COL["row"]] >= 0
+        new_rows = total_rows - self._drained_rows
+        self._drained_slots = slots
+        self._drained_rows = total_rows
+        fields = {
+            name: window[valid, j].copy()
+            for j, name in enumerate(TELEMETRY_FIELDS)
+        }
+        return TelemetryBatch(fields=fields,
+                              dropped=new_rows - int(valid.sum()))
+
+    # ----------------------------------------------------------- drift fold
+    def drift_rows(self, decisions: TickDecisions) -> list[
+            tuple[Optional[str], tuple[str, str]]]:
+        """(tenant, edge) labels of rows the tick's drift check tripped."""
+        mask = decisions.drift_triggered[: self.n_rows]
+        return [self.row_key(i) for i in np.flatnonzero(mask)]
+
+
+# ---------------------------------------------------------------------------
+# §12.2–12.4 folded onto the posterior table: a calibration round as array
+# ops over a snapshot instead of per-record Python.
+# ---------------------------------------------------------------------------
+def _posterior_rows(posteriors, n: int):
+    """(a0, b0, discount, s0, f0) arrays from BetaPosterior objects or a
+    raw (n, 2) snapshot."""
+    if isinstance(posteriors, np.ndarray) or (
+            posteriors and not isinstance(posteriors[0], BetaPosterior)):
+        rows = np.asarray(posteriors, float).reshape(n, 2)
+        return (rows[:, 0].copy(), rows[:, 1].copy(), np.ones(n),
+                np.zeros(n, int), np.zeros(n, int))
+    a = np.array([p.alpha for p in posteriors], float)
+    b = np.array([p.beta for p in posteriors], float)
+    d = np.array([p.discount for p in posteriors], float)
+    s = np.array([p.successes for p in posteriors], int)
+    f = np.array([p.failures for p in posteriors], int)
+    return a, b, d, s, f
+
+
+def shadow_mode_batch(
+    edges: Sequence[tuple[str, str]],
+    posteriors,
+    trials: Sequence[Sequence[tuple[Any, Any]]],
+    *,
+    discounts=None,
+    graded_subsets: Optional[Sequence[Sequence[tuple[Any, Any, bool]]]] = None,
+    thresholds: Sequence[float] = (0.80, 0.85, 0.90, 0.95, 0.99),
+    output_token_counts: Optional[Sequence[Sequence[float]]] = None,
+    cancel_fractions: Optional[Sequence[Sequence[float]]] = None,
+    n_shadow: int = 100,
+    stability_window: int = 50,
+    stability_tol: float = 0.05,
+) -> list[ShadowReport]:
+    """§12.2 shadow mode for a whole fleet of edges in one pass.
+
+    ``posteriors`` is either a list of ``BetaPosterior`` (never mutated —
+    the same zero-exposure contract as the scalar stage) or a raw
+    ``(R, 2)`` snapshot of the online service's table (then ``discounts``
+    supplies the per-row forgetting factors).  Tier checks call the same
+    ``check_success`` per trial as the scalar stage; the posterior
+    recurrence, convergence windows and token-EMA run as array ops across
+    all R rows at once.  Per-row reports match scalar ``shadow_mode``
+    bitwise at f64 (posteriors, means, F1) and exactly (flags).
+    """
+    R = len(edges)
+    if len(trials) != R:
+        raise ValueError("trials must align with edges")
+    a, b, d, s0, f0 = _posterior_rows(posteriors, R)
+    if discounts is not None:
+        d = np.broadcast_to(np.asarray(discounts, float), (R,)).copy()
+    policy = TierPolicy()
+    T = max((len(t) for t in trials), default=0)
+    ok = np.zeros((R, max(T, 1)))
+    mask = np.zeros((R, max(T, 1)), bool)
+    for r, tr in enumerate(trials):
+        for t, (i_actual, i_hat) in enumerate(tr):
+            ok[r, t] = float(check_success(i_actual, i_hat, policy).success)
+            mask[r, t] = True
+
+    # vectorized discount recurrence (bitwise the scalar two-step update)
+    means = np.zeros((R, max(T, 1)))
+    for t in range(T):
+        mt = mask[:, t]
+        x = ok[:, t]
+        a2 = a * d + x
+        b2 = b * d + (1.0 - x)
+        a = np.where(mt, a2, a)
+        b = np.where(mt, b2, b)
+        means[:, t] = a / (a + b)
+
+    reports = []
+    for r, edge in enumerate(edges):
+        n_t = len(trials[r])
+        row_means = list(means[r, :n_t])
+        converged = n_t >= n_shadow and _stability_converged(
+            row_means, stability_window, stability_tol)
+        graded = graded_subsets[r] if graded_subsets else ()
+        best_thr, best_f1 = _tier2_threshold_sweep(graded, thresholds)
+        est = TokenEstimator()
+        for tok in (output_token_counts[r] if output_token_counts else ()):
+            est.observe(tok)
+        cancels = cancel_fractions[r] if cancel_fractions else ()
+        rho_mean = statistics.fmean(cancels) if cancels else 0.5
+        s_new = int(ok[r, :n_t].sum())
+        reports.append(ShadowReport(
+            edge=tuple(edge),
+            trials=n_t,
+            posterior=BetaPosterior(
+                alpha=float(a[r]), beta=float(b[r]),
+                successes=int(s0[r]) + s_new,
+                failures=int(f0[r]) + (n_t - s_new),
+                discount=float(d[r]),
+            ),
+            converged=converged,
+            best_tier2_threshold=best_thr,
+            tier2_f1=max(best_f1, 0.0),
+            token_estimator=est,
+            rho_mean=rho_mean,
+        ))
+    return reports
+
+
+def canary_batch(
+    control_latency_s,
+    control_cost_usd,
+    sweeps: Sequence[dict[float, tuple[float, float]]],
+    chosen_alphas,
+    P,
+    C_spec,
+    L_upstream_s,
+    lambda_declared,
+    *,
+    budget_guardrail_usd=None,
+    consistency_band: float = 0.5,
+) -> list[CanaryReport]:
+    """§12.3 canary for R edges in one pass: the implied-lambda recovery
+    and audit verdicts vectorize over the fleet (``P`` typically the
+    posterior-snapshot means of the online table); the per-arm Pareto /
+    promotion logic reuses the scalar code per row.  Reports match scalar
+    ``canary`` bitwise at f64 (``lambda_implied``) and exactly (audit
+    strings, promote flags, Pareto sets).
+    """
+    R = len(sweeps)
+
+    def rvec(x):
+        return np.broadcast_to(np.asarray(x, float), (R,))
+
+    ctrl_lat, ctrl_cost = rvec(control_latency_s), rvec(control_cost_usd)
+    ca, P = rvec(chosen_alphas), rvec(P)
+    C, L, lam_dec = rvec(C_spec), rvec(L_upstream_s), rvec(lambda_declared)
+    if np.any((P < 0.0) | (P > 1.0)):
+        raise ValueError("P must be in [0, 1]")
+    if np.any((ca < 0.0) | (ca > 1.0)):
+        raise ValueError("alpha must be in [0, 1]")
+    if np.any(P <= 0.0) or np.any(L <= 0.0):
+        raise ValueError("implied lambda requires P > 0 and L > 0")
+    # same expression order as decision.implied_lambda -> bitwise at f64
+    lam_imp = ((1.0 - ca) * C + (1.0 - P) * C) / (P * L)
+    # divide only where declared > 0 (the scalar guard, warning-free)
+    ratio = np.divide(lam_imp, lam_dec, where=lam_dec > 0.0,
+                      out=np.full(R, np.inf))
+    audit = np.where(
+        ratio > 1.0 + consistency_band, "refresh_lambda",
+        np.where(ratio < 1.0 - consistency_band, "inspect_declared",
+                 "consistent"))
+
+    guard = None if budget_guardrail_usd is None else rvec(budget_guardrail_usd)
+    reports = []
+    for r in range(R):
+        # per-arm logic is the scalar stage's own helper — only the
+        # implied-lambda / audit math above is worth vectorizing
+        arms, pareto, promote = _canary_sweep_eval(
+            sweeps[r], float(ca[r]), float(ctrl_lat[r]), float(ctrl_cost[r]),
+            None if guard is None else float(guard[r]))
+        reports.append(CanaryReport(
+            arms=arms,
+            pareto_alphas=pareto,
+            lambda_implied=float(lam_imp[r]),
+            lambda_declared=float(lam_dec[r]),
+            audit=str(audit[r]),
+            promote=promote,
+        ))
+    return reports
+
+
+def online_calibration_batch(
+    n_rows: int,
+    row_index,
+    P_mean,
+    has_outcome,
+    success,
+    *,
+    committed=None,
+    tier3_sampled=None,
+    tier3_accept=None,
+    tokens_generated=None,
+    output_tokens_est=None,
+    bucket_width: float = 0.1,
+    tier2_tolerance: float = 0.05,
+    cov_threshold: float = 0.5,
+    quarters_since_lambda_refresh=0,
+) -> list[OnlineReport]:
+    """§12.4 continuous checks for R edges over one flat decision-row
+    batch (the online service's telemetry layout: ``row_index`` maps each
+    decision row onto the posterior table).
+
+    The per-record work — calibration bucketing, success-rate sums,
+    tier-2 false-accept and token-CoV masks — runs as array ops over all
+    M rows at once; per-(row, bucket) statistics then reduce via
+    ``np.add.at``.  Reports match scalar ``online_calibration`` on the
+    equivalent per-edge ``TelemetryLog`` bitwise (rates, CIs, CoV) and
+    exactly (flags).
+    """
+    row_index = np.asarray(row_index, int)
+    M = row_index.shape[0]
+    if M and (row_index.min() < 0 or row_index.max() >= n_rows):
+        # same contract as tick()/observe(): a bad row (including the
+        # ring's -1 padding sentinels — filter a drained batch first)
+        # must raise, not wrap into the last edge's stats
+        raise IndexError("row_index out of range")
+
+    def mvec(x, fill=0.0, dtype=float):
+        if x is None:
+            return np.full(M, fill, dtype)
+        return np.broadcast_to(np.asarray(x, dtype), (M,))
+
+    P_mean = mvec(P_mean)
+    has_outcome = mvec(has_outcome, False, bool)
+    success = mvec(success, False, bool)
+    committed = mvec(committed, False, bool)
+    tier3_sampled = mvec(tier3_sampled, False, bool)
+    tier3_accept = mvec(tier3_accept, False, bool)
+    toks = mvec(tokens_generated, np.nan)
+    toks_est = mvec(output_tokens_est, 0.0)
+    quarters = np.broadcast_to(np.asarray(quarters_since_lambda_refresh, int),
+                               (n_rows,))
+
+    # ---- calibration buckets: vectorized bucket ids, merged through the
+    # same rounded-midpoint key as TelemetryLog.calibration_buckets
+    n_ids = int(1.0 / bucket_width) + 2
+    # (i + 0.5) * width is a robust representative P for integer id i
+    keys = np.array([bucket_key((i + 0.5) * bucket_width, bucket_width)
+                     for i in range(n_ids)])
+    # ids computed exactly as the scalar int() truncation (P_mean >= 0)
+    ids = np.minimum((P_mean / bucket_width + 1e-9).astype(int), n_ids - 1)
+    uniq_keys = np.unique(keys)
+    key_of_id = np.searchsorted(uniq_keys, keys)
+    K = uniq_keys.shape[0]
+    succ_mat = np.zeros((n_rows, K), np.int64)
+    n_mat = np.zeros((n_rows, K), np.int64)
+    sel = has_outcome
+    np.add.at(n_mat, (row_index[sel], key_of_id[ids[sel]]), 1)
+    np.add.at(succ_mat, (row_index[sel], key_of_id[ids[sel]]),
+              success[sel].astype(np.int64))
+
+    # ---- tier-2 false accepts / token CoV, masked per row
+    far_sel = committed & tier3_sampled
+    far_num = np.zeros(n_rows, np.int64)
+    far_den = np.zeros(n_rows, np.int64)
+    np.add.at(far_den, row_index[far_sel], 1)
+    np.add.at(far_num, row_index[far_sel],
+              (~tier3_accept[far_sel]).astype(np.int64))
+    tok_sel = ~np.isnan(toks) & (toks_est > 0)
+    # group token ratios per row once (stable sort preserves log order
+    # within a row, keeping np.std bitwise vs the scalar twin) — the per
+    # -row report loop then slices instead of re-scanning all M records
+    tok_rows = row_index[tok_sel]
+    tok_ratios = toks[tok_sel] / toks_est[tok_sel]
+    tok_order = np.argsort(tok_rows, kind="stable")
+    tok_rows = tok_rows[tok_order]
+    tok_ratios = tok_ratios[tok_order]
+    tok_start = np.searchsorted(tok_rows, np.arange(n_rows))
+    tok_end = np.searchsorted(tok_rows, np.arange(n_rows), side="right")
+
+    reports = []
+    for r in range(n_rows):
+        buckets = []
+        overpredicted = []
+        for kk in range(K):
+            n = int(n_mat[r, kk])
+            if n == 0:
+                continue
+            bucket, over = _calibration_bucket(
+                float(uniq_keys[kk]), int(succ_mat[r, kk]) / n, n,
+                bucket_width)
+            buckets.append(bucket)
+            overpredicted.append(over)
+        monotonic_over = len(overpredicted) >= 2 and all(overpredicted)
+        den = int(far_den[r])
+        far = (int(far_num[r]) / den) if den else None
+        row_ratios = tok_ratios[tok_start[r]:tok_end[r]]
+        cov = float(np.std(row_ratios, ddof=1)) if row_ratios.shape[0] >= 2 else None
+        reports.append(OnlineReport(
+            buckets=buckets,
+            monotonic_overprediction=monotonic_over,
+            tier2_false_accept_rate=far,
+            tier2_needs_tightening=far is not None and far > tier2_tolerance,
+            token_cov=cov,
+            uncertain_cost=cov is not None and cov > cov_threshold,
+            lambda_refresh_due=int(quarters[r]) >= 1,
+        ))
+    return reports

@@ -69,6 +69,28 @@ class BetaPosterior:
         return cls(alpha=p * n0, beta=(1.0 - p) * n0, discount=discount)
 
     @classmethod
+    def from_row(
+        cls,
+        alpha: float,
+        beta: float,
+        *,
+        successes: int = 0,
+        failures: int = 0,
+        discount: float = 1.0,
+    ) -> "BetaPosterior":
+        """Rehydrate from a structure-of-arrays table row — the interop
+        point with the online decision service's device-resident ``(N, 2)``
+        posterior table (``repro.core.online``)."""
+        if alpha <= 0 or beta <= 0:
+            raise ValueError("Beta parameters must be positive")
+        return cls(alpha=float(alpha), beta=float(beta),
+                   successes=successes, failures=failures, discount=discount)
+
+    def as_row(self) -> tuple[float, float]:
+        """(alpha, beta) — the table-row projection of this belief."""
+        return self.alpha, self.beta
+
+    @classmethod
     def data_seeded(
         cls,
         dep_type: DependencyType,

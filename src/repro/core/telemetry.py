@@ -20,11 +20,21 @@ from typing import Literal, Optional
 
 from .decision import implied_lambda
 
-__all__ = ["SpeculationDecision", "TelemetryLog", "new_decision_id"]
+__all__ = ["SpeculationDecision", "TelemetryLog", "bucket_key", "new_decision_id"]
 
 
 def new_decision_id() -> str:
     return str(uuid.uuid4())
+
+
+def bucket_key(p_mean: float, width: float) -> float:
+    """§12.4 calibration-bucket key for one predicted P: fp-robust floor
+    to a bucket index, rounded midpoint, capped at the last bucket.
+    Shared by :meth:`TelemetryLog.calibration_buckets` and the batched
+    ``repro.core.online.online_calibration_batch`` so the two bucketings
+    can never diverge."""
+    mid = (int(p_mean / width + 1e-9) + 0.5) * width
+    return round(min(mid, 1.0 - width / 2), 6)
 
 
 @dataclasses.dataclass
@@ -227,8 +237,7 @@ class TelemetryLog:
             ok = r.success
             if ok is None:
                 continue
-            mid = (int(r.P_mean / width + 1e-9) + 0.5) * width  # fp-robust floor
-            buckets[round(min(mid, 1.0 - width / 2), 6)].append(ok)
+            buckets[bucket_key(r.P_mean, width)].append(ok)
         return {
             mid: (sum(v) / len(v), len(v)) for mid, v in sorted(buckets.items())
         }

@@ -17,11 +17,12 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from ..core.decision import Decision, DecisionInputs, evaluate
+from ..core.decision import Decision, DecisionInputs, DecisionResult, evaluate
 from ..core.posterior import BetaPosterior
 from ..core.pricing import TwoRateTokenCost, get_pricing
 from ..core.streaming import fractional_waste
 from ..core.success import TierPolicy, check_success
+from ..core.taxonomy import DependencyType
 from ..core.workflow import Operation
 from .engine import GenerationResult, ServingEngine
 
@@ -88,6 +89,17 @@ class ThreadedSpeculativeRunner:
     i_hat while the upstream generates on the main thread.  On upstream
     completion the tier check decides commit / cancel+re-execute, exactly
     the D1 mechanics, with wall-clock (not simulated) latency.
+
+    With ``service=`` (an ``repro.core.online.OnlineDecisionService``) the
+    D4 gate routes through the jit'd batched decision service instead of
+    the scalar ``decision.evaluate``: the runner registers (or reuses) a
+    ``(tenant, edge)`` row, ``decide`` syncs the caller's posterior into
+    the device table and answers via a B=1 tick.  The scalar path is kept
+    (``service=None``, the default) and the two are pinned bitwise-f64
+    equal — decision flag, EV, threshold and margin — by the parity
+    regression in tests/test_online_service.py (EV under
+    ``use_lower_bound=True`` carries the established betaincinv-vs-scipy
+    quantile allowance).
     """
 
     def __init__(
@@ -95,10 +107,39 @@ class ThreadedSpeculativeRunner:
         upstream: Callable[[], tuple[Any, GenerationResult]],
         downstream: EngineOp,
         tier_policy: TierPolicy | None = None,
+        *,
+        service=None,
+        edge: tuple[str, str] | None = None,
+        tenant: str | None = None,
+        gamma: float = 0.1,
     ) -> None:
         self.upstream = upstream
         self.downstream = downstream
         self.tier_policy = tier_policy or TierPolicy()
+        self.service = service
+        self.tenant = tenant
+        self.gamma = gamma
+        self.edge = tuple(edge) if edge is not None else ("upstream", downstream.name)
+        self.service_row: Optional[int] = None
+        if service is not None:
+            try:
+                self.service_row = service.row_index(self.edge, tenant)
+                row_gamma = service.row_gamma(self.service_row)
+                if row_gamma != gamma:
+                    # the §7.5 path gates on the ROW's gamma — a silently
+                    # different runner gamma would break the scalar-route
+                    # parity this bridge pins
+                    raise ValueError(
+                        f"edge {self.edge!r} (tenant={tenant!r}) is "
+                        f"registered with gamma={row_gamma}, runner asked "
+                        f"for gamma={gamma}")
+            except KeyError:
+                # neutral prior: decide() always syncs the caller-held
+                # posterior before gating, so the registration prior never
+                # reaches a decision
+                self.service_row = service.register_edge(
+                    self.edge, tenant=tenant,
+                    dep_type=DependencyType.CONDITIONAL_OUTPUT, gamma=gamma)
 
     def run_speculative(self, i_hat: Any) -> SpeculativeEdgeResult:
         cancel = threading.Event()
@@ -145,6 +186,12 @@ class ThreadedSpeculativeRunner:
             downstream_output=out, i_hat=i_hat,
         )
 
+    def observe(self, success: bool) -> None:
+        """Report a settled edge outcome to the attached decision service
+        (queued host-side; the service applies it on its next tick)."""
+        if self.service is not None and self.service_row is not None:
+            self.service.observe(self.service_row, success)
+
     def run_sequential(self) -> SpeculativeEdgeResult:
         t0 = time.perf_counter()
         upstream_out, _ = self.upstream()
@@ -156,10 +203,29 @@ class ThreadedSpeculativeRunner:
             upstream_output=upstream_out, downstream_output=out, i_hat=None,
         )
 
-    def decide(self, posterior: BetaPosterior, alpha: float,
-               lambda_usd_per_s: float, latency_savings_s: float) -> Decision:
+    def decide_full(self, posterior: BetaPosterior, alpha: float,
+                    lambda_usd_per_s: float, latency_savings_s: float,
+                    *, use_lower_bound: bool = False) -> DecisionResult:
+        """The D4 gate with the full result row (EV / threshold / margin in
+        USD).  Routed through the attached online decision service when one
+        was given at construction; the scalar ``decision.evaluate`` path
+        otherwise.  ``use_lower_bound`` gates on the §7.5 one-sided
+        (1-gamma) lower credible bound instead of the posterior mean."""
         pricing = get_pricing(self.downstream.provider, self.downstream.model)
-        res = evaluate(DecisionInputs(
+        if self.service is not None:
+            return self.service.decide(
+                row=self.service_row,
+                posterior=posterior,
+                alpha=alpha,
+                lambda_usd_per_s=lambda_usd_per_s,
+                latency_s=latency_savings_s,
+                input_tokens=32,
+                output_tokens=self.downstream.max_new_tokens,
+                input_price=pricing.input_price_per_token,
+                output_price=pricing.output_price_per_token,
+                use_lower_bound=use_lower_bound,
+            )
+        return evaluate(DecisionInputs(
             P=posterior.mean,
             alpha=alpha,
             lambda_usd_per_s=lambda_usd_per_s,
@@ -168,5 +234,13 @@ class ThreadedSpeculativeRunner:
             output_tokens=self.downstream.max_new_tokens,
             input_price=pricing.input_price_per_token,
             output_price=pricing.output_price_per_token,
-        ))
-        return res.decision
+            P_lower_bound=(posterior.lower_bound(self.gamma)
+                           if use_lower_bound else None),
+        ), use_lower_bound=use_lower_bound)
+
+    def decide(self, posterior: BetaPosterior, alpha: float,
+               lambda_usd_per_s: float, latency_savings_s: float,
+               *, use_lower_bound: bool = False) -> Decision:
+        return self.decide_full(
+            posterior, alpha, lambda_usd_per_s, latency_savings_s,
+            use_lower_bound=use_lower_bound).decision

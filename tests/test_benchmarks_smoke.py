@@ -30,9 +30,19 @@ def test_smoke_mode_parity_and_schema():
     assert es["parity"]["grid_reroute_fraction_bitwise"] is True
     assert es["parity"]["grid_reroute_max_rel_error"] <= 1e-12
     assert es["segments"] > 1
+    # online decision service gate: the batched tick must have passed the
+    # bitwise-f64 decide parity (and §7.5 flag parity) before timing, and
+    # the published pareto rows must carry the f64 dtype label matching
+    # the parity tier
+    osvc = rec["online_service"]
+    assert osvc["parity"]["bitwise_f64_vs_scalar_evaluate"] is True
+    assert osvc["parity"]["lower_bound_flags_match"] is True
+    assert rec["pareto_dtype"] == "float64"
+    assert rec["credible_bound"]["pareto_dtype"] == "float64"
     # tiny sizes: the smoke path must never masquerade as the real record
     assert rec["episodes"] < 100
     assert es["episodes"] < 100
+    assert max(b["B"] for b in osvc["batches"]) < 64
 
 
 def test_checked_in_bench_files_carry_required_schema():
@@ -54,6 +64,16 @@ def test_checked_in_bench_files_carry_required_schema():
     assert es["parity"]["bitwise_f64_vs_fleet_replay"] is True
     assert [r["devices"] for r in es["scaling"]] == [1, 2, 4, 8]
     assert all(r["shards"] == r["devices"] for r in es["scaling"])
+    # acceptance shape: the online decision service row — B up to 1024,
+    # bitwise decide parity asserted pre-timing, and the warm B=1024 tick
+    # >= 20x faster per decision than the scalar decide loop
+    osvc = fleet["online_service"]
+    assert osvc["parity"]["bitwise_f64_vs_scalar_evaluate"] is True
+    assert [b["B"] for b in osvc["batches"]] == [1, 64, 1024]
+    assert osvc["batches"][-1]["speedup"] >= 20.0
+    # the published pareto rows carry the dtype of the parity tier
+    assert fleet["pareto_dtype"] == "float64"
+    assert fleet["credible_bound"]["pareto_dtype"] == "float64"
 
 
 def test_smoke_rejects_malformed_record():

@@ -177,6 +177,80 @@ def test_episode_sharded_fleet_matches_unsharded():
     assert ok == "True" and int(shards) == 8
 
 
+def test_online_service_row_sharded_matches_unsharded():
+    """The online decision service's posterior table shard_map'd over 8
+    forced host devices (rows partitioned on the 1-D fleet mesh) answers a
+    mixed tick sequence — decisions incl. §7.5, outcome settlement, drift
+    checks, telemetry — bitwise-equal (f64) to the unsharded service, the
+    table really is partitioned 8-ways after warm donated ticks, and an
+    indivisible mesh extent (3 of 8 devices over 16 rows) falls back to
+    the unsharded executable with identical results."""
+    out = run_subprocess("""
+        import numpy as np
+        from jax.experimental import enable_x64
+        from jax.sharding import Mesh
+        from repro.core.online import OnlineDecisionService
+        from repro.core.taxonomy import DependencyType
+        from repro.launch.mesh import make_fleet_mesh
+
+        with enable_x64():
+            def build(mesh):
+                svc = OnlineDecisionService(mesh=mesh,
+                                            credible_consecutive_n=2)
+                for i in range(16):
+                    svc.register_edge(
+                        ("u", f"v{i}"),
+                        dep_type=DependencyType.ROUTER_K_WAY, k=2 + i % 5,
+                        discount=(0.97 if i % 3 == 0 else 1.0),
+                        floor_alpha=0.5, floor_C_spec_usd=0.01,
+                        floor_L_value_usd=0.002 + 0.001 * i)
+                return svc
+
+            def run(svc, seed=42):
+                rng = np.random.default_rng(seed)
+                ticks = []
+                for t in range(3):
+                    B = 40
+                    d = svc.tick(
+                        rng.integers(0, 16, B),
+                        alpha=rng.uniform(0, 1, B), lambda_usd_per_s=0.05,
+                        latency_s=rng.uniform(0.1, 2, B), input_tokens=20,
+                        output_tokens=rng.uniform(10, 200, B),
+                        input_price=1e-6, output_price=1e-5,
+                        outcomes=[(int(r), bool(s)) for r, s in zip(
+                            rng.integers(0, 16, 9), rng.integers(0, 2, 9))],
+                        use_lower_bound=(t == 1), check_drift=True)
+                    ticks.append((d.EV_usd.copy(), d.margin_usd.copy(),
+                                  d.speculate.copy(),
+                                  d.drift_triggered.copy()))
+                return (ticks, svc.posterior_snapshot(),
+                        svc.enabled_snapshot(), svc.breach_runs(),
+                        svc.drain_telemetry().fields["margin_usd"])
+
+            base = run(build(None))
+            sharded_svc = build(make_fleet_mesh())
+            sharded = run(sharded_svc)
+            ok = all(
+                np.array_equal(a, b)
+                for t0, t1 in zip(base[0], sharded[0])
+                for a, b in zip(t0, t1)
+            ) and all(np.array_equal(base[i], sharded[i])
+                      for i in (1, 2, 3, 4))
+            shards = len(sharded_svc.state.post.sharding.device_set)
+
+            # indivisible fallback: 3-device fleet mesh over 16 rows
+            mesh3 = Mesh(np.array(jax.devices()[:3]), ("fleet",))
+            fb_svc = build(mesh3)
+            fb = run(fb_svc)
+            fb_ok = all(np.array_equal(base[i], fb[i]) for i in (1, 2, 3, 4))
+            fb_shards = len(fb_svc.state.post.sharding.device_set)
+        print("OK", ok, shards, fb_ok, fb_shards)
+    """)
+    _, ok, shards, fb_ok, fb_shards = out.split()
+    assert ok == "True" and int(shards) == 8
+    assert fb_ok == "True" and int(fb_shards) == 1
+
+
 def test_gpipe_on_pod_axis_with_dp():
     """PP on one axis composed with DP on the other (2 stages x 4 dp)."""
     out = run_subprocess("""
