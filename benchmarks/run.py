@@ -48,6 +48,16 @@ _ES_KEYS = {
 }
 _ROWS_KEYS = {"module", "rows"}
 
+# BENCH_frontend.json schema (see frontend_load.frontend_record)
+_FRONTEND_KEYS = {
+    "benchmark", "seed", "offered_rate_hz", "duration_s", "requests",
+    "config", "decisions_per_s", "shed_rate", "latency_ms", "ticks",
+    "deadline_ticks", "full_ticks", "stats", "parity", "fault_matrix",
+    "resilience_events", "usd_attribution",
+}
+_FRONTEND_FAULTS = {"exception_burst", "hung_tick", "tenant_flood",
+                    "drift_flip"}
+
 
 def _require(present, required, what: str) -> None:
     missing = sorted(required - set(present))
@@ -84,6 +94,25 @@ def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
         _require(row, _OS_BATCH_KEYS, f"{what}.online_service.batches")
 
 
+def validate_frontend_record(rec: dict, what: str = "frontend record") -> None:
+    """Assert the BENCH_frontend.json shape (full and --smoke records)."""
+    _require(rec, _FRONTEND_KEYS, what)
+    _require(rec["latency_ms"], {"p50", "p99", "max"}, f"{what}.latency_ms")
+    _require(rec["config"], {"max_batch", "deadline_s", "bulkhead_limit"},
+             f"{what}.config")
+    _require(rec["parity"],
+             {"service_vs_scalar_bitwise_f64",
+              "fallback_vs_scalar_bitwise_f64"},
+             f"{what}.parity")
+    if not (rec["parity"]["service_vs_scalar_bitwise_f64"]
+            and rec["parity"]["fallback_vs_scalar_bitwise_f64"]):
+        raise AssertionError(f"{what}: parity gate recorded false")
+    _require(rec["fault_matrix"], _FRONTEND_FAULTS, f"{what}.fault_matrix")
+    for name in _FRONTEND_FAULTS:
+        _require(rec["fault_matrix"][name], {"events"},
+                 f"{what}.fault_matrix.{name}")
+
+
 def validate_bench_files() -> list[str]:
     """Schema-check every checked-in BENCH_*.json; returns the paths."""
     checked = []
@@ -91,6 +120,8 @@ def validate_bench_files() -> list[str]:
         obj = json.loads(path.read_text())
         if path.name == "BENCH_fleet.json":
             validate_fleet_record(obj, path.name)
+        elif path.name == "BENCH_frontend.json":
+            validate_frontend_record(obj, path.name)
         else:
             _require(obj, _ROWS_KEYS, path.name)
             for row in obj["rows"]:
@@ -101,11 +132,18 @@ def validate_bench_files() -> list[str]:
 
 
 def smoke() -> dict:
-    """Tiny-episode parity + schema gate (no timing claims, no writes)."""
-    from . import workflow_sim
+    """Tiny-episode parity + schema gate (no timing claims, no writes).
+
+    Runs the fleet record at tiny episode counts AND the serving
+    front-end open-loop gate (deterministic seeded arrival trace on a
+    virtual clock: parity, fault matrix, schema) — both without touching
+    any BENCH file."""
+    from . import frontend_load, workflow_sim
 
     rec = workflow_sim.smoke()
     validate_fleet_record(rec, "smoke record")
+    fe_rec = frontend_load.smoke()
+    validate_frontend_record(fe_rec, "frontend smoke record")
     checked = validate_bench_files()
     print(f"smoke ok: parity gates passed, schema ok for {checked}")
     return rec
@@ -127,7 +165,8 @@ def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
 
 
 def main(only: list[str] | None = None) -> None:
-    from . import appendix_d, paper_tables, perf, roofline, workflow_sim
+    from . import (appendix_d, frontend_load, paper_tables, perf, roofline,
+                   workflow_sim)
 
     modules = {
         "paper_tables": paper_tables,
@@ -135,6 +174,7 @@ def main(only: list[str] | None = None) -> None:
         "workflow_sim": workflow_sim,
         "perf": perf,
         "roofline": roofline,
+        "frontend_load": frontend_load,
     }
     if only:
         unknown = sorted(set(only) - set(modules))

@@ -63,7 +63,7 @@ from .decision import Decision, DecisionResult
 from .posterior import BetaPosterior
 from .success import TierPolicy, check_success
 from .taxonomy import DEFAULT_N0, DependencyType, prior_params
-from .telemetry import bucket_key
+from .telemetry import RESILIENCE_KINDS, bucket_key
 
 __all__ = [
     "OnlineDecisionService",
@@ -85,6 +85,23 @@ TELEMETRY_FIELDS = (
 
 
 _COL = {name: i for i, name in enumerate(TELEMETRY_FIELDS)}
+
+# Resilience events share the ring with decision rows.  The "row" column
+# is the discriminator: >= 0 is a decision, -1 an empty/padding slot, and
+# <= -2 a resilience event for table row (-v - 3), with -2 meaning "no
+# specific row".  Event rows reuse the "speculate" column for the kind
+# code (1-based index into telemetry.RESILIENCE_KINDS) and the
+# "C_spec_usd" column for the event's attributed USD.
+_EVENT_CODE = {k: i + 1 for i, k in enumerate(RESILIENCE_KINDS)}
+_EVENT_KIND = {i + 1: k for i, k in enumerate(RESILIENCE_KINDS)}
+
+
+def _encode_event_row(row: Optional[int]) -> float:
+    return -2.0 if row is None else float(-3 - int(row))
+
+
+def _decode_event_row(v: float) -> Optional[int]:
+    return None if v == -2.0 else int(-v) - 3
 
 
 class ServiceState(NamedTuple):
@@ -202,6 +219,17 @@ _tick_donated = functools.partial(
     jax.jit, static_argnames=_TICK_STATICS, donate_argnums=(0,))(_tick_impl)
 
 
+@jax.jit
+def _append_tel(tel, rows):
+    """Append pre-encoded rows to the slide-buffer ring (same append +
+    evict semantics as the tick's step 4) — the out-of-tick path the
+    front-end's resilience events take."""
+    E, R = rows.shape[0], tel.shape[0]
+    if E >= R:
+        return rows[E - R:]
+    return jnp.concatenate([tel[E:], rows], 0)
+
+
 def _bucket(n: int, lo: int = 1) -> int:
     """Power-of-two shape bucket (compile-cache stability across ticks)."""
     if n <= 0:
@@ -300,6 +328,10 @@ class TelemetryBatch:
 
     fields: dict[str, np.ndarray]
     dropped: int                     # rows overwritten before this drain
+    # resilience event rows that shared the drained window (see
+    # log_events): [{"kind", "row", "usd"}], oldest first
+    events: list = dataclasses.field(default_factory=list)
+    events_dropped: int = 0
 
     def __len__(self) -> int:
         return int(next(iter(self.fields.values())).shape[0]) if self.fields else 0
@@ -359,6 +391,12 @@ class OnlineDecisionService:
         self._rows_total = 0
         self._drained_slots = 0
         self._drained_rows = 0
+        self._events_total = 0
+        self._drained_events = 0
+        # idle ticks (B=0, S=0, no drift check) short-circuit host-side —
+        # the deadline-driven batcher hits this path constantly, and even
+        # an empty jit'd tick costs ~0.1 ms of dispatch
+        self.idle_ticks_skipped = 0
 
     # ------------------------------------------------------------- registry
     def register_edge(
@@ -627,6 +665,21 @@ class OnlineDecisionService:
         :meth:`tick` is the validating wrapper).  ``out_row``/``out_x``
         are the equivalently packed settled outcomes."""
         state = self._ensure_state()
+        if (not check_drift and not self._pending and row.shape[0] == 0
+                and (out_row is None or out_row.shape[0] == 0)):
+            # idle tick: nothing to settle, decide or drift-check.  The
+            # jit'd tick would be a provable no-op (the S=0 executable
+            # already skips its scan at trace time) yet still costs ~0.1ms
+            # of dispatch — the deadline batcher fires these constantly,
+            # so skip the XLA call entirely.  State, counters and the
+            # telemetry ring are bitwise what the dispatched no-op leaves.
+            self.idle_ticks_skipped += 1
+            F = len(TELEMETRY_FIELDS)
+            return TickDecisions(
+                batch=0 if batch is None else batch,
+                _rows=np.zeros((0, F), self._np_dtype),
+                _bools=np.zeros((0, 2), bool),
+                _drift=np.zeros(state.post.shape[0], bool))
         if self._pending:
             # outcomes queued via observe() settle first (arrival order),
             # ahead of this call's packed outcomes
@@ -717,32 +770,76 @@ class OnlineDecisionService:
         )
 
     # ------------------------------------------------------------ telemetry
+    def log_events(
+        self, events: Sequence[tuple[Optional[int], str, float]]
+    ) -> None:
+        """Append resilience event rows — ``(row_or_None, kind, usd)``
+        with ``kind`` from ``telemetry.RESILIENCE_KINDS`` — to the device
+        telemetry ring (breaker trips, bulkhead sheds, fallback hops from
+        the serving front-end ride the same D2 flush path as decisions).
+
+        Event rows are encoded via the "row" column discriminator (see
+        the module-level note) and surface as ``TelemetryBatch.events``
+        at drain time; decision fields are unaffected.  The event batch
+        shape buckets to a power of two so bursts share executables.
+        """
+        if not events:
+            return
+        st = self._ensure_state()
+        n = len(events)
+        Ep = _bucket(n, lo=1)
+        rows = np.zeros((Ep, len(TELEMETRY_FIELDS)), self._np_dtype)
+        rows[:, _COL["row"]] = -1.0            # padding slots stay empty
+        for i, (row, kind, usd) in enumerate(events):
+            if row is not None and not (0 <= int(row) < self.n_rows):
+                raise IndexError("event row out of range")
+            rows[i, _COL["row"]] = _encode_event_row(row)
+            rows[i, _COL["speculate"]] = float(_EVENT_CODE[kind])
+            rows[i, _COL["C_spec_usd"]] = float(usd)
+        tel = _append_tel(st.tel, rows)
+        self._state = st._replace(tel=tel)
+        self._slots_total += Ep
+        self._events_total += n
+
     def drain_telemetry(self) -> TelemetryBatch:
         """Pull the per-decision USD rows written since the last drain
         (one device sync total — the D2 flush path).  The ring holds the
         most recent ``telemetry_capacity`` *slots* (a ragged tick consumes
         its padded bucket; sentinel slots are filtered here); real rows
         evicted before this drain are counted as ``dropped`` — size the
-        ring to the tick cadence."""
+        ring to the tick cadence.  Resilience event rows sharing the
+        window (see :meth:`log_events`) are decoded into ``events``."""
         st = self._ensure_state()
         tel = np.asarray(st.tel)
         # host-side unbounded totals (the device counters are int32 and
         # may wrap on long-lived services; they remain for in-graph use)
         slots, total_rows = self._slots_total, self._rows_total
+        total_events = self._events_total
         R = tel.shape[0]
         new_slots = slots - self._drained_slots
         take = min(new_slots, R)
         window = tel[R - take:] if take else tel[:0]
         valid = window[:, _COL["row"]] >= 0
         new_rows = total_rows - self._drained_rows
+        new_events = total_events - self._drained_events
         self._drained_slots = slots
         self._drained_rows = total_rows
+        self._drained_events = total_events
         fields = {
             name: window[valid, j].copy()
             for j, name in enumerate(TELEMETRY_FIELDS)
         }
+        ev_rows = window[window[:, _COL["row"]] <= -2.0]
+        events = [
+            {"kind": _EVENT_KIND[int(r[_COL["speculate"]])],
+             "row": _decode_event_row(float(r[_COL["row"]])),
+             "usd": float(r[_COL["C_spec_usd"]])}
+            for r in ev_rows
+        ]
         return TelemetryBatch(fields=fields,
-                              dropped=new_rows - int(valid.sum()))
+                              dropped=new_rows - int(valid.sum()),
+                              events=events,
+                              events_dropped=new_events - len(events))
 
     # ----------------------------------------------------------- drift fold
     def drift_rows(self, decisions: TickDecisions) -> list[

@@ -20,7 +20,15 @@ from typing import Literal, Optional
 
 from .decision import implied_lambda
 
-__all__ = ["SpeculationDecision", "TelemetryLog", "bucket_key", "new_decision_id"]
+__all__ = [
+    "SpeculationDecision",
+    "TelemetryLog",
+    "bucket_key",
+    "new_decision_id",
+    "RESILIENCE_KINDS",
+    "ResilienceEvent",
+    "ResilienceLog",
+]
 
 
 def new_decision_id() -> str:
@@ -241,3 +249,93 @@ class TelemetryLog:
         return {
             mid: (sum(v) / len(v), len(v)) for mid, v in sorted(buckets.items())
         }
+
+
+# ---------------------------------------------------------------------------
+# Resilience events — the serving front-end's degradation trail.
+#
+# The paper's §12 safety story (staged rollout, drift kill-switch) stops at
+# *whether* to speculate; production also needs *how the system degraded*:
+# every bulkhead shed, circuit-breaker transition, fallback-chain hop and
+# provider timeout is one event here, USD-attributed so the cost of running
+# degraded is a first-class, exportable number next to the per-decision
+# rows above.  The device-side twin is the online service's telemetry ring
+# (``repro.core.online`` appends the same kinds as encoded ring rows).
+# ---------------------------------------------------------------------------
+RESILIENCE_KINDS = (
+    "shed",                   # bulkhead/admission rejected, answered WAIT
+    "breaker_open",           # circuit opened (consecutive faults / trip)
+    "breaker_half_open",      # cooldown elapsed, probe admitted
+    "breaker_close",          # probe succeeded, circuit closed
+    "fallback_scalar",        # answered by host-side decision.evaluate
+    "fallback_conservative",  # answered by the terminal no-speculate stage
+    "timeout",                # service tick / provider call timed out
+    "exception",              # service tick / provider call raised
+    "drift_trip",             # in-graph kill-switch breach folded into breaker
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceEvent:
+    """One degradation event, attributed in dollars.
+
+    ``usd`` is the money *at stake* for the event, not necessarily money
+    spent: for sheds it is the latency value foregone (L·λ), for fallback
+    and breaker events the speculative cost C_spec the degraded path was
+    protecting.  Summing per (tenant, kind) prices the degraded modes.
+    """
+
+    kind: str
+    tenant: Optional[str] = None
+    edge: Optional[tuple[str, str]] = None
+    row: Optional[int] = None
+    usd: float = 0.0
+    detail: str = ""
+
+    def __post_init__(self) -> None:
+        if self.kind not in RESILIENCE_KINDS:
+            raise ValueError(f"unknown resilience kind: {self.kind!r}")
+
+    def to_json(self) -> str:
+        d = dataclasses.asdict(self)
+        if self.edge is not None:
+            d["edge"] = list(self.edge)
+        return json.dumps(d)
+
+
+class ResilienceLog:
+    """Append-only host-side log of ResilienceEvent rows plus the USD
+    cost-attribution export the serving front-end publishes."""
+
+    def __init__(self) -> None:
+        self.events: list[ResilienceEvent] = []
+
+    def emit(self, event: ResilienceEvent) -> ResilienceEvent:
+        self.events.append(event)
+        return event
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def __iter__(self):
+        return iter(self.events)
+
+    def by_kind(self) -> dict[str, int]:
+        out: dict[str, int] = defaultdict(int)
+        for e in self.events:
+            out[e.kind] += 1
+        return dict(out)
+
+    def usd_attribution(self) -> dict[tuple[Optional[str], str], float]:
+        """{(tenant, kind): summed USD at stake} — the export the cost
+        dashboards consume (§C.2 style: derivable from rows alone)."""
+        out: dict[tuple[Optional[str], str], float] = defaultdict(float)
+        for e in self.events:
+            out[(e.tenant, e.kind)] += e.usd
+        return dict(out)
+
+    def save_jsonl(self, path: str) -> int:
+        with open(path, "w") as fh:
+            for e in self.events:
+                fh.write(e.to_json() + "\n")
+        return len(self.events)

@@ -1,8 +1,31 @@
-"""repro.serving — batched serving engine + speculative-execution bridge."""
+"""repro.serving — batched serving engine, speculative-execution bridge,
+fault-injection harness, and the async request-accumulation front-end."""
 from .engine import EngineConfig, GenerationResult, ServingEngine
-from .spec_bridge import EngineOp, SpeculativeEdgeResult, ThreadedSpeculativeRunner
+from .faults import FaultInjector, FaultPlan, FaultyService, InjectedFault
+from .frontend import (
+    BreakerState,
+    CircuitBreaker,
+    DecisionRequest,
+    FrontendConfig,
+    FrontendResult,
+    FrontendTicket,
+    ServingFrontend,
+    TenantBulkhead,
+)
+from .spec_bridge import (
+    EngineOp,
+    SpeculationTimeout,
+    SpeculativeEdgeResult,
+    ThreadedSpeculativeRunner,
+    call_with_timeout,
+    retry_with_backoff,
+)
 
 __all__ = [
     "ServingEngine", "EngineConfig", "GenerationResult",
     "EngineOp", "ThreadedSpeculativeRunner", "SpeculativeEdgeResult",
+    "SpeculationTimeout", "call_with_timeout", "retry_with_backoff",
+    "InjectedFault", "FaultPlan", "FaultInjector", "FaultyService",
+    "FrontendConfig", "BreakerState", "CircuitBreaker", "TenantBulkhead",
+    "DecisionRequest", "FrontendResult", "FrontendTicket", "ServingFrontend",
 ]

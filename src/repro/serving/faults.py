@@ -1,0 +1,146 @@
+"""Fault-injection harness at the EngineOp / decision-service boundary.
+
+The §12 safety story is only credible if the serving stack is exercised
+*under* misbehaving dependencies: providers that hang, raise, slow down,
+or whose prediction success rate drifts out from under the calibrated
+posterior.  This module injects exactly those faults, deterministically
+(seeded, call-indexed), at the two boundaries the front-end crosses:
+
+* ``FaultInjector.wrap(fn)`` — wraps any callable (an ``EngineOp.run``,
+  an upstream thunk, a provider client) with scheduled delays, exceptions
+  and simulated hangs;
+* ``FaultyService`` — proxies an ``OnlineDecisionService`` and applies
+  the injector to ``tick_packed`` / ``tick`` / ``decide``, so the
+  front-end's circuit breaker and fallback chain can be driven through
+  real (not monkeypatched) failure sequences;
+* ``FaultInjector.outcome()`` — a drifting Bernoulli success stream for
+  settling speculations, flipping from ``success_rate0`` to
+  ``success_rate1`` at ``drift_at`` (the §12.5 sudden-flip trace).
+
+A "hang" is simulated as a bounded sleep (``hang_s``): long enough to
+trip any sane timeout, short enough that abandoned daemon threads drain
+during a test run.  All scheduling is by call index against explicit
+sets and/or a seeded RNG — two injectors with the same plan replay the
+same fault sequence.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, FrozenSet, Optional
+
+import numpy as np
+
+__all__ = ["InjectedFault", "FaultPlan", "FaultInjector", "FaultyService"]
+
+
+class InjectedFault(RuntimeError):
+    """The exception the harness raises on scheduled failure calls."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic per-call fault schedule.
+
+    Explicit call-index sets fire exactly; the ``*_rate`` fields draw
+    from the seeded RNG per call (reproducible).  Call indices are
+    0-based and counted per injector.
+    """
+
+    delay_s: float = 0.0                      # added latency on every call
+    raise_calls: FrozenSet[int] = frozenset() # calls that raise InjectedFault
+    hang_calls: FrozenSet[int] = frozenset()  # calls that sleep hang_s
+    raise_rate: float = 0.0
+    hang_rate: float = 0.0
+    hang_s: float = 0.5
+    raise_from: Optional[int] = None          # every call >= this raises
+    raise_until: Optional[int] = None         # ...until this (exclusive)
+    # drifting success stream for outcome settlement (§12.5 sudden flip)
+    success_rate0: float = 0.95
+    success_rate1: float = 0.15
+    drift_at: Optional[int] = None
+    seed: int = 0
+
+
+class FaultInjector:
+    """Applies a FaultPlan before each wrapped call; thread-safe."""
+
+    def __init__(self, plan: FaultPlan = FaultPlan(), *,
+                 sleep: Callable[[float], None] = time.sleep) -> None:
+        self.plan = plan
+        self.calls = 0
+        self.outcomes = 0
+        self.faults_fired = 0
+        self._sleep = sleep
+        self._rng = np.random.default_rng(plan.seed)
+        self._lock = threading.Lock()
+
+    def _schedule(self) -> tuple[int, bool, bool, float]:
+        """Atomically claim a call index and its fault draws."""
+        with self._lock:
+            i = self.calls
+            self.calls += 1
+            p = self.plan
+            do_raise = i in p.raise_calls
+            if p.raise_from is not None and i >= p.raise_from and (
+                    p.raise_until is None or i < p.raise_until):
+                do_raise = True
+            if p.raise_rate > 0.0:
+                do_raise |= bool(self._rng.random() < p.raise_rate)
+            do_hang = i in p.hang_calls
+            if p.hang_rate > 0.0:
+                do_hang |= bool(self._rng.random() < p.hang_rate)
+            return i, do_raise, do_hang, p.delay_s
+
+    def before_call(self) -> int:
+        """Apply this call's scheduled fault; returns the call index."""
+        i, do_raise, do_hang, delay = self._schedule()
+        if delay > 0.0:
+            self._sleep(delay)
+        if do_hang:
+            self.faults_fired += 1
+            self._sleep(self.plan.hang_s)
+        if do_raise:
+            self.faults_fired += 1
+            raise InjectedFault(f"injected fault at call {i}")
+        return i
+
+    def wrap(self, fn: Callable[..., Any]) -> Callable[..., Any]:
+        def wrapped(*args: Any, **kwargs: Any) -> Any:
+            self.before_call()
+            return fn(*args, **kwargs)
+
+        wrapped.__name__ = getattr(fn, "__name__", "wrapped")
+        return wrapped
+
+    def outcome(self) -> bool:
+        """Next sample of the drifting speculation-success stream."""
+        with self._lock:
+            i = self.outcomes
+            self.outcomes += 1
+            p = self.plan
+            rate = p.success_rate0
+            if p.drift_at is not None and i >= p.drift_at:
+                rate = p.success_rate1
+            return bool(self._rng.random() < rate)
+
+
+class FaultyService:
+    """An ``OnlineDecisionService`` proxy with faults at the tick boundary.
+
+    Only the decision entry points are faulted; registry/telemetry reads
+    pass through untouched so the harness can still observe state.
+    """
+
+    _FAULTED = ("tick", "tick_packed", "decide")
+
+    def __init__(self, service, injector: FaultInjector) -> None:
+        self._service = service
+        self.injector = injector
+
+    def __getattr__(self, name: str):
+        attr = getattr(self._service, name)
+        if name in self._FAULTED and callable(attr):
+            return self.injector.wrap(attr)
+        return attr

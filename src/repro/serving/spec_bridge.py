@@ -26,7 +26,71 @@ from ..core.taxonomy import DependencyType
 from ..core.workflow import Operation
 from .engine import GenerationResult, ServingEngine
 
-__all__ = ["EngineOp", "SpeculativeEdgeResult", "ThreadedSpeculativeRunner", "toy_tokenize"]
+__all__ = [
+    "EngineOp",
+    "SpeculationTimeout",
+    "SpeculativeEdgeResult",
+    "ThreadedSpeculativeRunner",
+    "call_with_timeout",
+    "retry_with_backoff",
+    "toy_tokenize",
+]
+
+
+class SpeculationTimeout(TimeoutError):
+    """A provider/engine call exceeded its deadline.  For a *speculative*
+    call this settles as a failed speculation (feeds the breaker); for
+    the sequential path it propagates."""
+
+
+def call_with_timeout(fn: Callable[[], Any], timeout_s: float) -> Any:
+    """Run ``fn`` with a wall-clock deadline.
+
+    The call runs in a daemon worker; on timeout ``SpeculationTimeout``
+    is raised and the worker is *abandoned* (a hung provider call cannot
+    be interrupted from Python — the caller must treat the tokens as
+    billed, which is exactly how the runner settles it).  Exceptions from
+    ``fn`` propagate."""
+    box: dict[str, Any] = {}
+    done = threading.Event()
+
+    def runner() -> None:
+        try:
+            box["out"] = fn()
+        except BaseException as exc:  # noqa: BLE001 — propagated below
+            box["err"] = exc
+        finally:
+            done.set()
+
+    th = threading.Thread(target=runner, daemon=True)
+    th.start()
+    if not done.wait(timeout_s):
+        raise SpeculationTimeout(f"call exceeded {timeout_s}s")
+    if "err" in box:
+        raise box["err"]
+    return box["out"]
+
+
+def retry_with_backoff(
+    fn: Callable[[], Any],
+    *,
+    retries: int,
+    backoff_s: float = 0.05,
+    retry_on: tuple[type, ...] = (Exception,),
+    sleep: Callable[[float], None] = time.sleep,
+) -> Any:
+    """Bounded retry with exponential backoff: up to ``retries`` extra
+    attempts, sleeping ``backoff_s * 2**k`` between them.  The final
+    attempt's exception propagates unmodified."""
+    if retries < 0:
+        raise ValueError("retries must be >= 0")
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except retry_on:
+            if attempt == retries:
+                raise
+            sleep(backoff_s * (2.0 ** attempt))
 
 
 def toy_tokenize(text: str, vocab: int, length: int = 32) -> list[int]:
@@ -41,7 +105,13 @@ def toy_tokenize(text: str, vocab: int, length: int = 32) -> list[int]:
 
 @dataclasses.dataclass
 class EngineOp:
-    """A workflow Operation backed by a real serving engine."""
+    """A workflow Operation backed by a real serving engine.
+
+    ``timeout_s`` bounds each engine call (a hung provider no longer
+    blocks the runner forever — it raises :class:`SpeculationTimeout`);
+    ``max_retries``/``backoff_s`` retry transient failures with
+    exponential backoff before giving up.  Both default off, preserving
+    the historical direct-call path."""
 
     name: str
     engine: ServingEngine
@@ -49,6 +119,9 @@ class EngineOp:
     provider: str = "paper"
     model: str = "frontier-default"
     postprocess: Callable[[list[int]], Any] = lambda toks: toks
+    timeout_s: Optional[float] = None
+    max_retries: int = 0
+    backoff_s: float = 0.05
 
     def operation(self, latency_est_s: float = 1.0) -> Operation:
         return Operation(
@@ -63,10 +136,20 @@ class EngineOp:
 
     def run(self, upstream_output: Any,
             cancel_event: Optional[threading.Event] = None) -> Any:
-        prompt = toy_tokenize(upstream_output, self.engine.model_cfg.vocab_size)
-        result = self.engine.generate(
-            prompt, self.max_new_tokens, cancel_event=cancel_event)
-        return self.postprocess(result.tokens), result
+        def attempt() -> Any:
+            prompt = toy_tokenize(
+                upstream_output, self.engine.model_cfg.vocab_size)
+            result = self.engine.generate(
+                prompt, self.max_new_tokens, cancel_event=cancel_event)
+            return self.postprocess(result.tokens), result
+
+        call = attempt
+        if self.timeout_s is not None:
+            call = lambda: call_with_timeout(attempt, self.timeout_s)  # noqa: E731
+        if self.max_retries > 0:
+            return retry_with_backoff(
+                call, retries=self.max_retries, backoff_s=self.backoff_s)
+        return call()
 
 
 @dataclasses.dataclass
@@ -80,6 +163,7 @@ class SpeculativeEdgeResult:
     upstream_output: Any
     downstream_output: Any
     i_hat: Any
+    timed_out: bool = False        # speculative call hit its deadline
 
 
 class ThreadedSpeculativeRunner:
@@ -146,44 +230,91 @@ class ThreadedSpeculativeRunner:
         result_box: dict[str, Any] = {}
 
         def worker():
-            result_box["out"] = self.downstream.run(i_hat, cancel_event=cancel)
+            # a worker exception must surface to the caller, not die in
+            # the thread and resurface as KeyError("out") at join time
+            try:
+                result_box["out"] = self.downstream.run(
+                    i_hat, cancel_event=cancel)
+            except BaseException as exc:  # noqa: BLE001 — re-raised below
+                result_box["err"] = exc
 
         t0 = time.perf_counter()
         th = threading.Thread(target=worker)
         th.start()
-        upstream_out, up_res = self.upstream()
+        try:
+            upstream_out, up_res = self.upstream()
+        except BaseException:
+            # the sequential path failed: without this, the speculative
+            # thread keeps generating (tokens keep billing) with nobody
+            # left to cancel or join it
+            cancel.set()
+            th.join()
+            raise
         t_up = time.perf_counter() - t0
 
+        cm = TwoRateTokenCost.from_entry(
+            get_pricing(self.downstream.provider, self.downstream.model))
         check = check_success(upstream_out, i_hat, self.tier_policy)
         if check.success:
             th.join()
-            out, gen = result_box["out"]
+            err = result_box.get("err")
+            if err is None:
+                out, gen = result_box["out"]
+                wall = time.perf_counter() - t0
+                seq = t_up + gen.wall_time_s
+                return SpeculativeEdgeResult(
+                    committed=True, cancelled=False, wall_time_s=wall,
+                    sequential_wall_time_s=seq,
+                    latency_saved_s=max(0.0, seq - wall), waste_usd=0.0,
+                    upstream_output=upstream_out, downstream_output=out,
+                    i_hat=i_hat,
+                )
+            if not isinstance(err, SpeculationTimeout):
+                raise err
+            # timed-out speculation: settle as a *failed* speculation
+            # (feeds the breaker via observe) and fall through to the
+            # sequential re-execution below.  The hung call's tokens are
+            # unknowable from here — bill the full planned output, the
+            # conservative §9.3 stance.
+            self.observe(False)
+            out, gen = self.downstream.run(upstream_out)
             wall = time.perf_counter() - t0
-            seq = t_up + gen.wall_time_s
-            pricing = get_pricing(self.downstream.provider, self.downstream.model)
             return SpeculativeEdgeResult(
-                committed=True, cancelled=False, wall_time_s=wall,
-                sequential_wall_time_s=seq,
-                latency_saved_s=max(0.0, seq - wall), waste_usd=0.0,
+                committed=False, cancelled=True, wall_time_s=wall,
+                sequential_wall_time_s=t_up + gen.wall_time_s,
+                latency_saved_s=0.0,
+                waste_usd=fractional_waste(
+                    cm, 32, self.downstream.max_new_tokens,
+                    self.downstream.max_new_tokens),
                 upstream_output=upstream_out, downstream_output=out,
-                i_hat=i_hat,
+                i_hat=i_hat, timed_out=True,
             )
         # tier failure: cancel mid-stream and re-execute with the real input
         cancel.set()
         th.join()
-        _, spec_gen = result_box["out"]
-        pricing = get_pricing(self.downstream.provider, self.downstream.model)
-        cm = TwoRateTokenCost.from_entry(pricing)
-        waste = fractional_waste(
-            cm, 32, self.downstream.max_new_tokens, spec_gen.tokens_generated)
+        err = result_box.get("err")
+        timed_out = isinstance(err, SpeculationTimeout)
+        if err is not None and not timed_out:
+            raise err
+        if timed_out:
+            # no generation record survived the deadline — bill the plan
+            cancelled, waste = True, fractional_waste(
+                cm, 32, self.downstream.max_new_tokens,
+                self.downstream.max_new_tokens)
+        else:
+            _, spec_gen = result_box["out"]
+            cancelled = spec_gen.cancelled
+            waste = fractional_waste(
+                cm, 32, self.downstream.max_new_tokens,
+                spec_gen.tokens_generated)
         out, gen = self.downstream.run(upstream_out)
         wall = time.perf_counter() - t0
         seq = t_up + gen.wall_time_s
         return SpeculativeEdgeResult(
-            committed=False, cancelled=spec_gen.cancelled, wall_time_s=wall,
+            committed=False, cancelled=cancelled, wall_time_s=wall,
             sequential_wall_time_s=seq, latency_saved_s=0.0,
             waste_usd=waste, upstream_output=upstream_out,
-            downstream_output=out, i_hat=i_hat,
+            downstream_output=out, i_hat=i_hat, timed_out=timed_out,
         )
 
     def observe(self, success: bool) -> None:

@@ -1,8 +1,9 @@
 """benchmarks/run.py --smoke wired into tier-1: tiny-episode parity
-(scalar<->fleet Pareto, bitwise multi-tenant) plus schema validation of
-both the freshly-built record and every checked-in BENCH_*.json — so
-benchmark or record-format drift breaks fast tests instead of rotting
-until the next manual benchmark run."""
+(scalar<->fleet Pareto, bitwise multi-tenant) plus the serving
+front-end gate (bitwise parity, fault matrix on a virtual clock) and
+schema validation of both the freshly-built records and every
+checked-in BENCH_*.json — so benchmark or record-format drift breaks
+fast tests instead of rotting until the next manual benchmark run."""
 import json
 import pathlib
 import sys
@@ -45,6 +46,31 @@ def test_smoke_mode_parity_and_schema():
     assert max(b["B"] for b in osvc["batches"]) < 64
 
 
+def test_frontend_smoke_gate_parity_and_fault_matrix():
+    from benchmarks import frontend_load
+
+    rec = frontend_load.smoke()
+    bench_run.validate_frontend_record(rec, "frontend smoke record")
+    # both parity stages ran: healthy batched tick bitwise-f64 vs the
+    # scalar decision.evaluate path, and the breaker-open scalar
+    # fallback answers bitwise vs the same reference
+    assert rec["parity"]["service_vs_scalar_bitwise_f64"] is True
+    assert rec["parity"]["fallback_vs_scalar_bitwise_f64"] is True
+    # every fault-matrix scenario executed and recorded resilience events
+    for name in sorted(bench_run._FRONTEND_FAULTS):
+        events = rec["fault_matrix"][name]["events"]
+        assert events, f"fault scenario {name} recorded no events"
+    # drift_flip must have reached the §12.5 kill-switch on-device and
+    # tenant_flood must have shed with USD attributed to the noisy tenant
+    assert rec["fault_matrix"]["drift_flip"]["events"].get("drift_trip", 0) >= 1
+    assert rec["fault_matrix"]["tenant_flood"]["events"].get("shed", 0) > 0
+    # smoke never makes timing claims and never writes BENCH files
+    assert rec["decisions_per_s"] == 0.0
+    # the virtual-clock drive replayed deadline ticks deterministically
+    assert rec["deadline_ticks"] >= 1
+    assert rec["requests"] > 0 and rec["shed_rate"] == 0.0
+
+
 def test_checked_in_bench_files_carry_required_schema():
     checked = bench_run.validate_bench_files()
     assert "BENCH_fleet.json" in checked
@@ -76,6 +102,23 @@ def test_checked_in_bench_files_carry_required_schema():
     assert fleet["credible_bound"]["pareto_dtype"] == "float64"
 
 
+def test_checked_in_frontend_record_shape():
+    checked = bench_run.validate_bench_files()
+    assert "BENCH_frontend.json" in checked
+    fe = json.loads((bench_run.ROOT / "BENCH_frontend.json").read_text())
+    # acceptance shape: a timed open-loop run (not a smoke record) whose
+    # parity gates passed before timing and whose fault matrix covers
+    # all four injected-failure scenarios
+    assert fe["decisions_per_s"] > 0.0
+    assert fe["requests"] >= 1000
+    assert 0.0 <= fe["shed_rate"] <= 1.0
+    assert fe["latency_ms"]["p50"] <= fe["latency_ms"]["p99"] <= \
+        fe["latency_ms"]["max"]
+    assert set(fe["fault_matrix"]) >= bench_run._FRONTEND_FAULTS
+
+
 def test_smoke_rejects_malformed_record():
     with pytest.raises(AssertionError, match="missing keys"):
         bench_run.validate_fleet_record({"benchmark": "x"})
+    with pytest.raises(AssertionError, match="missing keys"):
+        bench_run.validate_frontend_record({"benchmark": "x"})

@@ -1,5 +1,7 @@
 """Fault tolerance: atomic checkpoints, kill+restart resume (bitwise), data
-pipeline determinism, straggler monitor, grad compression, elastic reshard."""
+pipeline determinism, straggler monitor, grad compression, elastic reshard —
+plus the serving front-end's fault matrix (breaker trip/recovery, bulkhead
+shed under tenant flood, deadline batching, fallback-chain parity)."""
 import json
 import shutil
 from pathlib import Path
@@ -164,3 +166,202 @@ class TestElasticReshard:
                                 shardings=sh)
         assert jnp.array_equal(loaded["w"], tree["w"])
         assert loaded["w"].sharding == sh["w"]
+
+
+# ---------------------------------------------------------------------------
+# serving front-end fault matrix
+# ---------------------------------------------------------------------------
+def _frontend_service(n_tenants=2, edges=2):
+    from repro.core.online import OnlineDecisionService
+    from repro.core.posterior import BetaPosterior
+
+    svc = OnlineDecisionService()
+    for t in range(n_tenants):
+        for e in range(edges):
+            svc.register_edge((f"u{e}", f"v{e}"), tenant=f"t{t}",
+                              posterior=BetaPosterior(alpha=16.0, beta=2.0))
+    return svc
+
+
+def _fe_req(row, tenant, edge, **kw):
+    from repro.serving.frontend import DecisionRequest
+
+    base = dict(alpha=0.5, lambda_usd_per_s=0.9, latency_s=3.0,
+                input_tokens=500.0, output_tokens=300.0,
+                input_price=3e-6, output_price=15e-6)
+    base.update(kw)
+    return DecisionRequest(row=row, tenant=tenant, edge=edge, **base)
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+class TestFrontendFaultMatrix:
+    def test_breaker_trips_on_consecutive_tick_faults(self):
+        from repro.serving.faults import FaultInjector, FaultPlan, FaultyService
+        from repro.serving.frontend import (
+            BreakerState, FrontendConfig, ServingFrontend)
+
+        svc = _frontend_service(n_tenants=1, edges=1)
+        inj = FaultInjector(FaultPlan(raise_from=0, raise_until=3))
+        fe = ServingFrontend(
+            FaultyService(svc, inj),
+            FrontendConfig(max_batch=2, breaker_failure_threshold=3,
+                           breaker_cooldown_s=10.0),
+            clock=_Clock(), autostart=False)
+        key = ("t0", ("u0", "v0"))
+        for i in range(3):
+            tk = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+            fe.pump()
+            res = tk.result(0)
+            assert res.source == "scalar"      # degraded, never blocked
+            if res.speculate:
+                tk.release()
+            want = (BreakerState.OPEN if i == 2 else BreakerState.CLOSED)
+            assert fe.breaker.state(key) is want
+        # while open, requests skip the (still-faulting) service entirely
+        calls_before = inj.calls
+        tk = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+        assert tk.done() and tk.result(0).source == "scalar"
+        if tk.result(0).speculate:
+            tk.release()
+        assert inj.calls == calls_before
+        kinds = fe.resilience.by_kind()
+        assert kinds["exception"] == 3
+        assert kinds["breaker_open"] == 1
+        assert kinds["fallback_scalar"] == 4
+
+    def test_half_open_probe_recovers_service_path(self):
+        from repro.serving.faults import FaultInjector, FaultPlan, FaultyService
+        from repro.serving.frontend import (
+            BreakerState, FrontendConfig, ServingFrontend)
+
+        svc = _frontend_service(n_tenants=1, edges=1)
+        inj = FaultInjector(FaultPlan(raise_from=0, raise_until=1))
+        clock = _Clock()
+        fe = ServingFrontend(
+            FaultyService(svc, inj),
+            FrontendConfig(max_batch=2, breaker_failure_threshold=1,
+                           breaker_cooldown_s=0.5),
+            clock=clock, autostart=False)
+        key = ("t0", ("u0", "v0"))
+        tk = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+        fe.pump()                              # faulted -> breaker opens
+        if tk.result(0).speculate:
+            tk.release()
+        assert fe.breaker.state(key) is BreakerState.OPEN
+        clock.t = 1.0                          # cooldown elapses
+        probe = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+        assert fe.breaker.state(key) is BreakerState.HALF_OPEN
+        fe.pump()                              # healthy tick closes it
+        res = probe.result(0)
+        assert res.source == "service"
+        if res.speculate:
+            probe.settle(True)
+        assert fe.breaker.state(key) is BreakerState.CLOSED
+        kinds = fe.resilience.by_kind()
+        assert kinds["breaker_half_open"] == 1 and kinds["breaker_close"] == 1
+
+    def test_bulkhead_sheds_flooding_tenant_only(self):
+        from repro.core.decision import Decision
+        from repro.serving.frontend import FrontendConfig, ServingFrontend
+
+        fe = ServingFrontend(
+            _frontend_service(),
+            FrontendConfig(max_batch=64, bulkhead_limit=3),
+            autostart=False)
+        flood = [fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+                 for _ in range(10)]
+        calm = [fe.submit(_fe_req(2, "t1", ("u0", "v0")))
+                for _ in range(3)]
+        fe.pump()
+        shed = [t for t in flood if t.result(0).source == "shed"]
+        assert len(shed) == 7                  # beyond the 3-slot bulkhead
+        assert all(t.result(0).decision is Decision.WAIT for t in shed)
+        assert all(t.result(0).source == "service" for t in calm)
+        # every shed carries a USD-attributed event for the right tenant
+        att = fe.resilience.usd_attribution()
+        assert att[("t0", "shed")] == pytest.approx(7 * 3.0 * 0.9)
+        assert ("t1", "shed") not in att
+        for t in flood + calm:
+            if t.result(0).speculate:
+                t.settle(True)
+
+    def test_deadline_tick_fires_with_partial_batch(self):
+        """Real batcher thread: a single request (far below max_batch)
+        must be answered after ~deadline_s, not held for batch-full."""
+        import time as _time
+
+        from repro.serving.frontend import FrontendConfig, ServingFrontend
+
+        with ServingFrontend(
+                _frontend_service(),
+                FrontendConfig(max_batch=64, deadline_s=0.05)) as fe:
+            tk = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+            res = tk.result(10.0)              # jit compile on first tick
+            assert res.source == "service"
+            if res.speculate:
+                tk.settle(True)
+            # steady state: the deadline, not batch-full, fires the tick
+            t0 = _time.perf_counter()
+            tk2 = fe.submit(_fe_req(0, "t0", ("u0", "v0")))
+            res2 = tk2.result(10.0)
+            waited = _time.perf_counter() - t0
+            if res2.speculate:
+                tk2.settle(True)
+            assert waited >= 0.04              # held for the window
+            assert waited < 5.0
+            assert fe.stats["deadline_ticks"] >= 2
+            assert fe.stats["full_ticks"] == 0
+
+    def test_fallback_chain_bitwise_matches_scalar_evaluate(self):
+        """Both degraded stages answer with exactly decision.evaluate:
+        tick faults (stage 2 via exception) and breaker-open (stage 2 via
+        admission) under enable_x64 — bitwise EV/threshold/P."""
+        from jax.experimental import enable_x64
+
+        from repro.core.decision import DecisionInputs, evaluate
+        from repro.core.posterior import BetaPosterior
+        from repro.serving.faults import FaultInjector, FaultPlan, FaultyService
+        from repro.serving.frontend import FrontendConfig, ServingFrontend
+
+        with enable_x64():
+            svc = _frontend_service(n_tenants=1, edges=2)
+            inj = FaultInjector(FaultPlan(raise_from=0))   # every tick fails
+            fe = ServingFrontend(
+                FaultyService(svc, inj),
+                FrontendConfig(max_batch=4, breaker_failure_threshold=2),
+                autostart=False)
+            snap = svc.posterior_snapshot()
+            reqs = [_fe_req(r, "t0", (f"u{r}", f"v{r}"),
+                            latency_s=1.0 + r, output_tokens=200.0 + r)
+                    for r in range(2)]
+            for round_ in range(3):            # rounds 0-1 fault, then open
+                tks = [fe.submit(q) for q in reqs]
+                fe.pump()
+                for tk, q in zip(tks, reqs):
+                    res = tk.result(0)
+                    assert res.source == "scalar"
+                    post = BetaPosterior(alpha=float(snap[q.row, 0]),
+                                         beta=float(snap[q.row, 1]))
+                    ref = evaluate(DecisionInputs(
+                        P=post.mean, alpha=q.alpha,
+                        lambda_usd_per_s=q.lambda_usd_per_s,
+                        latency_seconds=q.latency_s,
+                        input_tokens=q.input_tokens,
+                        output_tokens=q.output_tokens,
+                        input_price=q.input_price,
+                        output_price=q.output_price))
+                    assert res.decision is ref.decision
+                    assert res.EV_usd == ref.EV_usd
+                    assert res.threshold_usd == ref.threshold_usd
+                    assert res.C_spec_usd == ref.C_spec_usd
+                    assert res.L_value_usd == ref.L_value_usd
+                    assert res.P_used == ref.P_used
+                    if res.speculate:
+                        tk.release()
