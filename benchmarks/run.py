@@ -58,6 +58,13 @@ _FRONTEND_KEYS = {
 _FRONTEND_FAULTS = {"exception_burst", "hung_tick", "tenant_flood",
                     "drift_flip"}
 
+# BENCH_store.json schema (see store_scale.store_record)
+_STORE_KEYS = {
+    "benchmark", "seed", "logical_rows", "resident_capacity",
+    "decisions_per_s", "parity", "zero_recompile", "register", "decide",
+    "memory", "cold_start",
+}
+
 
 def _require(present, required, what: str) -> None:
     missing = sorted(required - set(present))
@@ -113,6 +120,42 @@ def validate_frontend_record(rec: dict, what: str = "frontend record") -> None:
                  f"{what}.fault_matrix.{name}")
 
 
+def validate_store_record(rec: dict, what: str = "store record") -> None:
+    """Assert the BENCH_store.json shape (full and --smoke records)."""
+    _require(rec, _STORE_KEYS, what)
+    par = rec["parity"]
+    _require(par, {"paged_vs_dense_bitwise_f64",
+                   "paged_vs_scalar_bitwise_f64", "rows_checked"},
+             f"{what}.parity")
+    if not (par["paged_vs_dense_bitwise_f64"]
+            and par["paged_vs_scalar_bitwise_f64"]):
+        raise AssertionError(f"{what}: parity gate recorded false")
+    zr = rec["zero_recompile"]
+    _require(zr, {"churn_steps", "logical_rows_end",
+                  "host_capacity_doublings", "physical_capacity",
+                  "rebuilds", "asserted"}, f"{what}.zero_recompile")
+    if not zr["asserted"]:
+        raise AssertionError(f"{what}: zero-recompile churn not asserted")
+    _require(rec["register"], {"rows", "us_per_row"}, f"{what}.register")
+    _require(rec["decide"], {"ticks", "batch", "us_per_decision",
+                             "fault_ins", "spills"}, f"{what}.decide")
+    _require(rec["memory"], {"logical_rows", "resident_rows",
+                             "shelved_rows", "host_soa_bytes_per_row",
+                             "device_table_bytes", "capacity"},
+             f"{what}.memory")
+    cs = rec["cold_start"]
+    _require(cs, {"p_star", "bucket", "pooled_prior", "fixed_prior",
+                  "curve", "pooled_tighter_at_birth"}, f"{what}.cold_start")
+    if not cs["pooled_tighter_at_birth"]:
+        raise AssertionError(
+            f"{what}: pooled cold start not tighter than the fixed prior")
+    if not cs["curve"]:
+        raise AssertionError(f"{what}: empty cold-start curve")
+    for row in cs["curve"]:
+        _require(row, {"n_obs", "pooled_abs_err", "fixed_abs_err"},
+                 f"{what}.cold_start.curve")
+
+
 def validate_bench_files() -> list[str]:
     """Schema-check every checked-in BENCH_*.json; returns the paths."""
     checked = []
@@ -122,6 +165,8 @@ def validate_bench_files() -> list[str]:
             validate_fleet_record(obj, path.name)
         elif path.name == "BENCH_frontend.json":
             validate_frontend_record(obj, path.name)
+        elif path.name == "BENCH_store.json":
+            validate_store_record(obj, path.name)
         else:
             _require(obj, _ROWS_KEYS, path.name)
             for row in obj["rows"]:
@@ -136,14 +181,17 @@ def smoke() -> dict:
 
     Runs the fleet record at tiny episode counts AND the serving
     front-end open-loop gate (deterministic seeded arrival trace on a
-    virtual clock: parity, fault matrix, schema) — both without touching
-    any BENCH file."""
-    from . import frontend_load, workflow_sim
+    virtual clock: parity, fault matrix, schema) AND the paged posterior
+    store gate (dense/scalar bitwise parity, zero-recompile churn,
+    pooled cold start) — all without touching any BENCH file."""
+    from . import frontend_load, store_scale, workflow_sim
 
     rec = workflow_sim.smoke()
     validate_fleet_record(rec, "smoke record")
     fe_rec = frontend_load.smoke()
     validate_frontend_record(fe_rec, "frontend smoke record")
+    st_rec = store_scale.smoke()
+    validate_store_record(st_rec, "store smoke record")
     checked = validate_bench_files()
     print(f"smoke ok: parity gates passed, schema ok for {checked}")
     return rec
@@ -166,7 +214,7 @@ def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
 
 def main(only: list[str] | None = None) -> None:
     from . import (appendix_d, frontend_load, paper_tables, perf, roofline,
-                   workflow_sim)
+                   store_scale, workflow_sim)
 
     modules = {
         "paper_tables": paper_tables,
@@ -175,6 +223,7 @@ def main(only: list[str] | None = None) -> None:
         "perf": perf,
         "roofline": roofline,
         "frontend_load": frontend_load,
+        "store_scale": store_scale,
     }
     if only:
         unknown = sorted(set(only) - set(modules))

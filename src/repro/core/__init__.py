@@ -57,6 +57,7 @@ from .online import (
     online_calibration_batch,
     shadow_mode_batch,
 )
+from .store import BucketPrior, PosteriorStore
 from .streaming import (
     RhoEstimator,
     StreamingReestimator,
@@ -95,6 +96,8 @@ __all__ = [
     "OnlineDecisionService", "ServiceState", "TickDecisions",
     "TelemetryBatch", "shadow_mode_batch", "canary_batch",
     "online_calibration_batch",
+    # §14.3 paged hierarchical posterior store (empirical-Bayes pooling)
+    "PosteriorStore", "BucketPrior",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

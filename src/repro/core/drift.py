@@ -86,6 +86,32 @@ class DriftMonitor:
               tenant: Optional[str] = None) -> EdgeState:
         return self.edges.setdefault(self._key(edge, tenant), EdgeState())
 
+    # --------------------------------------------------- store row lifecycle
+    def evict_state(self, edge: tuple[str, str],
+                    tenant: Optional[str] = None) -> None:
+        """Drop all host-side per-(tenant, edge) state — the
+        ``PosteriorStore.on_evict`` hook.  Without it the monitor's
+        ``edges`` / breach-run dicts grow unboundedly as dead tenants
+        churn through a fleet-scale registry."""
+        key = self._key(edge, tenant)
+        self.edges.pop(key, None)
+        self._credible_breach_run.pop(key, None)
+
+    def reseed_baseline(self, edge: tuple[str, str],
+                        tenant: Optional[str] = None) -> None:
+        """Re-seed the trigger-1 posterior-mean baseline when a spilled
+        row faults back onto the device — the ``PosteriorStore.
+        on_fault_in`` hook.  A row that sat cold on the shelf may return
+        into a shifted workload; comparing its fresh means against the
+        pre-spill baseline would fire (or mask) trigger 1 spuriously, so
+        the history restarts.  The trigger-2 breach run is *not* touched:
+        it rides in the store's device/shelf flags and survives the
+        round-trip authoritatively."""
+        key = self._key(edge, tenant)
+        st = self.edges.get(key)
+        if st is not None:
+            st.posterior_means.clear()
+
     # ------------------------------------------------------------ trigger 1
     def observe_posterior_mean(
         self, edge: tuple[str, str], mean: float,

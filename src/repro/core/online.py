@@ -6,13 +6,18 @@ episode sharding, §12.1 grids); this module is the first end-to-end jit'd
 *request* path.  Posterior and drift state live on device as structure-of-
 arrays tables instead of per-edge Python objects:
 
-* an ``(N, 2)`` alpha/beta posterior table, keyed by a host-side
-  ``(tenant, edge) -> row`` registry,
-* per-row taxonomy-keyed priors, §7.5 gammas, §14.3 discounts and the
-  trigger-2 credible floor,
-* drift bookkeeping (consecutive-breach run lengths, enable bits) and a
-  fixed-size per-decision telemetry ring buffer (USD rows, flushed per
-  tick — D2 without a host sync per decision).
+* the ``(N, 2)`` alpha/beta posterior table, per-row config (§7.5 gammas,
+  §14.3 discounts, trigger-2 credible floors) and kill-switch flags are
+  owned by :class:`repro.core.store.PosteriorStore` — the shared
+  (tenant, edge) registry with free-list eviction, power-of-two capacity,
+  LRU spill of cold rows to a host shelf and empirical-Bayes bucket
+  hyperpriors.  The service holds a store (dense auto-grow by default;
+  pass ``resident_rows=`` for the paged fixed-shape mode) and translates
+  logical row ids to device slots per tick,
+* drift bookkeeping (consecutive-breach run lengths, enable bits) rides
+  in the store's flags table and spills/faults with the row,
+* a fixed-size per-decision telemetry ring buffer (USD rows, flushed per
+  tick — D2 without a host sync per decision) stays service-owned.
 
 One double-buffered ``tick(requests) -> (decisions, state')`` call
 (donation of the state buffers is opt-in, the same policy as
@@ -61,8 +66,9 @@ from .calibration import (
 )
 from .decision import Decision, DecisionResult
 from .posterior import BetaPosterior
+from .store import PosteriorStore, _RowConfig
 from .success import TierPolicy, check_success
-from .taxonomy import DEFAULT_N0, DependencyType, prior_params
+from .taxonomy import DEFAULT_N0, DependencyType
 from .telemetry import RESILIENCE_KINDS, bucket_key
 
 __all__ = [
@@ -115,12 +121,16 @@ class ServiceState(NamedTuple):
     counters: jax.Array  # (2,)   int32 [slots ever appended, real rows ever]
 
 
-def _tick_impl(state, zero, row, reqs, out_row, out_x, consecutive_n,
-               use_lower_bound, check_drift):
+def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
+               consecutive_n, use_lower_bound, check_drift):
     """One service tick, entirely in-graph.
 
-    ``row`` / ``out_row`` use -1 as the padding sentinel (shape buckets),
-    ``reqs`` packs the per-request floats as columns
+    ``row`` / ``out_row`` use -1 as the padding sentinel (shape buckets)
+    and index the *physical* table; ``logrow`` carries the corresponding
+    logical row ids for the telemetry rows (identical to ``row`` in the
+    store's dense identity mode — the paged mode passes the pre-translate
+    ids so drained telemetry reports stable logical rows).  ``reqs``
+    packs the per-request floats as columns
     [alpha, lambda, latency_s, in_tok, out_tok, in_price, out_price].
 
     Order (documented contract, mirrored by the parity tests):
@@ -191,7 +201,7 @@ def _tick_impl(state, zero, row, reqs, out_row, out_x, consecutive_n,
     # (row == -1) are dropped at drain time.
     dt = post.dtype
     rows_out = jnp.stack([
-        row.astype(dt), served.astype(dt), P_used, P_mean,
+        logrow.astype(dt), served.astype(dt), P_used, P_mean,
         EV, thr, EV - thr, C_spec, L_value,
     ], axis=1)
     Bp = rows_out.shape[0]
@@ -237,17 +247,19 @@ def _bucket(n: int, lo: int = 1) -> int:
     return max(lo, 1 << (n - 1).bit_length())
 
 
-@dataclasses.dataclass(frozen=True)
-class _RowConfig:
-    """Host-side registration record for one (tenant, edge) row."""
+class _RowsView:
+    """Sequence view over the store registry exposing per-row
+    :class:`repro.core.store._RowConfig` records (the pre-store
+    ``service._rows`` list surface, preserved for callers)."""
 
-    tenant: Optional[str]
-    edge: tuple[str, str]
-    alpha0: float
-    beta0: float
-    gamma: float
-    discount: float
-    floor: float
+    def __init__(self, store: PosteriorStore) -> None:
+        self._store = store
+
+    def __len__(self) -> int:
+        return self._store.n_rows
+
+    def __getitem__(self, i: int) -> _RowConfig:
+        return self._store.row_config(i)
 
 
 @dataclasses.dataclass
@@ -260,7 +272,12 @@ class TickDecisions:
     batch: int
     _rows: Any                # (Bp, F) decision/telemetry block
     _bools: Any               # (Bp, 2) [raw D4 flag, enabled]
-    _drift: Any               # (N,) bool
+    _drift: Any               # (N,) bool, over *physical* slots
+    # paged-store ticks: the tick's slot -> logical-id map (None in the
+    # dense identity mode, where slot == logical row) and the logical
+    # high-water mark, so drift_triggered reads in logical coordinates
+    _slot_logical: Any = None
+    _n_logical: int = 0
     _cache: dict = dataclasses.field(default_factory=dict)
 
     def _col(self, name: str) -> np.ndarray:
@@ -318,7 +335,16 @@ class TickDecisions:
     @property
     def drift_triggered(self) -> np.ndarray:
         if "drift" not in self._cache:
-            self._cache["drift"] = np.asarray(self._drift)
+            mask = np.asarray(self._drift)
+            if self._slot_logical is not None:
+                # paged store: compose the per-slot trip mask back into
+                # logical row coordinates (unoccupied slots drop out)
+                out = np.zeros(self._n_logical, bool)
+                sl = self._slot_logical
+                res = sl >= 0
+                out[sl[res]] = mask[: sl.shape[0]][res]
+                mask = out
+            self._cache["drift"] = mask
         return self._cache["drift"]
 
 
@@ -346,15 +372,20 @@ class TelemetryBatch:
 
 
 class OnlineDecisionService:
-    """Device-resident batched decision service over a (tenant, edge) row
-    registry.
+    """Device-resident batched decision service over the shared
+    :class:`repro.core.store.PosteriorStore` row registry.
 
-    Registration is host-side and cheap; the first tick (or the first one
-    after a registration / dtype change) builds the device table, padded
-    to a power-of-two row count so registries can grow without retracing.
-    When a ``mesh`` with a ``fleet`` axis divides the padded row count,
-    the table's row axis is sharded across it
-    (``sharding.rules.fleet_axis_spec``); otherwise the established
+    Registration is host-side and O(1) amortized; the first tick (or the
+    first one after a registration / dtype change) materializes pending
+    rows into the store's device table — one batched scatter, padded to a
+    power-of-two row count so registries grow without retracing and
+    without per-row host rebuilds.  Passing ``resident_rows=R`` selects
+    the store's *paged* mode: the physical table shape is fixed forever
+    (zero recompiles under unbounded registry growth) and cold rows spill
+    LRU-first to the store's host shelf, faulting back in transparently
+    when a tick touches them.  When a ``mesh`` with a ``fleet`` axis
+    divides the padded row count, the table's row axis is sharded across
+    it (``sharding.rules.fleet_axis_spec``); otherwise the established
     unsharded fallback applies.
     """
 
@@ -368,6 +399,8 @@ class OnlineDecisionService:
         axis_name: str = "fleet",
         min_rows: int = 16,
         donate: bool = False,
+        resident_rows: Optional[int] = None,
+        store: Optional[PosteriorStore] = None,
     ) -> None:
         if telemetry_capacity < 1:
             raise ValueError("telemetry_capacity must be >= 1")
@@ -378,11 +411,12 @@ class OnlineDecisionService:
         self.axis_name = axis_name
         self.min_rows = int(min_rows)
         self.donate = bool(donate)
-        self._registry: dict[tuple[Optional[str], tuple[str, str]], int] = {}
-        self._rows: list[_RowConfig] = []
-        self._state: Optional[ServiceState] = None
+        self.store = store if store is not None else PosteriorStore(
+            resident_rows=resident_rows, min_rows=min_rows, mesh=mesh,
+            axis_name=axis_name)
+        self._tel = None
+        self._counters = None
         self._state_dtype: Optional[str] = None
-        self._built_rows = 0          # rows materialized into the table
         self._pending: list[tuple[int, bool]] = []
         # telemetry totals tracked host-side in unbounded Python ints —
         # the device-side ServiceState.counters are int32 and would wrap
@@ -414,141 +448,117 @@ class OnlineDecisionService:
         floor_alpha: float = 0.5,
         floor_C_spec_usd: Optional[float] = None,
         floor_L_value_usd: Optional[float] = None,
+        bucket: Optional[str] = None,
+        pooled: bool = True,
     ) -> int:
-        """Add one (tenant, edge) row; returns its table index.
+        """Add one (tenant, edge) row; returns its stable logical id.
 
-        The prior is taxonomy-keyed (``prior_params(dep_type, k=...)``)
-        unless an explicit ``posterior`` seeds the row (§12.1 data-seeded
-        deployment).  ``floor_*`` pin the row's trigger-2 credible floor
-        ``(1 - alpha) * C / (L_value + C)`` from its canonical decision
-        context; rows without one never breach.
+        Delegates to :meth:`PosteriorStore.register`: the prior is
+        taxonomy-keyed (``prior_params(dep_type, k=...)``) — or, when the
+        store has a fitted empirical-Bayes hyperprior for the row's
+        taxonomy ``bucket`` and ``pooled`` is left on, the bucket's
+        *learned* prior — unless an explicit ``posterior`` seeds the row
+        (§12.1 data-seeded deployment).  ``floor_*`` pin the row's
+        trigger-2 credible floor ``(1 - alpha) * C / (L_value + C)`` from
+        its canonical decision context; rows without one never breach.
+        Host-only and O(1) amortized — the row materializes on device in
+        the next tick's batched pending scatter.
         """
-        key = (tenant, tuple(edge))
-        if key in self._registry:
-            raise ValueError(f"edge already registered: {key}")
-        if posterior is not None:
-            a0, b0 = float(posterior.alpha), float(posterior.beta)
-        elif dep_type is not None:
-            a0, b0 = prior_params(dep_type, k=k, rare_event_p=rare_event_p, n0=n0)
-        else:
-            raise ValueError("register_edge needs dep_type or posterior")
-        if a0 <= 0 or b0 <= 0:
-            raise ValueError("Beta parameters must be positive")
-        if not (0.0 < gamma < 1.0):
-            raise ValueError("gamma must be in (0, 1)")
-        if floor_C_spec_usd is not None and floor_L_value_usd is not None:
-            # same expression as DriftMonitor.check_credible_bound
-            floor = (1.0 - floor_alpha) * floor_C_spec_usd / (
-                floor_L_value_usd + floor_C_spec_usd)
-        else:
-            floor = -np.inf
-        row = len(self._rows)
-        self._rows.append(_RowConfig(
-            tenant=tenant, edge=tuple(edge), alpha0=a0, beta0=b0,
-            gamma=float(gamma), discount=float(discount), floor=float(floor),
-        ))
-        self._registry[key] = row
-        # the table grows lazily on the next tick (_ensure_state sees
-        # len(self._rows) > _built_rows), preserving live row state
-        return row
+        return self.store.register(
+            edge, tenant=tenant, dep_type=dep_type, k=k,
+            rare_event_p=rare_event_p, n0=n0, posterior=posterior,
+            gamma=gamma, discount=discount, floor_alpha=floor_alpha,
+            floor_C_spec_usd=floor_C_spec_usd,
+            floor_L_value_usd=floor_L_value_usd,
+            bucket=bucket, pooled=pooled)
+
+    def evict_edge(self, edge: tuple[str, str],
+                   tenant: Optional[str] = None) -> None:
+        """Drop a (tenant, edge) row entirely (free-list recycling; any
+        attached drift monitor's host state is dropped via the store's
+        ``on_evict`` hook)."""
+        self.store.evict(edge, tenant)
+
+    def attach_drift_monitor(self, monitor) -> None:
+        """Wire a ``DriftMonitor``'s host-side bookkeeping to the store's
+        row lifecycle: eviction drops the monitor's per-row state and a
+        spilled row faulting back in re-seeds its trigger-1 baseline
+        (the device-resident flags stay authoritative for trigger 2)."""
+        self.store.on_evict = monitor.evict_state
+        self.store.on_fault_in = monitor.reseed_baseline
 
     def row_index(self, edge: tuple[str, str],
                   tenant: Optional[str] = None) -> int:
-        return self._registry[(tenant, tuple(edge))]
+        return self.store.row_index(edge, tenant)
 
     def row_key(self, row: int) -> tuple[Optional[str], tuple[str, str]]:
-        cfg = self._rows[row]
-        return cfg.tenant, cfg.edge
+        return self.store.row_key(row)
 
     def row_gamma(self, row: int) -> float:
         """The §7.5 gamma the row's lower-bound gate uses."""
-        return self._rows[row].gamma
+        return self.store.row_config(row).gamma
 
     @property
     def n_rows(self) -> int:
-        return len(self._rows)
+        return self.store.n_rows
+
+    @property
+    def _rows(self) -> _RowsView:
+        return _RowsView(self.store)
+
+    def fit_hyperpriors(self, **kwargs) -> dict:
+        """Run the store's jit'd empirical-Bayes bucket fit over the
+        device-resident rows (see :meth:`PosteriorStore.fit_hyperpriors`);
+        subsequent registrations in fitted buckets are born pooled."""
+        self._ensure_ready()
+        return self.store.fit_hyperpriors(**kwargs)
 
     # ------------------------------------------------------------ state mgmt
-    def _build_state(self, keep: Optional[dict] = None) -> ServiceState:
-        n = len(self._rows)
-        if n == 0:
-            raise ValueError("no edges registered")
-        n_pad = _bucket(max(n, self.min_rows))
-        post = np.ones((n_pad, 2))
-        rowcfg = np.stack([np.full(n_pad, 0.5), np.ones(n_pad),
-                           np.full(n_pad, -np.inf)], 1)
-        flags = np.zeros((n_pad, 2), np.int32)
-        for i, cfg in enumerate(self._rows):
-            post[i] = cfg.alpha0, cfg.beta0
-            rowcfg[i] = cfg.gamma, cfg.discount, cfg.floor
-            flags[i, 0] = 1
-        tel = np.zeros((self.telemetry_capacity, len(TELEMETRY_FIELDS)))
-        tel[:, _COL["row"]] = -1.0        # empty slots filtered at drain
-        counters = np.zeros(2, np.int32)
-        if keep:
-            m = keep["post"].shape[0]
-            post[:m] = keep["post"]
-            flags[:m] = keep["flags"]
-            tel[:] = keep["tel"]
-            counters[:] = keep["counters"]
-
-        shardings = None
-        if self.mesh is not None:
-            from jax.sharding import NamedSharding, PartitionSpec
-
-            from ..sharding.rules import fleet_axis_spec
-
-            spec = fleet_axis_spec(self.mesh, n_pad, axis=self.axis_name)
-            if spec is not None:
-                row_sh = NamedSharding(self.mesh, spec)
-                rep = NamedSharding(self.mesh, PartitionSpec())
-                shardings = ServiceState(
-                    post=row_sh, rowcfg=row_sh, flags=row_sh,
-                    tel=rep, counters=rep,
-                )
-
-        state = ServiceState(
-            post=_f(post), rowcfg=_f(rowcfg),
-            flags=jnp.asarray(flags), tel=_f(tel),
-            counters=jnp.asarray(counters),
-        )
-        if shardings is not None:
-            state = jax.device_put(state, shardings)
-        return state
-
-    def _ensure_state(self) -> ServiceState:
+    def _ensure_ready(self) -> None:
+        """Materialize the store's device tables for the working dtype
+        (applying pending registrations in one batched scatter) and the
+        service-owned telemetry ring."""
         # config read (~0.2us) instead of jnp.result_type (~5us): the
         # working float dtype only ever changes through jax_enable_x64
         dtype = "float64" if jax.config.jax_enable_x64 else "float32"
-        if (self._state is not None and self._state_dtype == dtype
-                and len(self._rows) == self._built_rows):
-            return self._state
-        keep = None
-        if self._state is not None:
-            # preserve live posteriors / kill-switch state across a table
-            # growth or a dtype switch (f64 round-trip is value-exact for
-            # the f32 case; the f64 -> f32 direction re-rounds, as any
-            # dtype change must).  Only the rows that were materialized
-            # carry state — rows registered since then take their fresh
-            # configs.
-            st, built = self._state, self._built_rows
-            keep = {
-                "post": np.asarray(st.post, np.float64)[:built],
-                "flags": np.asarray(st.flags)[:built],
-                "tel": np.asarray(st.tel, np.float64),
-                "counters": np.asarray(st.counters),
-            }
-        self._state = self._build_state(keep)
-        self._state_dtype = dtype
-        self._built_rows = len(self._rows)
-        # per-tick constants, rebuilt only here (hot-path dispatch stays
-        # free of dtype machinery)
-        self._np_dtype = np.dtype(dtype)
-        self._zero = self._np_dtype.type(0.0)
-        self._cn = np.int32(self.credible_consecutive_n)
-        self._empty_out = (np.full(0, -1, np.int32),
-                          np.zeros(0, self._np_dtype))
-        return self._state
+        if self.store.n_rows == 0:
+            raise ValueError("no edges registered")
+        self.store.device_tables(dtype)
+        if self._tel is None or self._state_dtype != dtype:
+            if self._tel is not None:
+                # dtype switch: f64 round-trip is value-exact for the f32
+                # case; the f64 -> f32 direction re-rounds, as any dtype
+                # change must
+                tel = np.asarray(self._tel, np.float64)
+                counters = np.asarray(self._counters)
+            else:
+                tel = np.zeros((self.telemetry_capacity,
+                                len(TELEMETRY_FIELDS)))
+                tel[:, _COL["row"]] = -1.0    # empty slots drop at drain
+                counters = np.zeros(2, np.int32)
+            if self.store.row_sharding is not None:
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                rep = NamedSharding(self.mesh, PartitionSpec())
+                self._tel = jax.device_put(_f(tel), rep)
+                self._counters = jax.device_put(jnp.asarray(counters), rep)
+            else:
+                self._tel = _f(tel)
+                self._counters = jnp.asarray(counters)
+            self._state_dtype = dtype
+            # per-tick constants, rebuilt only here (hot-path dispatch
+            # stays free of dtype machinery)
+            self._np_dtype = np.dtype(dtype)
+            self._zero = self._np_dtype.type(0.0)
+            self._cn = np.int32(self.credible_consecutive_n)
+            self._empty_out = (np.full(0, -1, np.int32),
+                               np.zeros(0, self._np_dtype))
+
+    def _ensure_state(self) -> ServiceState:
+        self._ensure_ready()
+        post, rowcfg, flags = self.store.tables()
+        return ServiceState(post=post, rowcfg=rowcfg, flags=flags,
+                            tel=self._tel, counters=self._counters)
 
     @property
     def state(self) -> ServiceState:
@@ -556,36 +566,45 @@ class OnlineDecisionService:
 
     # -------------------------------------------------------------- queries
     def posterior_snapshot(self) -> np.ndarray:
-        """(n_rows, 2) alpha/beta copy of the live table."""
-        return np.asarray(self._ensure_state().post)[: self.n_rows].copy()
+        """(n_rows, 2) alpha/beta view composed across the store's tiers
+        (device-resident rows, spilled shelf rows, unborn priors)."""
+        self._ensure_ready()
+        return self.store.snapshot(self._np_dtype)
+
+    def rows_snapshot(self, rows) -> np.ndarray:
+        """(k, 2) f64 alpha/beta values for specific logical rows without
+        touching residency — the front-end mirror-miss read path."""
+        self._ensure_ready()
+        return self.store.rows_snapshot(rows, np.float64)
 
     def posterior(self, row: int) -> BetaPosterior:
-        a, b = self.posterior_snapshot()[row]
+        self._ensure_ready()
+        a, b = self.store.rows_snapshot([row], self._np_dtype)[0]
         return BetaPosterior.from_row(
-            a, b, discount=self._rows[row].discount)
+            a, b, discount=self.store.row_config(row).discount)
 
     def set_posterior(self, row: int, alpha: float, beta: float) -> None:
         if alpha <= 0 or beta <= 0:
             raise ValueError("Beta parameters must be positive")
-        st = self._ensure_state()
-        post = st.post.at[row].set(_f(np.array([alpha, beta])))
-        self._state = st._replace(post=post)
+        self._ensure_ready()
+        self.store.set_rows(np.asarray([row]),
+                            np.asarray([[alpha, beta]], np.float64))
 
     def enabled_snapshot(self) -> np.ndarray:
-        flags = np.asarray(self._ensure_state().flags)[: self.n_rows]
-        return flags[:, 0] > 0
+        self._ensure_ready()
+        return self.store.flags_snapshot()[:, 0] > 0
 
     def breach_runs(self) -> np.ndarray:
-        return np.asarray(self._ensure_state().flags)[: self.n_rows, 1].copy()
+        self._ensure_ready()
+        return self.store.flags_snapshot()[:, 1].copy()
 
     # ---------------------------------------------------------------- ticks
     def observe(self, row: int, success: bool) -> None:
         """Queue a settled outcome; applied (in order) on the next tick."""
         row = int(row)
-        if row < 0 or row >= self.n_rows:
-            # same contract as tick(outcomes=...): a bad row must raise
-            # here, not silently scatter onto padding at the next tick
-            raise IndexError("outcome row out of range")
+        # same contract as tick(outcomes=...): a bad (or evicted) row must
+        # raise here, not silently scatter onto padding at the next tick
+        self.store.check_rows(np.asarray([row]), "outcome")
         self._pending.append((row, bool(success)))
 
     def tick(
@@ -616,12 +635,11 @@ class OnlineDecisionService:
         arrays are handed to the jit'd call directly in the working dtype
         — per-tick overhead is dispatch-bound, not transfer-bound.
         """
-        state = self._ensure_state()
+        self._ensure_ready()
         fdtype = self._np_dtype
         rows = np.atleast_1d(np.asarray(rows, np.int32))
         B = int(rows.shape[0])
-        if B and (rows.min() < 0 or rows.max() >= self.n_rows):
-            raise IndexError("request row out of range")
+        self.store.check_rows(rows, "request")
         Bp = _bucket(B)
         req_row = np.full(Bp, -1, np.int32)
         req_row[:B] = rows
@@ -634,8 +652,10 @@ class OnlineDecisionService:
         out_row = out_x = None
         if outcomes is not None:
             outs = [(int(r), bool(s)) for r, s in outcomes]
-            if any(r < 0 or r >= self.n_rows for r, _ in outs):
-                raise IndexError("outcome row out of range")
+            if outs:
+                self.store.check_rows(
+                    np.fromiter((r for r, _ in outs), np.int64, len(outs)),
+                    "outcome")
             Sp = _bucket(len(outs), lo=1) if outs else 0
             out_row = np.full(Sp, -1, np.int32)
             out_x = np.zeros(Sp, fdtype)
@@ -664,7 +684,7 @@ class OnlineDecisionService:
         per-request conversion or validation (out-of-range rows clamp;
         :meth:`tick` is the validating wrapper).  ``out_row``/``out_x``
         are the equivalently packed settled outcomes."""
-        state = self._ensure_state()
+        self._ensure_ready()
         if (not check_drift and not self._pending and row.shape[0] == 0
                 and (out_row is None or out_row.shape[0] == 0)):
             # idle tick: nothing to settle, decide or drift-check.  The
@@ -679,7 +699,9 @@ class OnlineDecisionService:
                 batch=0 if batch is None else batch,
                 _rows=np.zeros((0, F), self._np_dtype),
                 _bools=np.zeros((0, 2), bool),
-                _drift=np.zeros(state.post.shape[0], bool))
+                _drift=np.zeros(self.store.capacity, bool),
+                _slot_logical=self.store.logical_map(),
+                _n_logical=self.store.n_rows)
         if self._pending:
             # outcomes queued via observe() settle first (arrival order),
             # ahead of this call's packed outcomes
@@ -700,13 +722,29 @@ class OnlineDecisionService:
                 out_row, out_x = pad_r, pad_x
         elif out_row is None:
             out_row, out_x = self._empty_out
+        if self.store.identity:
+            srow, sout = row, out_row
+        else:
+            # paged store: fault every row this tick touches onto the
+            # device (LRU-spilling victims), then run the jit'd tick in
+            # slot coordinates — the executable never sees logical ids,
+            # so unbounded registry growth never retraces it
+            touched = np.concatenate(
+                [row[row >= 0].astype(np.int64),
+                 out_row[out_row >= 0].astype(np.int64)])
+            self.store.ensure_resident(touched)
+            srow = self.store.translate(row)
+            sout = self.store.translate(out_row)
+        state = self._ensure_state()
         ulb = self.use_lower_bound if use_lower_bound is None else bool(use_lower_bound)
         fn = _tick_donated if self.donate else _tick
         new_state, rows_out, bools, drift = fn(
-            state, self._zero, row, reqs, out_row, out_x, self._cn,
+            state, self._zero, srow, row, reqs, sout, out_x, self._cn,
             use_lower_bound=ulb, check_drift=check_drift,
         )
-        self._state = new_state
+        self.store.adopt(new_state.post, new_state.rowcfg, new_state.flags)
+        self._tel = new_state.tel
+        self._counters = new_state.counters
         n_real = int((row >= 0).sum())
         self._slots_total += int(row.shape[0])
         self._rows_total += n_real
@@ -715,7 +753,9 @@ class OnlineDecisionService:
         # as decisions
         return TickDecisions(
             batch=n_real if batch is None else batch,
-            _rows=rows_out, _bools=bools, _drift=drift)
+            _rows=rows_out, _bools=bools, _drift=drift,
+            _slot_logical=self.store.logical_map(),
+            _n_logical=self.store.n_rows)
 
     def apply_outcomes(
         self, outcomes: Optional[Sequence[tuple[int, bool]]] = None
@@ -785,7 +825,7 @@ class OnlineDecisionService:
         """
         if not events:
             return
-        st = self._ensure_state()
+        self._ensure_ready()
         n = len(events)
         Ep = _bucket(n, lo=1)
         rows = np.zeros((Ep, len(TELEMETRY_FIELDS)), self._np_dtype)
@@ -796,8 +836,7 @@ class OnlineDecisionService:
             rows[i, _COL["row"]] = _encode_event_row(row)
             rows[i, _COL["speculate"]] = float(_EVENT_CODE[kind])
             rows[i, _COL["C_spec_usd"]] = float(usd)
-        tel = _append_tel(st.tel, rows)
-        self._state = st._replace(tel=tel)
+        self._tel = _append_tel(self._tel, rows)
         self._slots_total += Ep
         self._events_total += n
 
@@ -809,8 +848,8 @@ class OnlineDecisionService:
         evicted before this drain are counted as ``dropped`` — size the
         ring to the tick cadence.  Resilience event rows sharing the
         window (see :meth:`log_events`) are decoded into ``events``."""
-        st = self._ensure_state()
-        tel = np.asarray(st.tel)
+        self._ensure_ready()
+        tel = np.asarray(self._tel)
         # host-side unbounded totals (the device counters are int32 and
         # may wrap on long-lived services; they remain for in-graph use)
         slots, total_rows = self._slots_total, self._rows_total
@@ -882,21 +921,32 @@ def shadow_mode_batch(
     n_shadow: int = 100,
     stability_window: int = 50,
     stability_tol: float = 0.05,
+    tenants: Optional[Sequence[Optional[str]]] = None,
 ) -> list[ShadowReport]:
     """§12.2 shadow mode for a whole fleet of edges in one pass.
 
     ``posteriors`` is either a list of ``BetaPosterior`` (never mutated —
-    the same zero-exposure contract as the scalar stage) or a raw
-    ``(R, 2)`` snapshot of the online service's table (then ``discounts``
-    supplies the per-row forgetting factors).  Tier checks call the same
-    ``check_success`` per trial as the scalar stage; the posterior
-    recurrence, convergence windows and token-EMA run as array ops across
-    all R rows at once.  Per-row reports match scalar ``shadow_mode``
-    bitwise at f64 (posteriors, means, F1) and exactly (flags).
+    the same zero-exposure contract as the scalar stage), a raw ``(R, 2)``
+    snapshot of the online service's table (then ``discounts`` supplies
+    the per-row forgetting factors), or a :class:`PosteriorStore` / an
+    object holding one as ``.store`` — then each edge's alpha/beta and
+    discount are read through the store snapshot API (``tenants`` keys
+    multi-tenant rows), spilled rows included, without touching
+    residency.  Tier checks call the same ``check_success`` per trial as
+    the scalar stage; the posterior recurrence, convergence windows and
+    token-EMA run as array ops across all R rows at once.  Per-row
+    reports match scalar ``shadow_mode`` bitwise at f64 (posteriors,
+    means, F1) and exactly (flags).
     """
     R = len(edges)
     if len(trials) != R:
         raise ValueError("trials must align with edges")
+    store = getattr(posteriors, "store", posteriors)
+    if isinstance(store, PosteriorStore):
+        tens = tenants if tenants is not None else [None] * R
+        ids = [store.row_index(e, t) for e, t in zip(edges, tens)]
+        posteriors = store.rows_snapshot(np.asarray(ids, np.int64))
+        discounts = np.array([store.row_config(i).discount for i in ids])
     a, b, d, s0, f0 = _posterior_rows(posteriors, R)
     if discounts is not None:
         d = np.broadcast_to(np.asarray(discounts, float), (R,)).copy()
@@ -1034,7 +1084,10 @@ def online_calibration_batch(
 ) -> list[OnlineReport]:
     """§12.4 continuous checks for R edges over one flat decision-row
     batch (the online service's telemetry layout: ``row_index`` maps each
-    decision row onto the posterior table).
+    decision row onto the posterior table).  ``n_rows`` may be a
+    :class:`PosteriorStore` (or a service holding one) — the row space is
+    then the store's logical id range, so drained telemetry from a paged
+    service feeds straight in.
 
     The per-record work — calibration bucketing, success-rate sums,
     tier-2 false-accept and token-CoV masks — runs as array ops over all
@@ -1043,6 +1096,8 @@ def online_calibration_batch(
     equivalent per-edge ``TelemetryLog`` bitwise (rates, CIs, CoV) and
     exactly (flags).
     """
+    if not isinstance(n_rows, int):
+        n_rows = getattr(n_rows, "store", n_rows).n_rows
     row_index = np.asarray(row_index, int)
     M = row_index.shape[0]
     if M and (row_index.min() < 0 or row_index.max() >= n_rows):

@@ -335,7 +335,9 @@ class ServingFrontend:
     deterministic mode the fault-matrix tests and benchmarks use.  The
     ``service`` may be wrapped (e.g. ``faults.FaultyService``); only the
     ``tick_packed`` / ``posterior_snapshot`` / ``row_gamma`` /
-    ``use_lower_bound`` / ``observe`` / ``row_key`` surface is touched.
+    ``use_lower_bound`` / ``observe`` / ``row_key`` surface is touched
+    (plus the optional ``rows_snapshot`` lazy mirror-miss read, skipped
+    when the wrapper does not expose it).
     """
 
     def __init__(
@@ -368,10 +370,13 @@ class ServingFrontend:
         self._breached: set[int] = set()
         self._settles: list[tuple[int, bool]] = []
         self._settle_lock = threading.Lock()
-        # the scalar-fallback posterior mirror: last-known (n, 2) table
-        # copy, refreshed while the service is healthy.  Degraded-mode
-        # decisions run the scalar rule over this mirror — stale beliefs,
-        # exact arithmetic.
+        # the scalar-fallback posterior mirror: last-known (n, 2) copy of
+        # the service's composed store snapshot (device-resident, shelf
+        # -spilled and unborn rows alike), refreshed while the service is
+        # healthy.  Degraded-mode decisions run the scalar rule over this
+        # mirror — stale beliefs, exact arithmetic.  Rows registered
+        # after the last refresh fall through to a lazy per-row
+        # ``rows_snapshot`` read (see _mirror_row).
         self._snapshot = np.asarray(service.posterior_snapshot(), np.float64)
         self.stats = {
             "submitted": 0, "service": 0, "scalar": 0, "conservative": 0,
@@ -473,10 +478,22 @@ class ServingFrontend:
             ticket.release()
         ticket._resolve(res)
 
+    def _mirror_row(self, row: int) -> np.ndarray:
+        """The mirror's alpha/beta for one row, falling back to a lazy
+        store read for rows registered after the last refresh (the mirror
+        is a point-in-time copy; a paged store still answers any logical
+        row without residency changes)."""
+        if row < self._snapshot.shape[0]:
+            return self._snapshot[row]
+        rows_snapshot = getattr(self.service, "rows_snapshot", None)
+        if rows_snapshot is None:
+            return self._snapshot[row]      # historical IndexError contract
+        return np.asarray(rows_snapshot([row]), np.float64)[0]
+
     def _scalar_decide(self, req: DecisionRequest) -> FrontendResult:
         """The paper-faithful scalar D4 gate over the posterior mirror —
         bitwise-f64 ``decision.evaluate`` by construction."""
-        a, b = self._snapshot[req.row]
+        a, b = self._mirror_row(req.row)
         post = BetaPosterior(alpha=float(a), beta=float(b))
         use_lb = bool(getattr(self.service, "use_lower_bound", False))
         res = evaluate(DecisionInputs(

@@ -71,6 +71,59 @@ def test_frontend_smoke_gate_parity_and_fault_matrix():
     assert rec["requests"] > 0 and rec["shed_rate"] == 0.0
 
 
+def test_store_smoke_gate_parity_and_zero_recompile():
+    from benchmarks import store_scale
+
+    rec = store_scale.smoke()
+    bench_run.validate_store_record(rec, "store smoke record")
+    # both parity stages ran: the paged store answered churn ticks
+    # bitwise-f64 equal to the dense identity-mode service, and its
+    # batched decisions matched scalar decision.evaluate over the
+    # composed (device + shelf + unborn) snapshot
+    assert rec["parity"]["paged_vs_dense_bitwise_f64"] is True
+    assert rec["parity"]["paged_vs_scalar_bitwise_f64"] is True
+    assert rec["parity"]["rows_checked"] > 0
+    assert rec["parity"]["dense_paged"]["spills"] > 0
+    # capacity-doubling insert/evict churn left every jit cache where
+    # warm-up put it and never rebuilt the physical table
+    zr = rec["zero_recompile"]
+    assert zr["asserted"] is True and zr["rebuilds"] == 1
+    assert zr["host_capacity_doublings"] >= 1
+    # empirical-Bayes pooling: the cold row born from the fitted bucket
+    # hyperprior starts strictly tighter than the fixed taxonomy prior
+    curve = rec["cold_start"]["curve"]
+    assert rec["cold_start"]["pooled_tighter_at_birth"] is True
+    assert curve[0]["pooled_abs_err"] < curve[0]["fixed_abs_err"]
+    # smoke never makes timing claims and never writes BENCH files
+    assert rec["decisions_per_s"] == 0.0
+    assert rec["register"]["us_per_row"] == 0.0
+    assert rec["logical_rows"] < 10_000
+
+
+def test_checked_in_store_record_shape():
+    checked = bench_run.validate_bench_files()
+    assert "BENCH_store.json" in checked
+    rec = json.loads((bench_run.ROOT / "BENCH_store.json").read_text())
+    # acceptance shape: >= 1M logical rows served from a fixed physical
+    # table a fraction of that size — every touched row beyond capacity
+    # LRU-spilled to the host shelf (untouched rows stay unborn priors)
+    # — with the bitwise scalar parity gate asserted before any timing
+    assert rec["logical_rows"] >= 1_000_000
+    assert rec["memory"]["capacity"] < rec["logical_rows"]
+    assert rec["memory"]["resident_rows"] <= rec["memory"]["capacity"]
+    assert rec["memory"]["shelved_rows"] > 0
+    assert rec["decide"]["spills"] > 0 and rec["decide"]["fault_ins"] > 0
+    assert rec["parity"]["paged_vs_scalar_bitwise_f64"] is True
+    assert rec["decide"]["us_per_decision"] > 0.0
+    assert rec["decisions_per_s"] > 0.0
+    # zero recompiles across >= 3 host-capacity doublings
+    assert rec["zero_recompile"]["host_capacity_doublings"] >= 3
+    assert rec["zero_recompile"]["rebuilds"] == 1
+    # cold-start recovery: pooled strictly tighter at birth
+    curve = rec["cold_start"]["curve"]
+    assert curve[0]["pooled_abs_err"] < curve[0]["fixed_abs_err"]
+
+
 def test_checked_in_bench_files_carry_required_schema():
     checked = bench_run.validate_bench_files()
     assert "BENCH_fleet.json" in checked
@@ -122,3 +175,5 @@ def test_smoke_rejects_malformed_record():
         bench_run.validate_fleet_record({"benchmark": "x"})
     with pytest.raises(AssertionError, match="missing keys"):
         bench_run.validate_frontend_record({"benchmark": "x"})
+    with pytest.raises(AssertionError, match="missing keys"):
+        bench_run.validate_store_record({"benchmark": "x"})
