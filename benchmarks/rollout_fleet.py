@@ -1,0 +1,332 @@
+"""Staged-rollout lifecycle benchmark: gates first, Pareto table second.
+
+The rollout controller's claims are behavioral, so the gates come before
+any timing (repo discipline — parity before timing):
+
+* **scenario determinism** — the same seeded scenario replays the same
+  transition fingerprint, twice;
+* **lifecycle parity** — the in-graph phase machine's transitions and
+  its (phase, cooldown, probes, ticks, n, s) columns match a pure-Python
+  scalar reference lifecycle, tick for tick, bitwise, on an adversarial
+  flip trace;
+* **zero recompile** — phase churn (promote/demote/re-enter, config in
+  hand) never compiles a new tick executable: ``_tick._cache_size()`` is
+  flat across the storm;
+* **acceptance flip** — the issue's end-to-end criterion: a seeded
+  sudden drift flip at a known tick, driven through
+  frontend → injector → rollout → service, demotes the row within the
+  detector's trigger window, bills the demotion in USD, and re-promotes
+  through cooldown + probes once the trace reverts.
+
+Then the eight-archetype scenario fleet runs and the per-archetype
+Pareto table (speculate share vs. observed success vs. lifecycle
+outcome) is published to ``BENCH_rollout.json``.  ``--smoke`` runs
+everything with ``decisions_per_s == 0.0`` and writes nothing.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_rollout.json"
+
+SEED = 0
+# flip onset -> first demote must land within this many ticks (posterior
+# decay through the credible floor + the detector's consecutive-N)
+TRIGGER_WINDOW_TICKS = 20
+
+
+# --------------------------------------------------------------------------
+# gate 1: scenario determinism
+# --------------------------------------------------------------------------
+def assert_scenario_determinism() -> dict:
+    """Same Scenario + seed -> identical transition fingerprints and
+    event counts, run twice from scratch."""
+    from repro.serving.scenarios import adversarial_scenarios, run_scenario
+
+    checked = 0
+    for sc in adversarial_scenarios(SEED)[:3]:
+        a, b = run_scenario(sc), run_scenario(sc)
+        if a.signature() != b.signature() or a.events != b.events:
+            raise AssertionError(f"{sc.name}: replay diverged")
+        checked += 1
+    return {"deterministic": True, "scenarios_checked": checked}
+
+
+# --------------------------------------------------------------------------
+# gate 2: in-graph vs scalar lifecycle parity
+# --------------------------------------------------------------------------
+def assert_lifecycle_parity(ticks: int = 140) -> dict:
+    """Drive the controller and the pure-Python ``ReferenceLifecycle``
+    through the same flip/revert trace and the same trigger masks; every
+    tick's packed transition codes and the full roll state must match
+    exactly (integer state — no tolerance)."""
+    from repro.core.online import OnlineDecisionService
+    from repro.core.posterior import BetaPosterior
+    from repro.core.rollout import (ReferenceLifecycle, RolloutConfig,
+                                    RolloutController)
+    from repro.serving.faults import DriftTrace, FaultInjector, FaultPlan
+
+    svc = OnlineDecisionService(credible_consecutive_n=3)
+    svc.register_edge(("a", "b"), tenant="t0",
+                      posterior=BetaPosterior(alpha=16.0, beta=2.0),
+                      discount=0.9, floor_alpha=0.3,
+                      floor_C_spec_usd=1.0, floor_L_value_usd=1.0)
+    cfg = RolloutConfig(cooldown_ticks=6, probe_budget=4, min_obs=(3, 3, 3))
+    ctl = RolloutController(svc, cfg)
+    ref = ReferenceLifecycle(1, cfg)
+    inj = FaultInjector(FaultPlan(
+        trace=DriftTrace.flip(20, rate1=0.02, revert_at=55), seed=7))
+    n_trans = 0
+    for _ in range(ticks):
+        ok = inj.outcome()
+        d = ctl.tick([0], alpha=0.5, lambda_usd_per_s=0.9, latency_s=3.0,
+                     input_tokens=500, output_tokens=300,
+                     input_price=3e-6, output_price=15e-6,
+                     outcomes=[(0, ok)])
+        ref_out = ref.tick([0], {0: (1, 1 if ok else 0)},
+                           np.flatnonzero(d.drift_triggered))
+        dev = {int(r): int(c)
+               for r, c in enumerate(d.rollout_transitions) if c}
+        if dev != ref_out:
+            raise AssertionError(
+                f"transition mismatch: device {dev} != scalar {ref_out}")
+        n_trans += len(dev)
+        got = np.asarray(svc.store.roll_snapshot()[0])
+        want = np.asarray(ref.rows[0], np.int32)
+        if not np.array_equal(got, want):
+            raise AssertionError(
+                f"roll state mismatch: device {got} != scalar {want}")
+    if n_trans < 6:
+        raise AssertionError(
+            f"parity trace exercised only {n_trans} transitions")
+    return {"in_graph_vs_scalar_lifecycle": True, "ticks": ticks,
+            "transitions": n_trans, "roll_state_bitwise": True}
+
+
+# --------------------------------------------------------------------------
+# gate 3: zero recompile across phase churn
+# --------------------------------------------------------------------------
+def assert_zero_recompile(ticks: int = 90) -> dict:
+    """Promotions, demotions, cooldowns and re-entries are all operand
+    churn: after the two tick executables warm up (settle-free and
+    packed-outcome), the jit cache must not grow while the lifecycle
+    storms through every phase."""
+    from repro.core import online as online_mod
+    from repro.core.online import OnlineDecisionService
+    from repro.core.posterior import BetaPosterior
+    from repro.core.rollout import RolloutConfig, RolloutController
+    from repro.serving.faults import DriftTrace, FaultInjector, FaultPlan
+
+    svc = OnlineDecisionService(credible_consecutive_n=3)
+    for r in range(4):
+        svc.register_edge((f"a{r}", f"b{r}"), tenant=f"t{r % 2}",
+                          posterior=BetaPosterior(alpha=16.0, beta=2.0),
+                          discount=0.9, floor_alpha=0.3,
+                          floor_C_spec_usd=1.0, floor_L_value_usd=1.0)
+    ctl = RolloutController(
+        svc, RolloutConfig(cooldown_ticks=4, probe_budget=4,
+                           min_obs=(3, 3, 3)))
+    inj = [FaultInjector(FaultPlan(
+        trace=DriftTrace.flip(15 + 5 * r, rate1=0.02, revert_at=45 + 5 * r),
+        seed=SEED + r)) for r in range(4)]
+
+    def one_tick(i: int) -> None:
+        ctl.tick(list(range(4)), alpha=0.5, lambda_usd_per_s=0.9,
+                 latency_s=3.0, input_tokens=500, output_tokens=300,
+                 input_price=3e-6, output_price=15e-6,
+                 outcomes=[(r, inj[r].outcome()) for r in range(4)])
+
+    for i in range(5):                    # warm both executables
+        one_tick(i)
+    warm = online_mod._tick._cache_size()
+    for i in range(5, ticks):
+        one_tick(i)
+    end = online_mod._tick._cache_size()
+    if end != warm:
+        raise AssertionError(
+            f"phase churn recompiled: cache {warm} -> {end}")
+    kinds = {t["kind"] for t in ctl.transitions}
+    if not {"rollout_promote", "rollout_demote"} <= kinds:
+        raise AssertionError(
+            f"churn run failed to exercise the lifecycle: {kinds}")
+    return {"asserted": True, "churn_ticks": ticks,
+            "tick_executables": warm, "transition_kinds": sorted(kinds)}
+
+
+# --------------------------------------------------------------------------
+# gate 4: the acceptance flip, end to end
+# --------------------------------------------------------------------------
+def acceptance_flip() -> dict:
+    """The issue's acceptance scenario through the full stack: flip at a
+    known tick -> demote inside the trigger window, billed in USD ->
+    revert -> cooldown + probes -> re-promoted to FULL."""
+    from repro.serving.scenarios import adversarial_scenarios, run_scenario
+
+    sc = adversarial_scenarios(SEED)[0]          # sudden_flip
+    flip_at = sc.traces[0].at
+    revert_at = sc.traces[0].until
+    res = run_scenario(sc)
+    if not res.demote_ticks:
+        raise AssertionError("flip scenario never demoted")
+    first_demote = res.demote_ticks[0]
+    if not (flip_at <= first_demote <= flip_at + TRIGGER_WINDOW_TICKS):
+        raise AssertionError(
+            f"demote at tick {first_demote} outside "
+            f"[{flip_at}, {flip_at + TRIGGER_WINDOW_TICKS}]")
+    usd = res.usd_attribution.get("tenant0|rollout_demote", 0.0)
+    if usd <= 0.0:
+        raise AssertionError("demotion carried no USD attribution")
+    if res.final_phases != ["FULL"]:
+        raise AssertionError(
+            f"row did not re-promote after revert: {res.final_phases}")
+    re_promotes = [t for t in res.promote_ticks if t > revert_at]
+    if len(re_promotes) < 3:
+        raise AssertionError(
+            f"expected the full re-promotion ladder after revert, "
+            f"got promotes at {res.promote_ticks}")
+    if res.events.get("rollout_reenter", 0) < 1:
+        raise AssertionError("recovery skipped the cooldown re-entry probe")
+    if res.events.get("drift_trip", 0) < 1:
+        raise AssertionError("frontend never folded the breach into a trip")
+    return {
+        "flip_at": flip_at, "revert_at": revert_at,
+        "first_demote_tick": first_demote,
+        "trigger_window_ticks": TRIGGER_WINDOW_TICKS,
+        "demote_usd": round(usd, 6),
+        "re_promote_ticks": re_promotes,
+        "final_phase": res.final_phases[0],
+        "events": res.events,
+    }
+
+
+# --------------------------------------------------------------------------
+# the Pareto table
+# --------------------------------------------------------------------------
+def pareto_table(ticks: int = 90) -> list[dict]:
+    """One row per production archetype: dominant-mode probability in,
+    lifecycle outcome out.  'Pareto' because the frontier is visible in
+    the columns — speculate share bought vs. demotions paid."""
+    from repro.core.archetypes import ARCHETYPES
+    from repro.serving.scenarios import archetype_scenarios, run_scenario
+
+    rows = []
+    for sc in archetype_scenarios(SEED, ticks=ticks):
+        res = run_scenario(sc)
+        arch = ARCHETYPES[sc.archetype]
+        rows.append({
+            "archetype": sc.archetype,
+            "p_mode": round(arch.profile().p_mode, 4),
+            "speculate_rate": round(res.speculate_rate, 4),
+            "success_rate": round(res.success_rate, 4),
+            "final_phases": res.phase_counts(),
+            "promotes": len(res.promote_ticks),
+            "demotes": len(res.demote_ticks),
+            "demote_usd": round(sum(
+                v for k, v in res.usd_attribution.items()
+                if k.endswith("|rollout_demote")), 6),
+            "events": res.events,
+        })
+    rows.sort(key=lambda r: -r["p_mode"])
+    return rows
+
+
+def _assert_pareto_separates(rows: list[dict]) -> None:
+    """The table must actually separate: the highest-p_mode archetype
+    ends FULL with no demotions; the lowest never leaves SHADOW."""
+    top, bottom = rows[0], rows[-1]
+    if top["final_phases"] != {"FULL": 1} or top["demotes"] != 0:
+        raise AssertionError(f"best-fit archetype did not run clean: {top}")
+    if "FULL" in bottom["final_phases"] or bottom["promotes"] != 0:
+        raise AssertionError(
+            f"worst-fit archetype was promoted anyway: {bottom}")
+
+
+# --------------------------------------------------------------------------
+# the record
+# --------------------------------------------------------------------------
+def _record(*, timed: bool, pareto_ticks: int = 90) -> dict:
+    determinism = assert_scenario_determinism()
+    parity = assert_lifecycle_parity()
+    zero_recompile = assert_zero_recompile()
+    acceptance = acceptance_flip()
+    pareto = pareto_table(ticks=pareto_ticks)
+    _assert_pareto_separates(pareto)
+
+    decisions_per_s = 0.0
+    if timed:
+        from repro.core.online import OnlineDecisionService
+        from repro.core.posterior import BetaPosterior
+        from repro.core.rollout import RolloutConfig, RolloutController
+
+        svc = OnlineDecisionService(credible_consecutive_n=3)
+        n = 64
+        for r in range(n):
+            svc.register_edge((f"a{r}", "b"), tenant=f"t{r % 8}",
+                              posterior=BetaPosterior(alpha=16.0, beta=2.0),
+                              discount=0.9, floor_alpha=0.3,
+                              floor_C_spec_usd=1.0, floor_L_value_usd=1.0)
+        ctl = RolloutController(svc, RolloutConfig())
+        rows = list(range(n))
+        outcomes = [(r, True) for r in rows]
+        kw = dict(alpha=0.5, lambda_usd_per_s=0.9, latency_s=3.0,
+                  input_tokens=500, output_tokens=300,
+                  input_price=3e-6, output_price=15e-6, outcomes=outcomes)
+        for _ in range(5):
+            ctl.tick(rows, **kw)
+        reps = 200
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            ctl.tick(rows, **kw)
+        wall = time.perf_counter() - t0
+        decisions_per_s = reps * n / wall
+
+    return {
+        "benchmark": "rollout_lifecycle_fleet",
+        "seed": SEED,
+        "decisions_per_s": round(decisions_per_s, 2),
+        "determinism": determinism,
+        "parity": parity,
+        "zero_recompile": zero_recompile,
+        "acceptance": acceptance,
+        "pareto": pareto,
+    }
+
+
+def rollout_record(*, write: bool = True) -> dict:
+    """Gates -> Pareto fleet -> timed rollout tick -> BENCH_rollout.json."""
+    record = _record(timed=True)
+    if write:
+        BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    return record
+
+
+def smoke() -> dict:
+    """The --smoke gate: every behavioral gate at full strength (they are
+    all deterministic virtual-tick runs — no wall-clock claims), a
+    shortened Pareto fleet, ``decisions_per_s == 0.0``, nothing
+    written."""
+    return _record(timed=False, pareto_ticks=60)
+
+
+def benchmarks() -> list[tuple[str, float, str]]:
+    rec = rollout_record()
+    acc = rec["acceptance"]
+    us_per_decision = 1e6 / rec["decisions_per_s"]
+    full = sum(1 for r in rec["pareto"]
+               if r["final_phases"] == {"FULL": 1})
+    return [(
+        "rollout_lifecycle",
+        us_per_decision,
+        (f"{rec['decisions_per_s']:.0f} decisions/s under lifecycle | "
+         f"demote {acc['first_demote_tick'] - acc['flip_at']} ticks "
+         f"after flip (${acc['demote_usd']:.2f}) | "
+         f"{full}/{len(rec['pareto'])} archetypes reach FULL"),
+    )]
+
+
+if __name__ == "__main__":
+    print(json.dumps(rollout_record(), indent=2))

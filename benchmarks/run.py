@@ -65,6 +65,16 @@ _STORE_KEYS = {
     "memory", "cold_start",
 }
 
+# BENCH_rollout.json schema (see rollout_fleet.rollout_record)
+_ROLLOUT_KEYS = {
+    "benchmark", "seed", "decisions_per_s", "determinism", "parity",
+    "zero_recompile", "acceptance", "pareto",
+}
+_ROLLOUT_PARETO_KEYS = {
+    "archetype", "p_mode", "speculate_rate", "success_rate",
+    "final_phases", "promotes", "demotes", "demote_usd", "events",
+}
+
 
 def _require(present, required, what: str) -> None:
     missing = sorted(required - set(present))
@@ -156,6 +166,35 @@ def validate_store_record(rec: dict, what: str = "store record") -> None:
                  f"{what}.cold_start.curve")
 
 
+def validate_rollout_record(rec: dict, what: str = "rollout record") -> None:
+    """Assert the BENCH_rollout.json shape (full and --smoke records)."""
+    _require(rec, _ROLLOUT_KEYS, what)
+    if not rec["determinism"].get("deterministic"):
+        raise AssertionError(f"{what}: scenario determinism gate false")
+    par = rec["parity"]
+    _require(par, {"in_graph_vs_scalar_lifecycle", "ticks", "transitions",
+                   "roll_state_bitwise"}, f"{what}.parity")
+    if not (par["in_graph_vs_scalar_lifecycle"]
+            and par["roll_state_bitwise"]):
+        raise AssertionError(f"{what}: lifecycle parity gate false")
+    zr = rec["zero_recompile"]
+    _require(zr, {"asserted", "churn_ticks", "tick_executables",
+                  "transition_kinds"}, f"{what}.zero_recompile")
+    if not zr["asserted"]:
+        raise AssertionError(f"{what}: zero-recompile churn not asserted")
+    acc = rec["acceptance"]
+    _require(acc, {"flip_at", "revert_at", "first_demote_tick",
+                   "trigger_window_ticks", "demote_usd",
+                   "re_promote_ticks", "final_phase", "events"},
+             f"{what}.acceptance")
+    if acc["final_phase"] != "FULL" or acc["demote_usd"] <= 0.0:
+        raise AssertionError(f"{what}: acceptance scenario not met: {acc}")
+    if not rec["pareto"]:
+        raise AssertionError(f"{what}: empty Pareto table")
+    for row in rec["pareto"]:
+        _require(row, _ROLLOUT_PARETO_KEYS, f"{what}.pareto row")
+
+
 def validate_bench_files() -> list[str]:
     """Schema-check every checked-in BENCH_*.json; returns the paths."""
     checked = []
@@ -167,6 +206,8 @@ def validate_bench_files() -> list[str]:
             validate_frontend_record(obj, path.name)
         elif path.name == "BENCH_store.json":
             validate_store_record(obj, path.name)
+        elif path.name == "BENCH_rollout.json":
+            validate_rollout_record(obj, path.name)
         else:
             _require(obj, _ROWS_KEYS, path.name)
             for row in obj["rows"]:
@@ -183,8 +224,10 @@ def smoke() -> dict:
     front-end open-loop gate (deterministic seeded arrival trace on a
     virtual clock: parity, fault matrix, schema) AND the paged posterior
     store gate (dense/scalar bitwise parity, zero-recompile churn,
-    pooled cold start) — all without touching any BENCH file."""
-    from . import frontend_load, store_scale, workflow_sim
+    pooled cold start) AND the staged-rollout lifecycle gate (scenario
+    determinism, scalar lifecycle parity, zero-recompile phase churn,
+    the acceptance flip) — all without touching any BENCH file."""
+    from . import frontend_load, rollout_fleet, store_scale, workflow_sim
 
     rec = workflow_sim.smoke()
     validate_fleet_record(rec, "smoke record")
@@ -192,6 +235,8 @@ def smoke() -> dict:
     validate_frontend_record(fe_rec, "frontend smoke record")
     st_rec = store_scale.smoke()
     validate_store_record(st_rec, "store smoke record")
+    ro_rec = rollout_fleet.smoke()
+    validate_rollout_record(ro_rec, "rollout smoke record")
     checked = validate_bench_files()
     print(f"smoke ok: parity gates passed, schema ok for {checked}")
     return rec
@@ -213,8 +258,8 @@ def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
 
 
 def main(only: list[str] | None = None) -> None:
-    from . import (appendix_d, frontend_load, paper_tables, perf, roofline,
-                   store_scale, workflow_sim)
+    from . import (appendix_d, frontend_load, paper_tables, perf,
+                   rollout_fleet, roofline, store_scale, workflow_sim)
 
     modules = {
         "paper_tables": paper_tables,
@@ -224,6 +269,7 @@ def main(only: list[str] | None = None) -> None:
         "roofline": roofline,
         "frontend_load": frontend_load,
         "store_scale": store_scale,
+        "rollout_fleet": rollout_fleet,
     }
     if only:
         unknown = sorted(set(only) - set(modules))

@@ -57,6 +57,13 @@ from .online import (
     online_calibration_batch,
     shadow_mode_batch,
 )
+from .rollout import (
+    PHASE_NAMES,
+    ReferenceLifecycle,
+    RolloutConfig,
+    RolloutController,
+    decode_transition,
+)
 from .store import BucketPrior, PosteriorStore
 from .streaming import (
     RhoEstimator,
@@ -98,6 +105,9 @@ __all__ = [
     "online_calibration_batch",
     # §14.3 paged hierarchical posterior store (empirical-Bayes pooling)
     "PosteriorStore", "BucketPrior",
+    # §12.5 staged-rollout lifecycle over the store's roll columns
+    "RolloutConfig", "RolloutController", "ReferenceLifecycle",
+    "PHASE_NAMES", "decode_transition",
     # §9
     "StreamingReestimator", "RhoEstimator", "fractional_waste",
     "expected_speculation_waste",

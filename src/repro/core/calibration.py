@@ -683,30 +683,3 @@ def seed_store_from_replay(
     tenant_edges, alpha, beta = report.final_posterior_rows(grid_index)
     return store.adopt_posteriors(tenant_edges, alpha, beta,
                                   **register_kwargs)
-
-
-# ---------------------------------------------------------------------------
-# Fleet-replay -> posterior-store bridge (§12.1 deployment seeding at scale)
-# ---------------------------------------------------------------------------
-def seed_store_from_replay(
-    store,
-    report,
-    grid_index: int = 0,
-    **register_kwargs,
-) -> list[int]:
-    """Load one grid cell of a ``MultiTenantReport`` (the fleet replay
-    engine's output) into a ``repro.core.store.PosteriorStore`` — the
-    §12.1 "deploy with data-seeded priors" step, fleet-wide.
-
-    Every (tenant, edge) row the replay produced is upserted: unknown
-    keys register data-seeded from their final replay posterior (so the
-    store's free-list / paging machinery owns them from birth), known
-    keys get their alpha/beta overwritten in one batched scatter.
-    Returns the logical row id per replay row, aligned with
-    ``report.final_posterior_rows(grid_index)``.  Extra keyword
-    arguments (``gamma=``, ``discount=``, ``floor_*=``...) pass through
-    to ``PosteriorStore.register`` for the newly-created rows.
-    """
-    tenant_edges, alpha, beta = report.final_posterior_rows(grid_index)
-    return store.adopt_posteriors(tenant_edges, alpha, beta,
-                                  **register_kwargs)

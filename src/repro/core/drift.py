@@ -72,6 +72,9 @@ class DriftMonitor:
 
     edges: dict[tuple[str, str], EdgeState] = dataclasses.field(default_factory=dict)
     global_alpha_zero: bool = False
+    # tenants whose own cost SLO tripped: alpha <- 0 for that tenant only
+    tenant_alpha_zero: set = dataclasses.field(default_factory=set)
+    tenant_budgets_usd: dict[str, float] = dataclasses.field(default_factory=dict)
     model_versions: dict[str, str] = dataclasses.field(default_factory=dict)
     _credible_breach_run: dict[tuple[str, str], int] = dataclasses.field(default_factory=dict)
     events: list[TriggerEvent] = dataclasses.field(default_factory=list)
@@ -320,31 +323,55 @@ class DriftMonitor:
 
     # ------------------------------------------------------------ trigger 3
     def check_tier2_false_accept(
-        self, edge: tuple[str, str], rate: Optional[float]
+        self, edge: tuple[str, str], rate: Optional[float],
+        tenant: Optional[str] = None,
     ) -> Optional[TriggerEvent]:
+        """Tier-2 false-accept rate above tolerance -> disable the
+        (tenant, edge) row and page on-call.  ``tenant`` scopes the
+        kill-switch: tenant A's false accepts must never disable tenant
+        B's same-named edge."""
         if rate is None or rate <= self.tier2_false_accept_tol:
             return None
-        st = self.state(edge)
+        st = self.state(edge, tenant)
         st.enabled = False
         st.page_oncall = True
         ev = TriggerEvent(
             TriggerKind.TIER2_FALSE_ACCEPT, "edge", edge,
             action="disable speculation; page on-call",
             detail=f"false-accept rate {rate:.3f} > {self.tier2_false_accept_tol}",
+            tenant=tenant,
         )
         self.events.append(ev)
         return ev
 
     # ------------------------------------------------------------ trigger 4
-    def check_cost_slo(self, spend_usd: float) -> Optional[TriggerEvent]:
-        """Monthly cost SLO tripped -> alpha <- 0 for all edges until next cycle."""
-        if self.monthly_budget_usd is None or spend_usd <= self.monthly_budget_usd:
+    def check_cost_slo(self, spend_usd: float,
+                       tenant: Optional[str] = None) -> Optional[TriggerEvent]:
+        """Monthly cost SLO tripped -> alpha <- 0 until the next cycle.
+
+        With ``tenant=None`` the historical global semantics apply: the
+        fleet-wide budget, and a breach zeroes alpha for *every* edge.
+        With a tenant, the budget is ``tenant_budgets_usd[tenant]``
+        (falling back to the global ``monthly_budget_usd``) and a breach
+        zeroes alpha only for that tenant's edges — one tenant
+        overspending must not freeze speculation fleet-wide.
+        """
+        budget = (self.tenant_budgets_usd.get(tenant, self.monthly_budget_usd)
+                  if tenant is not None else self.monthly_budget_usd)
+        if budget is None or spend_usd <= budget:
             return None
-        self.global_alpha_zero = True
+        if tenant is None:
+            self.global_alpha_zero = True
+            scope, action = "global", "alpha <- 0 for all edges until next billing cycle"
+        else:
+            self.tenant_alpha_zero.add(tenant)
+            scope = "tenant"
+            action = f"alpha <- 0 for tenant {tenant!r} until next billing cycle"
         ev = TriggerEvent(
-            TriggerKind.COST_SLO, "global", None,
-            action="alpha <- 0 for all edges until next billing cycle",
-            detail=f"spend ${spend_usd:.2f} > budget ${self.monthly_budget_usd:.2f}",
+            TriggerKind.COST_SLO, scope, None,
+            action=action,
+            detail=f"spend ${spend_usd:.2f} > budget ${budget:.2f}",
+            tenant=tenant,
         )
         self.events.append(ev)
         return ev
@@ -372,16 +399,20 @@ class DriftMonitor:
 
     # ------------------------------------------------------------ trigger 6
     def check_token_cov(
-        self, edge: tuple[str, str], cov: Optional[float]
+        self, edge: tuple[str, str], cov: Optional[float],
+        tenant: Optional[str] = None,
     ) -> Optional[TriggerEvent]:
+        """Token-count CoV above threshold -> disable the (tenant, edge)
+        row; keyed per tenant like triggers 2 and 3."""
         if cov is None or cov <= self.token_cov_threshold:
             return None
-        st = self.state(edge)
+        st = self.state(edge, tenant)
         st.enabled = False
         ev = TriggerEvent(
             TriggerKind.TOKEN_COV, "edge", edge,
             action="disable speculation until CoV drops below threshold",
             detail=f"CoV {cov:.3f} > {self.token_cov_threshold}",
+            tenant=tenant,
         )
         self.events.append(ev)
         return ev
@@ -390,6 +421,8 @@ class DriftMonitor:
     def effective_alpha(self, edge: tuple[str, str], alpha: float,
                         tenant: Optional[str] = None) -> float:
         if self.global_alpha_zero:
+            return 0.0
+        if tenant is not None and tenant in self.tenant_alpha_zero:
             return 0.0
         return min(1.0, max(0.0, alpha + self.state(edge, tenant).alpha_offset))
 

@@ -66,6 +66,7 @@ from .calibration import (
 )
 from .decision import Decision, DecisionResult
 from .posterior import BetaPosterior
+from .rollout import rollout_advance, rollout_allow
 from .store import PosteriorStore, _RowConfig
 from .success import TierPolicy, check_success
 from .taxonomy import DEFAULT_N0, DependencyType
@@ -111,18 +112,20 @@ def _decode_event_row(v: float) -> Optional[int]:
 
 
 class ServiceState(NamedTuple):
-    """Device-resident service state (a pytree of five packed arrays —
+    """Device-resident service state (a pytree of six packed arrays —
     few, large leaves keep per-tick dispatch overhead low on CPU)."""
 
     post: jax.Array      # (N, 2) posterior alpha/beta rows
     rowcfg: jax.Array    # (N, 3) per-row [gamma, discount, trigger-2 floor]
     flags: jax.Array     # (N, 2) int32 [enabled, breach_run]
+    roll: jax.Array      # (N, 6) int32 rollout lifecycle columns
     tel: jax.Array       # (R, F) telemetry ring (last R slots, oldest first)
     counters: jax.Array  # (2,)   int32 [slots ever appended, real rows ever]
 
 
 def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
-               consecutive_n, use_lower_bound, check_drift):
+               consecutive_n, rollcfg, use_lower_bound, check_drift,
+               use_rollout):
     """One service tick, entirely in-graph.
 
     ``row`` / ``out_row`` use -1 as the padding sentinel (shape buckets)
@@ -143,10 +146,16 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
          the §7.5 lower bound (one vmapped ``betaincinv``);
       3. drift/kill-switch — one ``check_credible_bound_batch``-semantics
          breach step per *touched* row (post-settlement posteriors);
+      3b. rollout lifecycle (``use_rollout``) — the staged-rollout state
+         machine advances on the same touched mask: serving is gated by
+         the *pre-tick* phase (``rollout.rollout_allow``), demotion by
+         this tick's kill-switch triggers, promotion by the accumulated
+         outcome evidence (``rollout.rollout_advance``; ``rollcfg`` is
+         the encoded RolloutConfig vector — dynamic, never a recompile);
       4. telemetry — the tick's decision rows (which double as the
          returned decisions) appended to the ring, oldest slots evicted.
     """
-    post, rowcfg, flags, tel, counters = state
+    post, rowcfg, flags, roll, tel, counters = state
 
     # ---- 1. settle this tick's outcomes (exact discount recurrence).
     # ``a*d + zero`` pins round(a*d) (or is the identity fma), so the
@@ -177,14 +186,22 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
         P_used, reqs[:, 0], reqs[:, 1], reqs[:, 2], reqs[:, 3], reqs[:, 4],
         reqs[:, 5], reqs[:, 6], zero)
     enabled_req = flags[ri, 0] > 0
+    if use_rollout:
+        # serving gated by the PRE-tick lifecycle state: SHADOW rows are
+        # decided + logged but answer WAIT; CANARY serves its period tick.
+        # The lifecycle gate folds into the per-request enabled bit so
+        # TickDecisions.speculate (and the frontend reading it) agrees
+        # with the telemetry "speculate" column.
+        enabled_req = enabled_req & rollout_allow(roll, rollcfg)[ri]
     served = flag & enabled_req
 
     # ---- 3. drift / kill-switch (trigger 2 semantics, per touched row)
     n_rows = post.shape[0]
-    if check_drift:
-        run = flags[:, 1]
+    if check_drift or use_rollout:
         touched = jnp.zeros(n_rows, jnp.int32).at[ri].add(
             valid.astype(jnp.int32)) > 0
+    if check_drift:
+        run = flags[:, 1]
         P_low = betaincinv(post[:, 0], post[:, 1], rowcfg[:, 0])
         breached = touched & (P_low < rowcfg[:, 2])
         run = jnp.where(touched, jnp.where(breached, run + 1, 0), run)
@@ -194,6 +211,26 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
         flags = jnp.stack([enabled.astype(jnp.int32), run], 1)
     else:
         triggered = jnp.zeros(n_rows, bool)
+
+    # ---- 3b. rollout lifecycle advance over the post-drift state
+    if use_rollout:
+        if out_row.shape[0]:      # static: the S=0 executable skips it
+            ovalid = (out_row >= 0).astype(jnp.int32)
+            ori = jnp.maximum(out_row, 0)
+            n_out = jnp.zeros(n_rows, jnp.int32).at[ori].add(ovalid)
+            s_out = jnp.zeros(n_rows, jnp.int32).at[ori].add(
+                ovalid * (out_x > 0.5).astype(jnp.int32))
+        else:
+            n_out = s_out = jnp.zeros(n_rows, jnp.int32)
+        # per-row L_value sums: the latency value a demotion walks away
+        # from this tick — the USD the transition event is billed
+        row_L = jnp.zeros(n_rows, post.dtype).at[ri].add(
+            jnp.where(valid, L_value, 0.0))
+        roll, flags, transitions = rollout_advance(
+            roll, flags, triggered, touched, n_out, s_out, rollcfg)
+    else:
+        transitions = jnp.zeros(0, jnp.int32)
+        row_L = jnp.zeros(0, post.dtype)
 
     # ---- 4. telemetry: the decision rows ARE the ring rows.  The ring
     # holds the most recent R slots in order (append + evict is two
@@ -214,16 +251,16 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
         [jnp.asarray(Bp, jnp.int32), valid.sum(dtype=jnp.int32)])
 
     new_state = ServiceState(post=post, rowcfg=rowcfg, flags=flags,
-                             tel=tel, counters=counters)
+                             roll=roll, tel=tel, counters=counters)
     bools = jnp.stack([flag, enabled_req], 1)
-    return new_state, rows_out, bools, triggered
+    return new_state, rows_out, bools, triggered, transitions, row_L
 
 
 # Donation is opt-in (OnlineDecisionService(donate=True)): aliasing the
 # state buffers caps memory at two table copies — the double-buffer story
 # for HBM-resident million-row tables — but measurably slows CPU dispatch,
 # so the default follows multi_tenant_replay(donate=False).
-_TICK_STATICS = ("use_lower_bound", "check_drift")
+_TICK_STATICS = ("use_lower_bound", "check_drift", "use_rollout")
 _tick = functools.partial(jax.jit, static_argnames=_TICK_STATICS)(_tick_impl)
 _tick_donated = functools.partial(
     jax.jit, static_argnames=_TICK_STATICS, donate_argnums=(0,))(_tick_impl)
@@ -278,6 +315,10 @@ class TickDecisions:
     # high-water mark, so drift_triggered reads in logical coordinates
     _slot_logical: Any = None
     _n_logical: int = 0
+    # rollout ticks: packed per-slot transition codes and per-slot
+    # L_value sums (None when the tick ran without the rollout static)
+    _transitions: Any = None
+    _row_L: Any = None
     _cache: dict = dataclasses.field(default_factory=dict)
 
     def _col(self, name: str) -> np.ndarray:
@@ -346,6 +387,41 @@ class TickDecisions:
                 mask = out
             self._cache["drift"] = mask
         return self._cache["drift"]
+
+    def _logical_vec(self, arr, dtype) -> np.ndarray:
+        """Compose a per-physical-slot vector into logical coordinates
+        (identity mode truncates; paged mode maps through the tick's
+        slot -> logical snapshot)."""
+        out = np.zeros(self._n_logical, dtype)
+        if arr is None:
+            return out
+        vec = np.asarray(arr)
+        if self._slot_logical is None:
+            n = min(vec.shape[0], self._n_logical)
+            out[:n] = vec[:n]
+            return out
+        sl = self._slot_logical
+        res = sl >= 0
+        out[sl[res]] = vec[: sl.shape[0]][res]
+        return out
+
+    @property
+    def rollout_transitions(self) -> np.ndarray:
+        """(n_logical,) int32 packed lifecycle transition codes
+        (``rollout.decode_transition``; 0 = no transition) — zeros when
+        the tick ran without the rollout machine."""
+        if "trans" not in self._cache:
+            self._cache["trans"] = self._logical_vec(
+                self._transitions, np.int32)
+        return self._cache["trans"]
+
+    @property
+    def rollout_usd(self) -> np.ndarray:
+        """(n_logical,) summed L_value USD over each row's requests this
+        tick — the demotion-billing vector."""
+        if "row_L" not in self._cache:
+            self._cache["row_L"] = self._logical_vec(self._row_L, np.float64)
+        return self._cache["row_L"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -553,12 +629,16 @@ class OnlineDecisionService:
             self._cn = np.int32(self.credible_consecutive_n)
             self._empty_out = (np.full(0, -1, np.int32),
                                np.zeros(0, self._np_dtype))
+            # placeholder rollout config operand for non-rollout ticks
+            # (one fixed array — never churns the executable's operands)
+            self._null_rollcfg = np.ones(9, np.int32)
 
     def _ensure_state(self) -> ServiceState:
         self._ensure_ready()
-        post, rowcfg, flags = self.store.tables()
+        post, rowcfg, flags, roll = self.store.tables()
         return ServiceState(post=post, rowcfg=rowcfg, flags=flags,
-                            tel=self._tel, counters=self._counters)
+                            roll=roll, tel=self._tel,
+                            counters=self._counters)
 
     @property
     def state(self) -> ServiceState:
@@ -621,6 +701,8 @@ class OnlineDecisionService:
         outcomes: Optional[Sequence[tuple[int, bool]]] = None,
         use_lower_bound: Optional[bool] = None,
         check_drift: bool = False,
+        use_rollout: bool = False,
+        rollout_cfg: Optional[np.ndarray] = None,
     ) -> TickDecisions:
         """Answer B decision requests in one donated XLA call.
 
@@ -663,7 +745,8 @@ class OnlineDecisionService:
                 out_row[i], out_x[i] = r, float(s)
         return self.tick_packed(
             req_row, reqs, batch=B, out_row=out_row, out_x=out_x,
-            use_lower_bound=use_lower_bound, check_drift=check_drift)
+            use_lower_bound=use_lower_bound, check_drift=check_drift,
+            use_rollout=use_rollout, rollout_cfg=rollout_cfg)
 
     def tick_packed(
         self,
@@ -675,6 +758,8 @@ class OnlineDecisionService:
         out_x: Optional[np.ndarray] = None,
         use_lower_bound: Optional[bool] = None,
         check_drift: bool = False,
+        use_rollout: bool = False,
+        rollout_cfg: Optional[np.ndarray] = None,
     ) -> TickDecisions:
         """The zero-copy hot path: the caller hands the packed request
         block its batcher accumulated between ticks — ``row`` (Bp,) int32
@@ -737,12 +822,16 @@ class OnlineDecisionService:
             sout = self.store.translate(out_row)
         state = self._ensure_state()
         ulb = self.use_lower_bound if use_lower_bound is None else bool(use_lower_bound)
+        rcfg = (self._null_rollcfg if rollout_cfg is None
+                else np.asarray(rollout_cfg, np.int32))
         fn = _tick_donated if self.donate else _tick
-        new_state, rows_out, bools, drift = fn(
+        new_state, rows_out, bools, drift, transitions, row_L = fn(
             state, self._zero, srow, row, reqs, sout, out_x, self._cn,
-            use_lower_bound=ulb, check_drift=check_drift,
+            rcfg, use_lower_bound=ulb, check_drift=check_drift,
+            use_rollout=bool(use_rollout),
         )
-        self.store.adopt(new_state.post, new_state.rowcfg, new_state.flags)
+        self.store.adopt(new_state.post, new_state.rowcfg, new_state.flags,
+                         new_state.roll)
         self._tel = new_state.tel
         self._counters = new_state.counters
         n_real = int((row >= 0).sum())
@@ -755,7 +844,9 @@ class OnlineDecisionService:
             batch=n_real if batch is None else batch,
             _rows=rows_out, _bools=bools, _drift=drift,
             _slot_logical=self.store.logical_map(),
-            _n_logical=self.store.n_rows)
+            _n_logical=self.store.n_rows,
+            _transitions=transitions if use_rollout else None,
+            _row_L=row_L if use_rollout else None)
 
     def apply_outcomes(
         self, outcomes: Optional[Sequence[tuple[int, bool]]] = None

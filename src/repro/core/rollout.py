@@ -1,0 +1,440 @@
+"""Autonomous staged-rollout lifecycle over the online-service tables.
+
+The paper's §12 pipeline (offline replay → shadow → canary → online
+calibration → drift kill-switch) exists in this repo as separately
+invoked batch stages; production runs it as a *lifecycle*: every
+(tenant, edge) row advances SHADOW → CANARY → ONLINE_CAL → FULL on
+promotion criteria, demotes on any in-graph kill-switch breach or a
+host-side tier-2 false-accept verdict, sits out a cooldown, and re-enters
+through a bounded probe window before it may promote again — the
+frontend ``CircuitBreaker``'s CLOSED/OPEN/HALF_OPEN discipline, but
+per-row and device-resident.
+
+The state machine's columns live in ``PosteriorStore``'s ``_roll`` table
+([phase, cooldown, probes, ticks_in_phase, n_obs, s_obs], int32), so
+phase state pages with the posterior (paged spill/fault-in round-trips
+bitwise) and the jit'd tick never recompiles across phase churn: the
+whole lifecycle folds into ``_tick_impl`` behind one static flag, and
+the :class:`RolloutConfig` rides as a small dynamic int vector.
+
+Promotion is integer-only — ``s_obs * 1000 >= rate_milli * n_obs`` with
+per-phase minimum-observation floors — which makes the in-graph machine
+*exactly* reproducible by the pure-Python :class:`ReferenceLifecycle`
+(asserted per tick in tests and benchmarks/rollout_fleet.py) and makes
+promotion monotone in the observed success rate by construction.
+
+Per-tick transition order (the contract both machines implement):
+
+  1. ``dem``      — kill-switch trigger with the cooldown expired (the
+                    post-decrement counter): phase → SHADOW, cooldown
+                    restarts, counters reset.  Triggers landing mid-
+                    cooldown are absorbed (the breaker analogy: an OPEN
+                    circuit doesn't re-open).
+  2. ``reenter``  — cooldown just expired on a touched tick: the row is
+                    re-enabled (kill-switch flag cleared), granted
+                    ``probe_budget`` probes.
+  3. evidence     — settled outcomes accumulate into n_obs/s_obs only
+                    while the cooldown is expired (observations during
+                    cooldown don't count toward re-promotion: the probe
+                    window is the trial, as HALF_OPEN is for the breaker).
+  4. ``promote``  — touched, open, enough evidence, success bar met:
+                    phase += 1, per-phase counters reset.
+  5. ``probe_fail`` — the probe window ran dry without promotion: the
+                    cooldown restarts.
+
+SHADOW rows never serve speculations (decisions are computed and logged,
+answers forced WAIT) but still learn from settled outcomes — §12.2
+shadow observability.  CANARY serves every ``canary_period``-th touched
+tick (§12.3 partial exposure).  ONLINE_CAL and FULL serve every tick.
+DISABLED only ever exits through the host ``revive`` path — it is the
+tier-2 page-an-operator terminal state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "DISABLED", "SHADOW", "CANARY", "ONLINE_CAL", "FULL", "PHASE_NAMES",
+    "RolloutConfig", "RolloutController", "ReferenceLifecycle",
+    "TRANSITION_KINDS", "decode_transition", "rollout_allow",
+    "rollout_advance",
+]
+
+# Phase codes — stored in the roll table's column 0.  Order is the
+# promotion order; comparisons below rely on it.
+DISABLED, SHADOW, CANARY, ONLINE_CAL, FULL = 0, 1, 2, 3, 4
+PHASE_NAMES = ("DISABLED", "SHADOW", "CANARY", "ONLINE_CAL", "FULL")
+
+# Packed transition encoding: code * 64 + old_phase * 8 + new_phase
+# (0 = no transition this tick).  Codes map onto the resilience-event
+# kinds appended to telemetry.RESILIENCE_KINDS.
+TRANSITION_KINDS = {
+    1: "rollout_promote",
+    2: "rollout_demote",
+    3: "rollout_reenter",
+    4: "rollout_probe_fail",
+}
+
+# n_obs/s_obs saturate here so the integer promotion comparison
+# (s * 1000 vs rate_milli * n) never overflows int32 even without x64.
+_OBS_CAP = 1_000_000
+_NEVER = np.int32(2 ** 30)       # min-obs sentinel for non-promoting phases
+
+
+def decode_transition(code: int) -> tuple[str, int, int]:
+    """(kind, old_phase, new_phase) from a packed transition code."""
+    c = int(code)
+    if c <= 0:
+        raise ValueError("no transition encoded")
+    return TRANSITION_KINDS[c // 64], (c // 8) % 8, c % 8
+
+
+@dataclasses.dataclass(frozen=True)
+class RolloutConfig:
+    """Promotion/demotion policy, encoded to a small int vector so a
+    config change is a new operand — never a recompile.
+
+    ``min_obs`` / ``promote_rate`` are per *promoting* phase
+    (SHADOW, CANARY, ONLINE_CAL); the rate is quantized to milli-units
+    (integer promotion rule — exact scalar parity).
+    """
+
+    cooldown_ticks: int = 8
+    probe_budget: int = 16
+    canary_period: int = 2
+    min_obs: tuple[int, int, int] = (8, 8, 8)
+    promote_rate: tuple[float, float, float] = (0.7, 0.7, 0.7)
+
+    def __post_init__(self) -> None:
+        if self.cooldown_ticks < 1:
+            raise ValueError("cooldown_ticks must be >= 1")
+        if self.probe_budget < 1:
+            raise ValueError("probe_budget must be >= 1")
+        if self.canary_period < 1:
+            raise ValueError("canary_period must be >= 1")
+        if len(self.min_obs) != 3 or len(self.promote_rate) != 3:
+            raise ValueError("min_obs/promote_rate are per promoting phase "
+                             "(SHADOW, CANARY, ONLINE_CAL)")
+        if any(m < 1 for m in self.min_obs):
+            raise ValueError("min_obs entries must be >= 1")
+        if any(not (0.0 <= r <= 1.0) for r in self.promote_rate):
+            raise ValueError("promote_rate entries must be in [0, 1]")
+
+    def rate_milli(self) -> tuple[int, int, int]:
+        return tuple(int(round(r * 1000)) for r in self.promote_rate)
+
+    def encode(self) -> np.ndarray:
+        """(9,) int32 [cooldown, probe_budget, canary_period,
+        min_obs x3, rate_milli x3] — the tick's dynamic operand."""
+        return np.array(
+            [self.cooldown_ticks, self.probe_budget, self.canary_period,
+             *self.min_obs, *self.rate_milli()], np.int32)
+
+
+# --------------------------------------------------------------------------
+# traced helpers — called from inside repro.core.online._tick_impl (this
+# module imports nothing from online, so the dependency is one-way)
+# --------------------------------------------------------------------------
+def rollout_allow(roll, cfg):
+    """(N,) bool serve mask from the *pre-tick* lifecycle state: cooldown
+    expired AND (FULL | ONLINE_CAL | CANARY on its period tick)."""
+    phase, cd, tip = roll[:, 0], roll[:, 1], roll[:, 3]
+    period = jnp.maximum(cfg[2], 1)
+    canary_on = (phase == CANARY) & (tip % period == 0)
+    return (cd == 0) & (canary_on | (phase >= ONLINE_CAL))
+
+
+def rollout_advance(roll, flags, triggered, touched, n_out, s_out, cfg):
+    """One lifecycle step over every row (the module-docstring order).
+
+    ``triggered`` is the tick's kill-switch trigger mask (drift step
+    output), ``touched`` the request-touched mask, ``n_out``/``s_out``
+    the tick's settled outcome / success counts per row.  Returns
+    ``(roll', flags', transitions)`` with ``transitions`` the packed
+    per-row codes.
+    """
+    i32 = jnp.int32
+    phase = roll[:, 0]
+    cd, pb, tip = roll[:, 1], roll[:, 2], roll[:, 3]
+    n, s = roll[:, 4], roll[:, 5]
+
+    # 1-2. cooldown countdown on touched ticks; a trigger landing with
+    # the (post-decrement) cooldown expired demotes, one landing exactly
+    # on the expiry tick demotes instead of re-entering
+    cd1 = jnp.where(touched & (cd > 0), cd - 1, cd)
+    dem = triggered & (cd1 == 0)
+    reenter = touched & ~dem & (cd > 0) & (cd1 == 0)
+
+    # 3. evidence accumulates only while the cooldown is expired
+    open_ = cd1 == 0
+    n1 = jnp.minimum(jnp.where(open_ & ~dem, n + n_out, n), _OBS_CAP)
+    s1 = jnp.minimum(jnp.where(open_ & ~dem, s + s_out, s), _OBS_CAP)
+    pb1 = jnp.where(reenter, cfg[1], pb)
+
+    # 4. integer promotion rule against the per-phase bars
+    never = jnp.full(1, _NEVER, i32)
+    zero1 = jnp.zeros(1, i32)
+    min_obs = jnp.concatenate([never, cfg[3:6], never])[phase]
+    rate_m = jnp.concatenate([zero1, cfg[6:9], zero1])[phase]
+    promote = (touched & ~dem & open_ & (n1 >= min_obs)
+               & (s1 * 1000 >= rate_m * n1))
+
+    # 5. probe consumption (granted probes are spent from the next
+    # touched tick on; promotion closes the window)
+    probing = touched & ~dem & ~reenter & open_ & (pb1 > 0) & ~promote
+    pb2 = jnp.where(probing, pb1 - 1, pb1)
+    probe_fail = probing & (pb2 == 0)
+
+    new_phase = jnp.where(promote, phase + 1, phase)
+    new_phase = jnp.where(dem & (phase > DISABLED), SHADOW, new_phase)
+    reset = dem | promote | probe_fail | reenter
+    tip1 = jnp.where(reset, 0, jnp.where(touched, tip + 1, tip))
+    cd2 = jnp.where(dem | probe_fail, cfg[0], cd1)
+    pb3 = jnp.where(dem | promote, 0, pb2)
+    n2 = jnp.where(dem | promote | probe_fail, 0, n1)
+    s2 = jnp.where(dem | promote | probe_fail, 0, s1)
+
+    # re-entry clears the kill-switch disable and the breach run — the
+    # in-graph analogue of CircuitBreaker entering HALF_OPEN
+    enabled = jnp.where(reenter, True, flags[:, 0] > 0)
+    run = jnp.where(reenter, 0, flags[:, 1])
+    flags1 = jnp.stack([enabled.astype(i32), run], 1)
+
+    code = jnp.where(reenter, 3, 0)
+    code = jnp.where(probe_fail, 4, code)
+    code = jnp.where(promote, 1, code)
+    code = jnp.where(dem, 2, code)
+    transitions = jnp.where(
+        code > 0, code * 64 + phase * 8 + new_phase, 0).astype(i32)
+
+    roll1 = jnp.stack([new_phase, cd2, pb3, tip1, n2, s2], 1).astype(i32)
+    return roll1, flags1, transitions
+
+
+# --------------------------------------------------------------------------
+# scalar reference — the same machine in plain ints, fed from the host's
+# own view of the tick (touched rows, outcome counts, trigger mask)
+# --------------------------------------------------------------------------
+class ReferenceLifecycle:
+    """Pure-Python twin of :func:`rollout_advance`.
+
+    Consumes per tick exactly what the in-graph machine consumes —
+    which logical rows this tick's requests touched, how many outcomes
+    (and successes) settled per row, and which rows the kill-switch
+    triggered — and reproduces the transitions *exactly* (integer state,
+    integer rules; no floats anywhere).  The parity harness runs it next
+    to the service and asserts per-tick transition equality.
+    """
+
+    def __init__(self, n_rows: int, config: RolloutConfig) -> None:
+        self.config = config
+        # [phase, cooldown, probes, ticks_in_phase, n_obs, s_obs]
+        self.rows = [[SHADOW, 0, 0, 0, 0, 0] for _ in range(n_rows)]
+        self.enabled = [True] * n_rows
+
+    def ensure_rows(self, n_rows: int) -> None:
+        while len(self.rows) < n_rows:
+            self.rows.append([SHADOW, 0, 0, 0, 0, 0])
+            self.enabled.append(True)
+
+    def allow(self, r: int) -> bool:
+        phase, cd, _, tip, _, _ = self.rows[r]
+        if cd != 0:
+            return False
+        if phase == CANARY:
+            return tip % self.config.canary_period == 0
+        return phase >= ONLINE_CAL
+
+    def override(self, r: int, state) -> None:
+        """Mirror a host-side roll override (demote-to-DISABLED, revive)."""
+        self.rows[r] = [int(v) for v in state]
+
+    def tick(self, touched, outcomes, triggered_rows,
+             drift_touched=None) -> dict[int, int]:
+        """Advance one tick; returns {row: packed transition code}.
+
+        ``touched``: logical rows this tick's requests hit;
+        ``outcomes``: {row: (n_settled, n_success)};
+        ``triggered_rows``: rows the in-graph kill-switch tripped.
+        ``drift_touched`` defaults to ``touched`` (the kill-switch's
+        disable/run bookkeeping also runs on request-touched rows).
+        """
+        cfg = self.config
+        rate_m = cfg.rate_milli()
+        touched = set(int(r) for r in touched)
+        triggered = set(int(r) for r in triggered_rows)
+        out: dict[int, int] = {}
+        # the drift step's own flag bookkeeping (disable + run reset) —
+        # mirrored so self.enabled tracks the device flags
+        for r in triggered:
+            self.enabled[r] = False
+        rows_to_step = touched | set(outcomes)
+        for r in sorted(rows_to_step):
+            st = self.rows[r]
+            phase, cd, pb, tip, n, s = st
+            is_touched = r in touched
+            n_add, s_add = outcomes.get(r, (0, 0))
+
+            cd1 = cd - 1 if (is_touched and cd > 0) else cd
+            dem = (r in triggered) and cd1 == 0
+            reenter = is_touched and not dem and cd > 0 and cd1 == 0
+            open_ = cd1 == 0
+            n1 = min(n + n_add, _OBS_CAP) if (open_ and not dem) else n
+            s1 = min(s + s_add, _OBS_CAP) if (open_ and not dem) else s
+            pb1 = cfg.probe_budget if reenter else pb
+            if SHADOW <= phase <= ONLINE_CAL:
+                mo = cfg.min_obs[phase - 1]
+                rm = rate_m[phase - 1]
+            else:
+                mo, rm = int(_NEVER), 0
+            promote = (is_touched and not dem and open_
+                       and n1 >= mo and s1 * 1000 >= rm * n1)
+            probing = (is_touched and not dem and not reenter and open_
+                       and pb1 > 0 and not promote)
+            pb2 = pb1 - 1 if probing else pb1
+            probe_fail = probing and pb2 == 0
+
+            new_phase = phase + 1 if promote else phase
+            if dem and phase > DISABLED:
+                new_phase = SHADOW
+            reset = dem or promote or probe_fail or reenter
+            tip1 = 0 if reset else (tip + 1 if is_touched else tip)
+            cd2 = cfg.cooldown_ticks if (dem or probe_fail) else cd1
+            pb3 = 0 if (dem or promote) else pb2
+            n2 = 0 if (dem or promote or probe_fail) else n1
+            s2 = 0 if (dem or promote or probe_fail) else s1
+            if reenter:
+                self.enabled[r] = True
+            self.rows[r] = [new_phase, cd2, pb3, tip1, n2, s2]
+
+            code = 3 if reenter else 0
+            if probe_fail:
+                code = 4
+            if promote:
+                code = 1
+            if dem:
+                code = 2
+            if code:
+                out[r] = code * 64 + phase * 8 + new_phase
+        return out
+
+
+class RolloutController:
+    """Host wrapper driving the in-graph lifecycle through a service.
+
+    Duck-types ``OnlineDecisionService`` (``__getattr__`` passthrough),
+    so it slots between ``FaultyService`` and the raw service under the
+    serving front-end unchanged:
+
+        frontend -> FaultyService -> RolloutController -> service
+
+    Every ``tick_packed``/``tick`` runs with the rollout static on and
+    the drift check forced (demotion is kill-switch-driven), then folds
+    the tick's packed transitions into host telemetry: one
+    USD-attributed event per transition in the shared ``ResilienceLog``
+    *and* the device event ring.  Demotions are billed the tick's
+    summed L_value over the row's requests — the latency value the
+    disabled row stops protecting.
+    """
+
+    def __init__(self, service, config: Optional[RolloutConfig] = None, *,
+                 resilience=None, ring_events: bool = True) -> None:
+        self.service = service
+        self.config = config if config is not None else RolloutConfig()
+        self._cfg_arr = self.config.encode()
+        self.resilience = resilience
+        self.ring_events = bool(ring_events)
+        self.ticks = 0
+        # host transition history: dicts the scenario fleet aggregates
+        self.transitions: list[dict] = []
+
+    # ------------------------------------------------------------- ticks
+    def tick_packed(self, row, reqs, **kw):
+        kw.setdefault("check_drift", True)
+        d = self.service.tick_packed(
+            row, reqs, use_rollout=True, rollout_cfg=self._cfg_arr, **kw)
+        self._fold(d)
+        return d
+
+    def tick(self, rows, **kw):
+        kw.setdefault("check_drift", True)
+        d = self.service.tick(
+            rows, use_rollout=True, rollout_cfg=self._cfg_arr, **kw)
+        self._fold(d)
+        return d
+
+    def __getattr__(self, name: str):
+        return getattr(self.service, name)
+
+    def _fold(self, decisions) -> None:
+        self.ticks += 1
+        trans = decisions.rollout_transitions
+        hit = np.flatnonzero(trans)
+        if hit.size == 0:
+            return
+        usd_rows = decisions.rollout_usd
+        events = []
+        for r in hit:
+            kind, old, new = decode_transition(int(trans[r]))
+            usd = float(usd_rows[r]) if kind == "rollout_demote" else 0.0
+            tenant, edge = self.service.row_key(int(r))
+            self.transitions.append({
+                "tick": self.ticks, "row": int(r), "kind": kind,
+                "tenant": tenant, "edge": edge,
+                "old": PHASE_NAMES[old], "new": PHASE_NAMES[new],
+                "usd": usd,
+            })
+            if self.resilience is not None:
+                from .telemetry import ResilienceEvent
+
+                self.resilience.emit(ResilienceEvent(
+                    kind=kind, tenant=tenant, edge=edge, row=int(r),
+                    usd=usd, detail=f"{PHASE_NAMES[old]}->{PHASE_NAMES[new]}"))
+            events.append((int(r), kind, usd))
+        if self.ring_events and events:
+            self.service.log_events(events)
+
+    # --------------------------------------------------------- host APIs
+    def phase_snapshot(self) -> np.ndarray:
+        """(n_rows, 6) composed lifecycle view (see store.roll_snapshot)."""
+        return self.service.store.roll_snapshot()
+
+    def phases(self) -> list[str]:
+        return [PHASE_NAMES[int(p)] for p in self.phase_snapshot()[:, 0]]
+
+    def demote_tier2(self, row: int, *, disable: bool = True,
+                     usd: float = 0.0) -> None:
+        """Host-side tier-2 false-accept demotion (§12.5 trigger 3): the
+        in-graph machine only ever demotes to SHADOW; a tier-2 verdict is
+        the page-an-operator path and may land the row in DISABLED, which
+        no in-graph transition exits."""
+        phase = DISABLED if disable else SHADOW
+        state = [[phase, self.config.cooldown_ticks, 0, 0, 0, 0]]
+        self.service.store.set_roll_rows(np.asarray([row]),
+                                         np.asarray(state, np.int32))
+        tenant, edge = self.service.row_key(int(row))
+        self.transitions.append({
+            "tick": self.ticks, "row": int(row), "kind": "rollout_demote",
+            "tenant": tenant, "edge": edge, "old": None,
+            "new": PHASE_NAMES[phase], "usd": float(usd),
+        })
+        if self.resilience is not None:
+            from .telemetry import ResilienceEvent
+
+            self.resilience.emit(ResilienceEvent(
+                kind="rollout_demote", tenant=tenant, edge=edge,
+                row=int(row), usd=float(usd),
+                detail=f"tier2->{PHASE_NAMES[phase]}"))
+        if self.ring_events:
+            self.service.log_events(
+                [(int(row), "rollout_demote", float(usd))])
+
+    def revive(self, row: int) -> None:
+        """Operator revive: DISABLED -> fresh SHADOW (counters zeroed)."""
+        self.service.store.set_roll_rows(
+            np.asarray([row]),
+            np.asarray([[SHADOW, 0, 0, 0, 0, 0]], np.int32))

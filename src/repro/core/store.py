@@ -50,7 +50,7 @@ import numpy as np
 from .posterior import BetaPosterior
 from .taxonomy import DEFAULT_N0, DependencyType, prior_params
 
-__all__ = ["PosteriorStore", "BucketPrior", "_RowConfig"]
+__all__ = ["PosteriorStore", "BucketPrior", "_RowConfig", "ROLL_COLS"]
 
 
 def _bucket(n: int, lo: int = 1) -> int:
@@ -96,10 +96,12 @@ class BucketPrior:
 # zero-recompile churn property pins.
 # --------------------------------------------------------------------------
 @jax.jit
-def _scatter_rows(post, rowcfg, flags, slots, pvals, cvals, fvals):
+def _scatter_rows(post, rowcfg, flags, roll, slots, pvals, cvals, fvals,
+                  rvals):
     return (post.at[slots].set(pvals, mode="drop"),
             rowcfg.at[slots].set(cvals, mode="drop"),
-            flags.at[slots].set(fvals, mode="drop"))
+            flags.at[slots].set(fvals, mode="drop"),
+            roll.at[slots].set(rvals, mode="drop"))
 
 
 @jax.jit
@@ -108,9 +110,9 @@ def _scatter_post(post, slots, pvals):
 
 
 @jax.jit
-def _gather_rows(post, flags, slots):
+def _gather_rows(post, flags, roll, slots):
     s = jnp.minimum(slots, post.shape[0] - 1)
-    return post[s], flags[s]
+    return post[s], flags[s], roll[s]
 
 
 @jax.jit
@@ -135,6 +137,12 @@ def _eb_moments(post, bucket, prior_n, alive, min_evidence, G):
 
 
 _FRESH_FLAGS = np.array([1, 0], np.int32)    # enabled, zero breach run
+# staged-rollout lifecycle columns (repro.core.rollout):
+# [phase, cooldown, probes, ticks_in_phase, n_obs, s_obs].  Fresh rows are
+# born in SHADOW (phase 1) with empty counters; the columns spill/fault-in
+# alongside the posterior so phase state survives paging bitwise.
+ROLL_COLS = 6
+_FRESH_ROLL = np.array([1, 0, 0, 0, 0, 0], np.int32)
 
 
 class PosteriorStore:
@@ -183,12 +191,13 @@ class PosteriorStore:
         self._bucket_of = np.zeros(0, np.int32)  # taxonomy-bucket id
         self._shelf_post = np.zeros((0, 2))      # spilled [alpha, beta] (f64)
         self._shelf_flags = np.zeros((0, 2), np.int32)
+        self._shelf_roll = np.zeros((0, ROLL_COLS), np.int32)
         self._shelved = np.zeros(0, bool)
         self._slot_of = np.zeros(0, np.int64)    # -1 = not device-resident
         self._alive = np.zeros(0, bool)
 
         # ---- physical device table
-        self._post = self._rowcfg = self._flags = None
+        self._post = self._rowcfg = self._flags = self._roll = None
         self._dtype: Optional[str] = None
         self._np_dtype = np.dtype(np.float64)
         self._capacity = 0
@@ -256,6 +265,7 @@ class PosteriorStore:
         self._bucket_of = grow2(self._bucket_of)
         self._shelf_post = grow2(self._shelf_post)
         self._shelf_flags = grow2(self._shelf_flags)
+        self._shelf_roll = grow2(self._shelf_roll)
         self._shelved = grow2(self._shelved, False)
         self._slot_of = grow2(self._slot_of, -1)
         self._alive = grow2(self._alive, False)
@@ -439,21 +449,22 @@ class PosteriorStore:
         """Ensure the device-resident tables exist for ``dtype`` and that
         every pending registration has materialized (identity mode: one
         batched scatter, not one rebuild per row).  Returns
-        ``(post, rowcfg, flags)``."""
+        ``(post, rowcfg, flags, roll)``."""
         cap = self._target_capacity()
         if self._post is None or self._dtype != dtype or self._capacity != cap:
             self._rebuild(dtype, cap)
         elif self._identity and self._pending:
             self._apply_pending()
-        return self._post, self._rowcfg, self._flags
+        return self._post, self._rowcfg, self._flags, self._roll
 
     def tables(self):
-        return self._post, self._rowcfg, self._flags
+        return self._post, self._rowcfg, self._flags, self._roll
 
-    def adopt(self, post, rowcfg, flags) -> None:
+    def adopt(self, post, rowcfg, flags, roll) -> None:
         """Adopt the arrays a jit'd tick returned (the store stays the
         single owner across donated double-buffer updates)."""
         self._post, self._rowcfg, self._flags = post, rowcfg, flags
+        self._roll = roll
 
     def logical_map(self) -> Optional[np.ndarray]:
         """Copy of the slot -> logical-id map, or None in identity mode
@@ -462,7 +473,7 @@ class PosteriorStore:
             return None
         return self._logical_at.copy()
 
-    def _device_put(self, post_np, cfg_np, flags_np):
+    def _device_put(self, post_np, cfg_np, flags_np, roll_np):
         self.row_sharding = None
         if self.mesh is not None:
             from jax.sharding import NamedSharding
@@ -477,10 +488,12 @@ class PosteriorStore:
             self._post = jax.device_put(post_np, self.row_sharding)
             self._rowcfg = jax.device_put(cfg_np, self.row_sharding)
             self._flags = jax.device_put(flags_np, self.row_sharding)
+            self._roll = jax.device_put(roll_np, self.row_sharding)
         else:
             self._post = jnp.asarray(post_np)
             self._rowcfg = jnp.asarray(cfg_np)
             self._flags = jnp.asarray(flags_np)
+            self._roll = jnp.asarray(roll_np)
 
     def _rebuild(self, dtype: str, cap: int) -> None:
         """(Re)build the physical table — first build, dtype switch, or an
@@ -507,6 +520,7 @@ class PosteriorStore:
         cfg = np.stack([np.full(cap, 0.5), np.ones(cap),
                         np.full(cap, -np.inf)], 1)
         flags = np.zeros((cap, 2), np.int32)
+        roll = np.tile(_FRESH_ROLL, (cap, 1))
         if self._identity and n:
             # eager vectorized materialization of every live row (identity
             # mode has no evictions, so rows 0..n-1 are all alive)
@@ -514,6 +528,7 @@ class PosteriorStore:
             post[:n] = np.where(sh, self._shelf_post[:n], self._prior[:n])
             cfg[:n] = self._cfg[:n]
             flags[:n] = np.where(sh, self._shelf_flags[:n], _FRESH_FLAGS)
+            roll[:n] = np.where(sh, self._shelf_roll[:n], _FRESH_ROLL)
             self._shelved[:n] = False
             self._slot_of[:n] = np.arange(n)
             self._logical_at[:n] = np.arange(n)
@@ -523,7 +538,7 @@ class PosteriorStore:
             # unmaterialized priors and fault in on first touch
             self._free_slots = list(range(cap - 1, -1, -1))
         self._device_put(post.astype(self._np_dtype),
-                         cfg.astype(self._np_dtype), flags)
+                         cfg.astype(self._np_dtype), flags, roll)
 
     def _apply_pending(self) -> None:
         """Identity mode: materialize all registrations since the last
@@ -535,12 +550,13 @@ class PosteriorStore:
         # list's tail is exactly those slots in pop() order
         del self._free_slots[len(self._free_slots) - ids.size:]
         self._scatter(ids, self._prior[ids], self._cfg[ids],
-                      np.broadcast_to(_FRESH_FLAGS, (ids.size, 2)))
+                      np.broadcast_to(_FRESH_FLAGS, (ids.size, 2)),
+                      np.broadcast_to(_FRESH_ROLL, (ids.size, ROLL_COLS)))
         self._slot_of[ids] = ids
         self._logical_at[ids] = ids
         self.stats["fault_ins"] += int(ids.size)
 
-    def _scatter(self, slots, pvals, cvals, fvals) -> None:
+    def _scatter(self, slots, pvals, cvals, fvals, rvals) -> None:
         k = int(slots.size)
         kp = _bucket(k)
         spad = np.full(kp, self._capacity, np.int64)
@@ -551,8 +567,11 @@ class PosteriorStore:
         cc[:k] = cvals
         ff = np.zeros((kp, 2), np.int32)
         ff[:k] = fvals
-        self._post, self._rowcfg, self._flags = _scatter_rows(
-            self._post, self._rowcfg, self._flags, spad, pp, cc, ff)
+        rr = np.zeros((kp, ROLL_COLS), np.int32)
+        rr[:k] = rvals
+        self._post, self._rowcfg, self._flags, self._roll = _scatter_rows(
+            self._post, self._rowcfg, self._flags, self._roll, spad, pp, cc,
+            ff, rr)
         self.stats["scatter_batches"] += 1
 
     # ------------------------------------------------------ paging / LRU
@@ -589,7 +608,9 @@ class PosteriorStore:
                              self._prior[missing])
             fvals = np.where(sh[:, None], self._shelf_flags[missing],
                              _FRESH_FLAGS)
-            self._scatter(new_slots, pvals, self._cfg[missing], fvals)
+            rvals = np.where(sh[:, None], self._shelf_roll[missing],
+                             _FRESH_ROLL)
+            self._scatter(new_slots, pvals, self._cfg[missing], fvals, rvals)
             self._slot_of[missing] = new_slots
             self._logical_at[new_slots] = missing
             self._shelved[missing] = False
@@ -614,15 +635,16 @@ class PosteriorStore:
 
     def _spill_slots(self, victim_slots: np.ndarray) -> None:
         """Move resident rows to the host shelf (exact f64 values; the
-        breach-run / enable bits ride along in the shelf flags)."""
+        breach-run / enable bits and rollout phase columns ride along)."""
         k = int(victim_slots.size)
         kp = _bucket(k)
         pad = np.full(kp, self._capacity, np.int64)
         pad[:k] = victim_slots
-        p, f = _gather_rows(self._post, self._flags, pad)
+        p, f, r = _gather_rows(self._post, self._flags, self._roll, pad)
         ids = self._logical_at[victim_slots]
         self._shelf_post[ids] = np.asarray(p, np.float64)[:k]
         self._shelf_flags[ids] = np.asarray(f)[:k]
+        self._shelf_roll[ids] = np.asarray(r)[:k]
         self._shelved[ids] = True
         self._slot_of[ids] = -1
         self._logical_at[victim_slots] = -1
@@ -682,6 +704,43 @@ class PosteriorStore:
             if res.size:
                 out[self._logical_at[res]] = np.asarray(self._flags)[res]
         return out
+
+    def roll_snapshot(self) -> np.ndarray:
+        """(n_rows, ROLL_COLS) int32 composed rollout-lifecycle view
+        [phase, cooldown, probes, ticks_in_phase, n_obs, s_obs] — same
+        tier precedence as :meth:`snapshot`; evicted rows read phase 0
+        (DISABLED) with zeroed counters."""
+        n = self.n_rows
+        out = np.where(self._shelved[:n, None], self._shelf_roll[:n],
+                       _FRESH_ROLL).astype(np.int32)
+        dead = ~self._alive[:n]
+        if dead.any():
+            out[dead] = 0
+        if self._roll is not None and self._logical_at is not None:
+            res = np.flatnonzero(self._logical_at >= 0)
+            if res.size:
+                out[self._logical_at[res]] = np.asarray(self._roll)[res]
+        return out
+
+    def set_roll_rows(self, ids, values) -> None:
+        """Overwrite the rollout-lifecycle columns for logical rows
+        (faulting them in first in paged mode) — the host override path
+        RolloutController uses for tier-2 demotion and operator revives."""
+        ids = np.asarray(ids, np.int64)
+        values = np.asarray(values, np.int32).reshape(ids.size, ROLL_COLS)
+        self.check_rows(ids)
+        if self._roll is None:
+            raise RuntimeError("device tables not built; call device_tables")
+        self.ensure_resident(ids)
+        slots = ids if self._identity else self._slot_of[ids]
+        k = int(ids.size)
+        kp = _bucket(k)
+        spad = np.full(kp, self._capacity, np.int64)
+        spad[:k] = slots
+        rr = np.zeros((kp, ROLL_COLS), np.int32)
+        rr[:k] = values
+        self._roll = self._roll.at[jnp.asarray(spad)].set(
+            jnp.asarray(rr), mode="drop")
 
     def rows_snapshot(self, ids, dtype=np.float64) -> np.ndarray:
         """(k, 2) composed alpha/beta values for specific logical rows —
@@ -821,15 +880,15 @@ class PosteriorStore:
         memory-per-row table (SoA arrays only — Python-object registry
         overhead is reported separately as an estimate)."""
         host_arrays = (self._prior, self._cfg, self._bucket_of,
-                       self._shelf_post, self._shelf_flags, self._shelved,
-                       self._slot_of, self._alive)
+                       self._shelf_post, self._shelf_flags, self._shelf_roll,
+                       self._shelved, self._slot_of, self._alive)
         host = int(sum(a.nbytes for a in host_arrays))
         per_row = int(sum(a.dtype.itemsize * int(np.prod(a.shape[1:]))
                           for a in host_arrays))
         dev = 0
         if self._post is not None:
             dev = int(self._post.dtype.itemsize * self._capacity * 5
-                      + 4 * self._capacity * 2
+                      + 4 * self._capacity * (2 + ROLL_COLS)
                       + 8 * 2 * self._capacity)   # logical_at + last_touch
         return {
             "logical_rows": self.n_rows,

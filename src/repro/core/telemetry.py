@@ -272,6 +272,12 @@ RESILIENCE_KINDS = (
     "timeout",                # service tick / provider call timed out
     "exception",              # service tick / provider call raised
     "drift_trip",             # in-graph kill-switch breach folded into breaker
+    # staged-rollout lifecycle transitions (repro.core.rollout) — appended,
+    # never reordered: the device event ring encodes kinds positionally
+    "rollout_promote",        # SHADOW→CANARY→ONLINE_CAL→FULL advance
+    "rollout_demote",         # breach/tier-2 demotion (→ SHADOW or DISABLED)
+    "rollout_reenter",        # cooldown expired, bounded probe window opened
+    "rollout_probe_fail",     # probe window exhausted without promotion
 )
 
 

@@ -1,7 +1,15 @@
 """repro.serving — batched serving engine, speculative-execution bridge,
 fault-injection harness, and the async request-accumulation front-end."""
 from .engine import EngineConfig, GenerationResult, ServingEngine
-from .faults import FaultInjector, FaultPlan, FaultyService, InjectedFault
+from .faults import (
+    DriftTrace,
+    FaultInjector,
+    FaultPlan,
+    FaultyService,
+    InjectedFault,
+    correlated_flip_traces,
+    heavy_tail_tokens,
+)
 from .frontend import (
     BreakerState,
     CircuitBreaker,
@@ -26,6 +34,21 @@ __all__ = [
     "EngineOp", "ThreadedSpeculativeRunner", "SpeculativeEdgeResult",
     "SpeculationTimeout", "call_with_timeout", "retry_with_backoff",
     "InjectedFault", "FaultPlan", "FaultInjector", "FaultyService",
+    "DriftTrace", "heavy_tail_tokens", "correlated_flip_traces",
     "FrontendConfig", "BreakerState", "CircuitBreaker", "TenantBulkhead",
     "DecisionRequest", "FrontendResult", "FrontendTicket", "ServingFrontend",
+]
+
+from .scenarios import (
+    Scenario,
+    ScenarioResult,
+    adversarial_scenarios,
+    all_scenarios,
+    archetype_scenarios,
+    run_scenario,
+)
+
+__all__ += [
+    "Scenario", "ScenarioResult", "archetype_scenarios",
+    "adversarial_scenarios", "all_scenarios", "run_scenario",
 ]

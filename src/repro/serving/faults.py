@@ -32,11 +32,135 @@ from typing import Any, Callable, FrozenSet, Optional
 
 import numpy as np
 
-__all__ = ["InjectedFault", "FaultPlan", "FaultInjector", "FaultyService"]
+__all__ = ["InjectedFault", "DriftTrace", "FaultPlan", "FaultInjector",
+           "FaultyService", "heavy_tail_tokens", "correlated_flip_traces"]
 
 
 class InjectedFault(RuntimeError):
     """The exception the harness raises on scheduled failure calls."""
+
+
+@dataclasses.dataclass(frozen=True)
+class DriftTrace:
+    """Deterministic success-rate trace over the outcome index.
+
+    One frozen value object per adversarial shape from the issue —
+    sudden flip, slow ramp, oscillation at the drift-detector frequency —
+    shared by ``FaultPlan.trace`` (settlement stream), the scenario fleet
+    (``repro.serving.scenarios``) and the fault-tolerance tests, so every
+    layer replays the *same* trace from the same constructor call.
+
+    ``rate_at(i)`` is a pure function of the index: no RNG lives here
+    (sampling stays in ``FaultInjector.outcome`` against the plan seed),
+    which is what makes scalar-reference parity checks possible.
+    """
+
+    kind: str = "constant"           # constant | flip | ramp | oscillation
+    rate0: float = 0.95              # healthy success rate
+    rate1: float = 0.15              # degraded success rate
+    at: int = 0                      # onset index (flip/ramp) or phase shift
+    until: Optional[int] = None      # flip revert / ramp end (exclusive)
+    period: int = 0                  # oscillation half-period in outcomes
+
+    def rate_at(self, i: int) -> float:
+        """Success probability for outcome index ``i`` (0-based)."""
+        if self.kind == "constant":
+            return self.rate0
+        if self.kind == "flip":
+            if i < self.at:
+                return self.rate0
+            if self.until is not None and i >= self.until:
+                return self.rate0        # trace reverted — healthy again
+            return self.rate1
+        if self.kind == "ramp":
+            end = self.until if self.until is not None else self.at + 1
+            if i < self.at:
+                return self.rate0
+            if i >= end:
+                return self.rate1
+            frac = (i - self.at) / max(1, end - self.at)
+            return self.rate0 + frac * (self.rate1 - self.rate0)
+        if self.kind == "oscillation":
+            if self.period <= 0:
+                raise ValueError("oscillation trace needs period > 0")
+            half = ((i - self.at) // self.period) % 2
+            return self.rate1 if half == 1 else self.rate0
+        raise ValueError(f"unknown DriftTrace kind: {self.kind!r}")
+
+    # -- constructors (the names the scenarios/tests use) ----------------
+    @classmethod
+    def constant(cls, rate: float = 0.95) -> "DriftTrace":
+        return cls(kind="constant", rate0=rate)
+
+    @classmethod
+    def flip(cls, at: int, *, rate0: float = 0.95, rate1: float = 0.15,
+             revert_at: Optional[int] = None) -> "DriftTrace":
+        """§12.5 sudden flip at ``at``; optionally reverts at
+        ``revert_at`` (the demote→cooldown→re-promote acceptance trace)."""
+        return cls(kind="flip", rate0=rate0, rate1=rate1, at=at,
+                   until=revert_at)
+
+    @classmethod
+    def ramp(cls, start: int, end: int, *, rate0: float = 0.95,
+             rate1: float = 0.15) -> "DriftTrace":
+        """Slow linear degradation from ``rate0`` at ``start`` to
+        ``rate1`` at ``end`` — the trace a sudden-flip detector is worst
+        at."""
+        if end <= start:
+            raise ValueError("ramp needs end > start")
+        return cls(kind="ramp", rate0=rate0, rate1=rate1, at=start,
+                   until=end)
+
+    @classmethod
+    def oscillation(cls, period: int, *, rate0: float = 0.95,
+                    rate1: float = 0.15, phase: int = 0) -> "DriftTrace":
+        """Square wave alternating every ``period`` outcomes — tuned to
+        the drift-detector frequency it tries to straddle."""
+        return cls(kind="oscillation", rate0=rate0, rate1=rate1,
+                   at=phase, period=period)
+
+
+def heavy_tail_tokens(seed: int, size: int, *, median: float = 256.0,
+                      tail_alpha: float = 1.2,
+                      cap: float = 65536.0) -> np.ndarray:
+    """Seeded heavy-tailed output-token sampler (Lomax/Pareto-II tail).
+
+    ``tail_alpha`` <= 2 gives infinite variance — the regime where a few
+    monster completions dominate C_spec and a mean-calibrated threshold
+    misprices the tail.  Capped at ``cap`` (providers enforce max_tokens)
+    so USD sums stay finite and reproducible.
+    """
+    if size <= 0:
+        raise ValueError("size must be positive")
+    rng = np.random.default_rng(seed)
+    # Lomax: median = scale * (2**(1/alpha) - 1)  =>  solve for scale
+    scale = median / (2.0 ** (1.0 / tail_alpha) - 1.0)
+    draws = scale * (rng.pareto(tail_alpha, size=size))
+    return np.minimum(np.maximum(draws, 1.0), cap)
+
+
+def correlated_flip_traces(n: int, at: int, *, seed: int = 0,
+                           jitter: int = 0, rate0: float = 0.95,
+                           rate1: float = 0.15,
+                           revert_at: Optional[int] = None,
+                           ) -> list[DriftTrace]:
+    """``n`` flip traces with a *common* onset ± seeded per-trace jitter —
+    the correlated cross-tenant drift shape (one upstream provider
+    regression hits every tenant at nearly the same time).  ``jitter=0``
+    is perfect correlation."""
+    if n <= 0:
+        raise ValueError("n must be positive")
+    rng = np.random.default_rng(seed)
+    offs = (rng.integers(-jitter, jitter + 1, size=n) if jitter > 0
+            else np.zeros(n, dtype=int))
+    out = []
+    for k in range(n):
+        onset = max(0, at + int(offs[k]))
+        rev = None if revert_at is None else max(onset + 1,
+                                                 revert_at + int(offs[k]))
+        out.append(DriftTrace.flip(onset, rate0=rate0, rate1=rate1,
+                                   revert_at=rev))
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +184,8 @@ class FaultPlan:
     success_rate0: float = 0.95
     success_rate1: float = 0.15
     drift_at: Optional[int] = None
+    # a DriftTrace supersedes the legacy flip fields above when present
+    trace: Optional[DriftTrace] = None
     seed: int = 0
 
 
@@ -120,9 +246,12 @@ class FaultInjector:
             i = self.outcomes
             self.outcomes += 1
             p = self.plan
-            rate = p.success_rate0
-            if p.drift_at is not None and i >= p.drift_at:
-                rate = p.success_rate1
+            if p.trace is not None:
+                rate = p.trace.rate_at(i)
+            else:
+                rate = p.success_rate0
+                if p.drift_at is not None and i >= p.drift_at:
+                    rate = p.success_rate1
             return bool(self._rng.random() < rate)
 
 

@@ -352,7 +352,10 @@ class ServingFrontend:
         self.service = service
         self.config = config
         self._clock = clock
-        self.resilience = resilience_log or ResilienceLog()
+        # identity check, not truthiness: an injected-but-still-empty log
+        # is falsy (``__len__``) and ``or`` would silently replace it
+        self.resilience = (resilience_log if resilience_log is not None
+                           else ResilienceLog())
         self._bulkhead = TenantBulkhead(config.bulkhead_limit)
         self.breaker = CircuitBreaker(
             failure_threshold=config.breaker_failure_threshold,
@@ -628,14 +631,27 @@ class ServingFrontend:
         for key in {t.request.key for t in batch}:
             self.breaker.record_success(key)
         # in-graph kill-switch breaches fold into the breaker as trips
-        # (once per breach onset, not re-tripped every tick while down)
+        # (once per breach onset, not re-tripped every tick while down).
+        # ``drift_triggered`` is a pulse — the in-graph run resets after
+        # firing — so the breached set must accumulate across ticks, and
+        # a row only leaves it once it is observed serving enabled again
+        # (host re-enable / rollout re-entry).  That way a *second*
+        # breach after a recovery re-emits a fresh trip instead of being
+        # swallowed as a duplicate.
         tripped = {int(r) for r in np.flatnonzero(decisions.drift_triggered)}
+        if self._breached:
+            en = decisions.enabled
+            for i in range(B):
+                r = int(row[i])
+                if (r >= 0 and r not in tripped and bool(en[i])
+                        and r in self._breached):
+                    self._breached.discard(r)
         for r in sorted(tripped - self._breached):
             tenant, edge = self.service.row_key(r)
             self.breaker.trip((tenant, edge))
             self._emit_raw(tenant, edge, r, "drift_trip", 0.0,
                            detail="kill-switch breach")
-        self._breached = tripped
+        self._breached |= tripped
         spec = decisions.speculate
         for i, t in enumerate(batch):
             self.stats["service"] += 1

@@ -1,0 +1,283 @@
+"""Seeded scenario fleet: archetypes × adversarial drift traces, end to end.
+
+The §13 archetype catalog says *where* the method fits; §12.5 says what
+must happen when an edge stops fitting.  This module turns both into
+executable scenarios: every production archetype from
+``repro.core.archetypes`` plus the adversarial drift shapes from the
+issue (sudden flips, slow ramps, oscillation at the drift-detector
+frequency, heavy-tailed token counts, correlated cross-tenant drift),
+each driven through the *full* serving stack —
+``ServingFrontend`` → ``FaultyService`` → ``RolloutController`` →
+``OnlineDecisionService`` — with per-row ``FaultInjector`` outcome
+streams built from ``DriftTrace`` values.
+
+Everything is seeded and replayed on the deadline batcher's manual-pump
+path, so a scenario is a pure function of ``(Scenario, seed)``: the
+same transitions at the same ticks, the same USD attribution, every
+run.  ``benchmarks/rollout_fleet.py`` asserts exactly that before it
+publishes the per-archetype Pareto table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.archetypes import ARCHETYPES
+from repro.core.rollout import RolloutConfig, RolloutController
+from repro.core.telemetry import ResilienceLog
+from repro.serving.faults import (DriftTrace, FaultInjector, FaultPlan,
+                                  FaultyService, correlated_flip_traces,
+                                  heavy_tail_tokens)
+
+__all__ = ["Scenario", "ScenarioResult", "archetype_scenarios",
+           "adversarial_scenarios", "all_scenarios", "run_scenario"]
+
+LAMBDA_USD_PER_S = 0.9
+PRICE_IN, PRICE_OUT = 3e-6, 15e-6
+TICK_DT_S = 0.05                    # virtual seconds per scenario tick
+BREAKER_COOLDOWN_S = 0.2            # 4 virtual ticks of OPEN per trip
+
+
+class _Clock:
+    """Injected monotonic time: the breaker's OPEN window elapses in
+    virtual ticks, not wall time — runs are deterministic and the
+    drift-trip → breaker → probe → recovery loop closes within a
+    scenario's tick budget."""
+
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """One deterministic end-to-end run: a registry shape, a success-rate
+    trace per row, a request mix, and a rollout policy."""
+
+    name: str
+    traces: tuple[DriftTrace, ...]      # one per row, row-major
+    n_tenants: int = 1
+    edges_per_tenant: int = 1
+    ticks: int = 120
+    seed: int = 0
+    archetype: Optional[str] = None     # ARCHETYPES key, if derived
+    prior_mean: float = 0.9             # seeds the Beta prior
+    prior_strength: float = 18.0        # alpha + beta
+    discount: float = 0.9
+    latency_s: float = 3.0
+    input_tokens: float = 500.0
+    output_tokens: float = 800.0
+    heavy_tail: bool = False            # Lomax output tokens per request
+    consecutive_n: int = 3              # in-graph trigger-2 N
+    rollout: RolloutConfig = dataclasses.field(
+        # staged promotion bar (CANARY < ONLINE_CAL < FULL) so archetypes
+        # separate along their p_mode instead of all clearing one rate
+        default_factory=lambda: RolloutConfig(
+            cooldown_ticks=6, probe_budget=4, canary_period=2,
+            min_obs=(4, 4, 4), promote_rate=(0.5, 0.55, 0.6)))
+
+    @property
+    def n_rows(self) -> int:
+        return self.n_tenants * self.edges_per_tenant
+
+    def __post_init__(self) -> None:
+        if len(self.traces) != self.n_rows:
+            raise ValueError(
+                f"{self.name}: {len(self.traces)} traces for "
+                f"{self.n_rows} rows")
+
+
+@dataclasses.dataclass
+class ScenarioResult:
+    """What one scenario run produced — everything the Pareto table,
+    the timelines and the determinism gate read."""
+
+    name: str
+    transitions: list            # RolloutController.transitions dicts
+    events: dict                 # ResilienceLog.by_kind()
+    usd_attribution: dict        # {"tenant|kind": usd}
+    final_phases: list[str]      # per row
+    speculate_rate: float        # served SPECULATE share of requests
+    success_rate: float          # settled outcome success share
+    demote_ticks: list[int]      # ticks of rollout_demote transitions
+    promote_ticks: list[int]
+    requests: int
+
+    def phase_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for p in self.final_phases:
+            out[p] = out.get(p, 0) + 1
+        return out
+
+    def signature(self) -> list[tuple]:
+        """Order-stable transition fingerprint for determinism checks."""
+        return [(t["tick"], t["row"], t["kind"], t["old"], t["new"],
+                 round(t["usd"], 9)) for t in self.transitions]
+
+
+# --------------------------------------------------------------------------
+# scenario catalogs
+# --------------------------------------------------------------------------
+def archetype_scenarios(seed: int = 0, ticks: int = 90) -> list[Scenario]:
+    """One scenario per production archetype: the success stream runs at
+    the archetype's dominant-mode probability (speculating the modal
+    branch succeeds exactly when the mode was right), priors are seeded
+    from the same ``p_mode``, and token sizes come from the §13 profile.
+    High-``p_mode`` archetypes should climb to FULL; flat-branching ones
+    should stall in SHADOW or demote — that separation *is* the Pareto
+    table."""
+    out = []
+    for i, (name, arch) in enumerate(sorted(ARCHETYPES.items())):
+        prof = arch.profile()
+        rate = min(0.98, prof.p_mode)
+        out.append(Scenario(
+            name=f"archetype:{name}",
+            archetype=name,
+            traces=(DriftTrace.constant(rate),),
+            ticks=ticks,
+            seed=seed + i,
+            prior_mean=max(0.2, rate),
+            output_tokens=float(prof.output_tokens_est),
+            input_tokens=float(prof.input_tokens_est),
+        ))
+    return out
+
+
+def adversarial_scenarios(seed: int = 0) -> list[Scenario]:
+    """The §12.5 adversarial drift shapes from the issue, each as a full
+    frontend→rollout run."""
+    base = dict(prior_mean=0.9, ticks=140, consecutive_n=3)
+    out = [
+        # sudden flip at a known tick, reverting later: the acceptance
+        # trace — demote within the trigger window, re-promote through
+        # cooldown + probes after the revert
+        Scenario(name="adversarial:sudden_flip",
+                 traces=(DriftTrace.flip(25, rate1=0.02, revert_at=60),),
+                 seed=seed, **base),
+        # slow ramp: the shape a sudden-flip detector is worst at; the
+        # credible floor still catches it, just later
+        Scenario(name="adversarial:slow_ramp",
+                 traces=(DriftTrace.ramp(20, 80, rate1=0.05),),
+                 seed=seed + 1, **base),
+        # oscillation with half-period == the detector's consecutive-N:
+        # tuned to straddle the trigger frequency
+        Scenario(name="adversarial:oscillation",
+                 traces=(DriftTrace.oscillation(3, rate1=0.05),),
+                 seed=seed + 2, **base),
+        # heavy-tailed output tokens: C_spec's tail misprices a
+        # mean-calibrated threshold; lifecycle must stay stable anyway
+        Scenario(name="adversarial:heavy_tail_tokens",
+                 traces=(DriftTrace.constant(0.9),),
+                 heavy_tail=True, seed=seed + 3, **base),
+    ]
+    # correlated cross-tenant drift: one upstream regression hits every
+    # tenant's copy of the same edge at nearly the same tick
+    n_tenants = 3
+    traces = correlated_flip_traces(n_tenants, 25, seed=seed + 4, jitter=3,
+                                    rate1=0.02, revert_at=70)
+    out.append(Scenario(
+        name="adversarial:correlated_cross_tenant",
+        traces=tuple(traces), n_tenants=n_tenants, seed=seed + 4, **base))
+    return out
+
+
+def all_scenarios(seed: int = 0) -> list[Scenario]:
+    return archetype_scenarios(seed) + adversarial_scenarios(seed + 100)
+
+
+# --------------------------------------------------------------------------
+# the runner
+# --------------------------------------------------------------------------
+def _build_stack(sc: Scenario, resilience: ResilienceLog):
+    from repro.core.online import OnlineDecisionService
+    from repro.core.posterior import BetaPosterior
+    from repro.serving.frontend import FrontendConfig, ServingFrontend
+
+    svc = OnlineDecisionService(credible_consecutive_n=sc.consecutive_n)
+    a = sc.prior_mean * sc.prior_strength
+    b = sc.prior_strength - a
+    for t in range(sc.n_tenants):
+        for e in range(sc.edges_per_tenant):
+            svc.register_edge(
+                (f"agent{e}", f"agent{e + 1}"), tenant=f"tenant{t}",
+                posterior=BetaPosterior(alpha=max(a, 0.5), beta=max(b, 0.5)),
+                discount=sc.discount,
+                floor_alpha=0.3, floor_C_spec_usd=1.0,
+                floor_L_value_usd=1.0,        # floor = 0.7 / 2 = 0.35
+            )
+    ctl = RolloutController(svc, sc.rollout, resilience=resilience)
+    # the call-boundary injector is benign here (faults.py's matrix covers
+    # raise/hang); wrapping keeps the chain the production one
+    faulty = FaultyService(ctl, FaultInjector(FaultPlan(seed=sc.seed)))
+    clock = _Clock()
+    fe = ServingFrontend(
+        faulty,
+        FrontendConfig(max_batch=max(2, sc.n_rows), bulkhead_limit=4096,
+                       check_drift=True,
+                       breaker_cooldown_s=BREAKER_COOLDOWN_S),
+        resilience_log=resilience, clock=clock, autostart=False)
+    return svc, ctl, fe, clock
+
+
+def run_scenario(sc: Scenario,
+                 resilience: Optional[ResilienceLog] = None,
+                 ) -> ScenarioResult:
+    """Drive one scenario deterministically: each tick submits one
+    request per row through the frontend batcher, pumps exactly one
+    tick, and settles *every* ticket (WAIT tickets too — SHADOW rows
+    learn from settlements without serving) against the row's seeded
+    drift-trace outcome stream."""
+    from repro.serving.frontend import DecisionRequest
+
+    log = resilience if resilience is not None else ResilienceLog()
+    svc, ctl, fe, clock = _build_stack(sc, log)
+    outcome = [FaultInjector(FaultPlan(trace=tr, seed=sc.seed + 17 * r))
+               for r, tr in enumerate(sc.traces)]
+    if sc.heavy_tail:
+        otok = heavy_tail_tokens(sc.seed + 5, sc.ticks * sc.n_rows)
+    n_spec = n_req = n_ok = n_settled = 0
+    for tick in range(sc.ticks):
+        clock.advance(TICK_DT_S)
+        tickets = []
+        for r in range(sc.n_rows):
+            tenant, edge = svc.row_key(r)
+            tok = (float(otok[tick * sc.n_rows + r]) if sc.heavy_tail
+                   else sc.output_tokens)
+            tickets.append(fe.submit(DecisionRequest(
+                row=r, tenant=tenant, edge=edge, alpha=0.5,
+                lambda_usd_per_s=LAMBDA_USD_PER_S, latency_s=sc.latency_s,
+                input_tokens=sc.input_tokens, output_tokens=tok,
+                input_price=PRICE_IN, output_price=PRICE_OUT)))
+        fe.pump()
+        for r, tk in enumerate(tickets):
+            res = tk.result(0)
+            n_req += 1
+            if res.source == "service" and res.speculate:
+                n_spec += 1
+            ok = outcome[r].outcome()
+            n_ok += int(ok)
+            n_settled += 1
+            tk.settle(ok)
+    phases = ctl.phases()
+    return ScenarioResult(
+        name=sc.name,
+        transitions=list(ctl.transitions),
+        events=log.by_kind(),
+        usd_attribution={f"{t}|{k}": round(v, 6)
+                         for (t, k), v in log.usd_attribution().items()},
+        final_phases=phases,
+        speculate_rate=n_spec / max(1, n_req),
+        success_rate=n_ok / max(1, n_settled),
+        demote_ticks=[t["tick"] for t in ctl.transitions
+                      if t["kind"] == "rollout_demote"],
+        promote_ticks=[t["tick"] for t in ctl.transitions
+                       if t["kind"] == "rollout_promote"],
+        requests=n_req,
+    )

@@ -177,3 +177,63 @@ def test_smoke_rejects_malformed_record():
         bench_run.validate_frontend_record({"benchmark": "x"})
     with pytest.raises(AssertionError, match="missing keys"):
         bench_run.validate_store_record({"benchmark": "x"})
+
+
+def test_rollout_smoke_gate_determinism_parity_zero_recompile():
+    from benchmarks import rollout_fleet
+
+    rec = rollout_fleet.smoke()
+    bench_run.validate_rollout_record(rec, "rollout smoke record")
+    # seeded scenario fleet replays bit-identically (transition
+    # signatures AND resilience event streams)
+    det = rec["determinism"]
+    assert det["deterministic"] is True and det["scenarios_checked"] >= 3
+    # the in-graph phase machine matched the scalar ReferenceLifecycle
+    # transition-for-transition and state-bitwise across the flip trace
+    par = rec["parity"]
+    assert par["in_graph_vs_scalar_lifecycle"] is True
+    assert par["transitions"] >= 6 and par["roll_state_bitwise"] is True
+    # promote/demote churn across paged spill/fault-in left every tick
+    # executable where warm-up put it
+    zr = rec["zero_recompile"]
+    assert zr["asserted"] is True
+    assert {"rollout_promote", "rollout_demote"} <= set(
+        zr["transition_kinds"])
+    # the acceptance flip demoted inside the trigger window, billed the
+    # demotion in USD, and re-promoted to FULL through cooldown + probes
+    acc = rec["acceptance"]
+    assert acc["flip_at"] <= acc["first_demote_tick"] <= \
+        acc["flip_at"] + acc["trigger_window_ticks"]
+    assert acc["demote_usd"] > 0.0 and acc["final_phase"] == "FULL"
+    assert all(t > acc["revert_at"] for t in acc["re_promote_ticks"])
+    assert acc["events"].get("rollout_reenter", 0) >= 1
+    assert acc["events"].get("drift_trip", 0) >= 1
+    # the per-archetype pareto separates: confident archetypes reach
+    # FULL with no demotes, flat ones never leave SHADOW
+    top, bottom = rec["pareto"][0], rec["pareto"][-1]
+    assert top["final_phases"].get("FULL", 0) >= 1 and top["demotes"] == 0
+    assert bottom["final_phases"].get("FULL", 0) == 0
+    assert bottom["promotes"] == 0
+    # smoke never makes timing claims and never writes BENCH files
+    assert rec["decisions_per_s"] == 0.0
+
+
+def test_checked_in_rollout_record_shape():
+    checked = bench_run.validate_bench_files()
+    assert "BENCH_rollout.json" in checked
+    rec = json.loads((bench_run.ROOT / "BENCH_rollout.json").read_text())
+    # acceptance shape: a timed record with all four gates asserted and
+    # the eight-archetype pareto table
+    assert rec["decisions_per_s"] > 0.0
+    assert rec["determinism"]["deterministic"] is True
+    assert rec["parity"]["in_graph_vs_scalar_lifecycle"] is True
+    assert rec["zero_recompile"]["asserted"] is True
+    assert rec["acceptance"]["final_phase"] == "FULL"
+    assert len(rec["pareto"]) >= 8
+    archetypes = {r["archetype"] for r in rec["pareto"]}
+    assert len(archetypes) >= 8
+
+
+def test_rollout_smoke_rejects_malformed_record():
+    with pytest.raises(AssertionError, match="missing keys"):
+        bench_run.validate_rollout_record({"benchmark": "x"})

@@ -445,6 +445,41 @@ class TestDrift:
         ev2 = mon.check_token_cov(("a", "c"), 0.9)
         assert ev2 is not None and not mon.edge_enabled(("a", "c"))
 
+    def test_tier2_trigger_keyed_per_tenant(self):
+        """Tenant A's false accepts must not disable tenant B's edge."""
+        mon = DriftMonitor()
+        ev = mon.check_tier2_false_accept(("a", "b"), 0.10, tenant="tA")
+        assert ev is not None and ev.tenant == "tA"
+        assert not mon.edge_enabled(("a", "b"), tenant="tA")
+        assert mon.state(("a", "b"), "tA").page_oncall
+        assert mon.edge_enabled(("a", "b"), tenant="tB")
+        assert not mon.state(("a", "b"), "tB").page_oncall
+        # the un-scoped (global) row is untouched too
+        assert mon.edge_enabled(("a", "b"))
+
+    def test_cost_slo_keyed_per_tenant(self):
+        """A tenant budget breach zeroes alpha for that tenant only."""
+        mon = DriftMonitor(monthly_budget_usd=100.0)
+        mon.tenant_budgets_usd["tA"] = 10.0
+        assert mon.check_cost_slo(5.0, tenant="tA") is None
+        ev = mon.check_cost_slo(20.0, tenant="tA")
+        assert ev is not None and ev.scope == "tenant" and ev.tenant == "tA"
+        assert mon.effective_alpha(("a", "b"), 0.9, tenant="tA") == 0.0
+        assert mon.effective_alpha(("a", "b"), 0.9, tenant="tB") == 0.9
+        assert mon.effective_alpha(("a", "b"), 0.9) == 0.9
+        assert not mon.global_alpha_zero
+        # tenants without an explicit budget fall back to the global one
+        assert mon.check_cost_slo(50.0, tenant="tB") is None
+        ev2 = mon.check_cost_slo(150.0, tenant="tB")
+        assert ev2 is not None and ev2.tenant == "tB"
+
+    def test_token_cov_trigger_keyed_per_tenant(self):
+        mon = DriftMonitor()
+        ev = mon.check_token_cov(("a", "c"), 0.9, tenant="tA")
+        assert ev is not None and ev.tenant == "tA"
+        assert not mon.edge_enabled(("a", "c"), tenant="tA")
+        assert mon.edge_enabled(("a", "c"), tenant="tB")
+
 
 class TestTelemetry:
     def test_every_c2_signal_from_rows_alone(self):

@@ -365,3 +365,69 @@ class TestFrontendFaultMatrix:
                     assert res.P_used == ref.P_used
                     if res.speculate:
                         tk.release()
+
+
+# ---------------------------------------------------------------------------
+# seeded drift-trace primitives (shared by scenarios.py and this file)
+# ---------------------------------------------------------------------------
+class TestDriftTracePrimitives:
+    def test_flip_and_revert_rates(self):
+        from repro.serving.faults import DriftTrace
+        tr = DriftTrace.flip(10, rate0=0.9, rate1=0.1, revert_at=20)
+        assert [tr.rate_at(i) for i in (0, 9, 10, 19, 20, 99)] == \
+            [0.9, 0.9, 0.1, 0.1, 0.9, 0.9]
+
+    def test_ramp_is_linear_between_endpoints(self):
+        from repro.serving.faults import DriftTrace
+        tr = DriftTrace.ramp(10, 20, rate0=1.0, rate1=0.0)
+        assert tr.rate_at(9) == 1.0 and tr.rate_at(20) == 0.0
+        assert tr.rate_at(15) == pytest.approx(0.5)
+        mids = [tr.rate_at(i) for i in range(10, 20)]
+        assert all(a >= b for a, b in zip(mids, mids[1:]))
+        with pytest.raises(ValueError):
+            DriftTrace.ramp(5, 5)
+
+    def test_oscillation_square_wave(self):
+        from repro.serving.faults import DriftTrace
+        tr = DriftTrace.oscillation(3, rate0=0.9, rate1=0.1)
+        assert [tr.rate_at(i) for i in range(7)] == \
+            [0.9, 0.9, 0.9, 0.1, 0.1, 0.1, 0.9]
+        shifted = DriftTrace.oscillation(3, rate0=0.9, rate1=0.1, phase=3)
+        assert shifted.rate_at(0) == 0.1
+
+    def test_injector_samples_trace_deterministically(self):
+        from repro.serving.faults import DriftTrace, FaultInjector, FaultPlan
+        tr = DriftTrace.flip(50, rate0=1.0, rate1=0.0)
+        runs = []
+        for _ in range(2):
+            inj = FaultInjector(FaultPlan(trace=tr, seed=11))
+            runs.append([inj.outcome() for _ in range(100)])
+        assert runs[0] == runs[1]                  # same seed, same stream
+        assert all(runs[0][:50]) and not any(runs[0][50:])
+        other = FaultInjector(FaultPlan(trace=DriftTrace.constant(0.5),
+                                        seed=12))
+        got = [other.outcome() for _ in range(200)]
+        assert 60 <= sum(got) <= 140               # actually stochastic
+
+    def test_heavy_tail_tokens_seeded_capped(self):
+        from repro.serving.faults import heavy_tail_tokens
+        a = heavy_tail_tokens(3, 4096, median=256.0, cap=4096.0)
+        b = heavy_tail_tokens(3, 4096, median=256.0, cap=4096.0)
+        assert np.array_equal(a, b)
+        assert a.min() >= 1.0 and a.max() <= 4096.0
+        assert 150.0 < float(np.median(a)) < 400.0
+        assert float(a.mean()) > float(np.median(a))   # heavy right tail
+        with pytest.raises(ValueError):
+            heavy_tail_tokens(0, 0)
+
+    def test_correlated_flip_traces_jitter_and_determinism(self):
+        from repro.serving.faults import correlated_flip_traces
+        a = correlated_flip_traces(5, 30, seed=9, jitter=3, revert_at=60)
+        b = correlated_flip_traces(5, 30, seed=9, jitter=3, revert_at=60)
+        assert a == b
+        assert all(27 <= tr.at <= 33 for tr in a)
+        assert all(tr.until is not None and tr.until > tr.at for tr in a)
+        exact = correlated_flip_traces(4, 30)      # jitter=0: perfect corr
+        assert all(tr.at == 30 for tr in exact)
+        with pytest.raises(ValueError):
+            correlated_flip_traces(0, 10)

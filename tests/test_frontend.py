@@ -313,6 +313,66 @@ class TestFrontendChain:
 # ---------------------------------------------------------------------------
 # resilience event log + ring encoding
 # ---------------------------------------------------------------------------
+class TestDriftTripDedup:
+    """A kill-switch breach trips the breaker once per breach *onset*:
+    repeated triggered pulses while the row is down are swallowed, but a
+    second breach after an observed recovery re-emits a fresh trip."""
+
+    def _stack(self):
+        from repro.core.rollout import RolloutConfig, RolloutController
+        svc = OnlineDecisionService(credible_consecutive_n=2)
+        svc.register_edge(
+            ("u0", "v0"), tenant="t0",
+            posterior=BetaPosterior(alpha=16.0, beta=2.0), discount=0.85,
+            floor_alpha=0.3, floor_C_spec_usd=1.0, floor_L_value_usd=1.0)
+        ctl = RolloutController(
+            svc, RolloutConfig(cooldown_ticks=3, probe_budget=8,
+                               canary_period=1, min_obs=(2, 2, 2),
+                               promote_rate=(0.5, 0.5, 0.5)))
+        clk = FakeClock()
+        fe = ServingFrontend(
+            ctl, FrontendConfig(max_batch=2, check_drift=True,
+                                breaker_cooldown_s=0.2),
+            clock=clk, autostart=False)
+        return svc, ctl, fe, clk
+
+    @staticmethod
+    def _tick(fe, clk, ok):
+        clk.t += 0.05
+        tk = fe.submit(_req())
+        fe.pump()
+        tk.result(0)
+        tk.settle(ok)
+
+    def test_second_breach_after_recovery_reemits_trip(self):
+        svc, ctl, fe, clk = self._stack()
+
+        def trips():
+            return sum(e.kind == "drift_trip" for e in fe.resilience.events)
+
+        for _ in range(12):                       # climb to FULL
+            self._tick(fe, clk, True)
+        assert ctl.phases() == ["FULL"] and trips() == 0
+        i = 0
+        while trips() == 0 and i < 60:            # breach #1
+            self._tick(fe, clk, False)
+            i += 1
+        assert trips() == 1
+        for _ in range(6):                        # still down: no re-trip
+            self._tick(fe, clk, False)
+        assert trips() == 1
+        j = 0
+        while ctl.phases() != ["FULL"] and j < 200:   # recover
+            self._tick(fe, clk, True)
+            j += 1
+        assert ctl.phases() == ["FULL"] and trips() == 1
+        i = 0
+        while trips() == 1 and i < 60:            # breach #2 re-emits
+            self._tick(fe, clk, False)
+            i += 1
+        assert trips() == 2
+
+
 class TestResilienceTelemetry:
     def test_event_kind_validated(self):
         with pytest.raises(ValueError):
