@@ -32,6 +32,7 @@ _FLEET_KEYS = {
     "benchmark", "alphas", "episodes", "grid_points", "scalar_total_s",
     "fleet_total_s", "speedup", "parity", "pareto_dtype", "pareto_fleet",
     "credible_bound", "multi_tenant", "episode_sharded", "online_service",
+    "beam",
 }
 _CREDIBLE_KEYS = {"benchmark", "gamma", "speedup", "parity", "pareto_dtype",
                   "pareto_fleet"}
@@ -45,6 +46,15 @@ _MT_KEYS = {
 _ES_KEYS = {
     "benchmark", "episodes", "segments", "grid_points", "unsharded_s",
     "sharded_s", "speedup", "parity", "scaling",
+}
+_BEAM_KEYS = {
+    "benchmark", "widths", "candidates", "confidences", "lambda_usd_per_s",
+    "episodes", "grid_points", "one_call_s", "per_width_calls_s", "speedup",
+    "parity", "pareto_dtype", "pareto",
+}
+_BEAM_PARETO_KEYS = {
+    "latency_s", "cost_usd", "waste_usd", "launched", "committed",
+    "launched_candidates", "cancelled_candidates",
 }
 _ROWS_KEYS = {"module", "rows"}
 
@@ -109,6 +119,25 @@ def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
         raise AssertionError(f"{what}.online_service: no batch rows")
     for row in osvc["batches"]:
         _require(row, _OS_BATCH_KEYS, f"{what}.online_service.batches")
+    beam = rec["beam"]
+    _require(beam, _BEAM_KEYS, f"{what}.beam")
+    _require(beam["parity"],
+             {"w1_bitwise_f64_vs_fleet_replay",
+              "reference_decisions_bitwise", "reference_max_rel_error"},
+             f"{what}.beam.parity")
+    if not (beam["parity"]["w1_bitwise_f64_vs_fleet_replay"]
+            and beam["parity"]["reference_decisions_bitwise"]):
+        raise AssertionError(f"{what}.beam: parity gate recorded false")
+    if not beam["widths"] or beam["widths"][0] != 1:
+        raise AssertionError(
+            f"{what}.beam: width sweep must start at the parity-gated "
+            f"width 1, got {beam['widths']}")
+    for w in beam["widths"]:
+        rows = beam["pareto"].get(str(w))
+        if not rows:
+            raise AssertionError(f"{what}.beam: no pareto rows at w={w}")
+        for a, row in rows.items():
+            _require(row, _BEAM_PARETO_KEYS, f"{what}.beam.pareto[{w}][{a}]")
 
 
 def validate_frontend_record(rec: dict, what: str = "frontend record") -> None:

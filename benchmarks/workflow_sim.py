@@ -49,6 +49,14 @@ INTENTS = ["billing", "support", "sales", "spam", "other"]
 PROBS = [0.62, 0.12, 0.10, 0.09, 0.07]
 DEFAULT_ALPHAS = (0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0)
 LAMBDA_USD_PER_S = 0.08
+# The beam record's latency-critical tier.  At the classic 0.08 the k=5
+# router's cold prior (mean 0.2) times the 0.62 top-candidate confidence
+# keeps beam EV below every threshold — nothing ever launches and the
+# width axis is dead.  At 0.25 the alpha knee survives (alpha=0 stays in
+# the cold-start trap) while the §7.6 marginal rule admits the runner-up
+# once the posterior warms past ~0.53 and the third candidate past ~0.63,
+# so the published Pareto actually exercises the width axis.
+BEAM_LAMBDA_USD_PER_S = 0.25
 SEED = 20260531
 BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_fleet.json"
 
@@ -131,11 +139,12 @@ def sweep(alphas=DEFAULT_ALPHAS, episodes: int = 200,
 
 
 def _autoreply_fleet(episodes: int, seed: int = SEED, *,
-                     use_lower_bound: bool = False, gamma: float = 0.1):
+                     use_lower_bound: bool = False, gamma: float = 0.1,
+                     beam_confidences: dict | None = None):
     """The AutoReply workflow lowered for the fleet engine plus its
     synthetic episode log: returns (lowered, success, drafter_index).
-    Shared by the fleet sweep, the episode-sharded record and the
-    multi-device tests."""
+    Shared by the fleet sweep, the episode-sharded record, the beam-width
+    record and the multi-device tests."""
     draws = _draws(episodes, seed)
     wf = build_workflow("billing")
     edge_key = ("classifier", "drafter")
@@ -147,7 +156,8 @@ def _autoreply_fleet(episodes: int, seed: int = SEED, *,
     )
     pred = HistoricalModalPredictor()
     pred.observe("email", "billing")
-    lowered = lower_workflow(wf, params, predictors={edge_key: pred})
+    lowered = lower_workflow(wf, params, predictors={edge_key: pred},
+                             beam_confidences=beam_confidences)
     vi = lowered.names.index("drafter")
     success = np.zeros((episodes, lowered.n_ops), bool)
     success[:, vi] = draws == 0        # modal prediction is "billing"
@@ -697,6 +707,151 @@ def online_service_record(batch_sizes=(1, 64, 1024), n_rows: int = 64,
     return record
 
 
+_BEAM_SHARED_STATS = (
+    "makespan_s", "total_cost_usd", "waste_usd", "launched", "committed",
+    "EV_usd", "threshold_usd", "speculate", "edge_launched",
+    "edge_committed", "edge_waste_usd", "start_s", "finish_s",
+    "post_alpha", "post_beta",
+)
+
+
+def beam_record(alphas=DEFAULT_ALPHAS, episodes: int = 200,
+                seed: int = SEED, widths=(1, 2, 4),
+                candidates: int = 3) -> dict:
+    """The BENCH_fleet.json ``beam`` section: the top-k speculation engine
+    (repro.core.beam) on the AutoReply log, sweeping beam width as the
+    third grid axis in one jit'd call.
+
+    Two parity gates run before any timing is reported, mirroring the
+    tier-1 suite (tests/test_beam.py):
+
+    1. single-candidate discipline — the ``width == 1`` slice of the beam
+       replay on the classic (no-beam-confidence) lowering is bitwise-f64
+       equal to ``fleet_replay`` on every shared statistic;
+    2. wide-beam twin — widths > 1 on the real top-``candidates`` intent
+       beam (confidences = the Zipf head of the §7.6 running example)
+       match the pure-numpy ``reference_beam_replay``: decisions, counts,
+       ranks and event times bitwise, USD stats inside 1-ULP FMA
+       tolerance.
+
+    The hit rank of each episode is the drawn intent's index in the
+    confidence-sorted candidate list (rank >= candidates -> miss), so a
+    wider beam converts exactly the tail-intent episodes into commits —
+    the Pareto rows published here attribute every launched candidate
+    (``launched_candidates`` / ``cancelled_candidates``) in USD."""
+    from jax.experimental import enable_x64
+
+    from repro.core import (
+        beam_replay,
+        hit_rank_from_success,
+        reference_beam_replay,
+    )
+
+    alphas_arr = np.asarray(alphas)
+    widths = tuple(int(w) for w in widths)
+    conf = {("classifier", "drafter"): tuple(PROBS[:candidates])}
+    draws = _draws(episodes, seed)
+
+    # --- parity gate 1 (f64): w=1 beam path bitwise vs fleet_replay on
+    # the classic single-candidate lowering, before any timing claim.
+    with enable_x64():
+        lowered, success, _ = _autoreply_fleet(episodes, seed)
+        ref = fleet_replay(lowered, success, alphas_arr, BEAM_LAMBDA_USD_PER_S)
+        rep1 = beam_replay(lowered, hit_rank_from_success(success),
+                           alphas_arr, BEAM_LAMBDA_USD_PER_S, [1])
+        sl = rep1.width_slice(0)
+        for name in _BEAM_SHARED_STATS:
+            if not np.array_equal(sl[name], getattr(ref, name)):
+                raise AssertionError(
+                    f"beam w=1 parity broke vs fleet_replay: field {name}")
+        del ref, rep1, sl
+
+    # --- parity gate 2 (f64): the wide-beam sweep vs its pure-numpy
+    # reference twin on the real intent beam.
+    with enable_x64():
+        lowered, _, vi = _autoreply_fleet(episodes, seed,
+                                          beam_confidences=conf)
+        hit = np.full((episodes, lowered.n_ops), -1, np.int32)
+        hit[:, vi] = np.where(draws < candidates, draws, -1)
+        rep = beam_replay(lowered, hit, alphas_arr, BEAM_LAMBDA_USD_PER_S,
+                          list(widths))
+        twin = reference_beam_replay(lowered, hit, alphas_arr,
+                                     BEAM_LAMBDA_USD_PER_S, list(widths))
+        for name in ("speculate", "w_eff", "edge_launched",
+                     "edge_committed", "launched", "committed",
+                     "launched_candidates", "cancelled_candidates",
+                     "start_s", "finish_s", "makespan_s",
+                     "post_alpha", "post_beta"):
+            if not np.array_equal(getattr(rep, name), twin[name]):
+                raise AssertionError(
+                    f"beam reference parity broke: field {name}")
+        ref_rel = 0.0
+        for name in ("EV_usd", "threshold_usd", "edge_waste_usd",
+                     "waste_usd", "total_cost_usd"):
+            a, b = np.asarray(getattr(rep, name)), np.asarray(twin[name])
+            rel = float(np.max(np.abs(a - b)
+                               / np.maximum(np.abs(b), 1e-300)))
+            ref_rel = max(ref_rel, rel)
+            if rel > 1e-12:
+                raise AssertionError(
+                    f"beam reference drifted past ULP tolerance: "
+                    f"{name} rel {rel:.2e}")
+        pareto = rep.pareto()
+
+    # --- then speed (fleet default dtype): one call sweeping all widths
+    # vs one beam_replay call per width.
+    lowered, _, vi = _autoreply_fleet(episodes, seed,
+                                      beam_confidences=conf)
+    beam_replay(lowered, hit, alphas_arr, BEAM_LAMBDA_USD_PER_S,
+                list(widths))                                  # warm-up
+    t0 = time.perf_counter()
+    beam_replay(lowered, hit, alphas_arr, BEAM_LAMBDA_USD_PER_S, list(widths))
+    one_call_s = time.perf_counter() - t0
+
+    for w in widths:                                           # warm-up
+        beam_replay(lowered, hit, alphas_arr, BEAM_LAMBDA_USD_PER_S, [w])
+    t0 = time.perf_counter()
+    for w in widths:
+        beam_replay(lowered, hit, alphas_arr, BEAM_LAMBDA_USD_PER_S, [w])
+    per_width_s = time.perf_counter() - t0
+
+    return {
+        "benchmark": "autoreply_beam_width_sweep",
+        "widths": list(widths),
+        "candidates": candidates,
+        "confidences": list(PROBS[:candidates]),
+        "lambda_usd_per_s": BEAM_LAMBDA_USD_PER_S,
+        "episodes": episodes,
+        "grid_points": len(alphas_arr),
+        "one_call_s": one_call_s,
+        "per_width_calls_s": per_width_s,
+        "speedup": per_width_s / one_call_s,
+        "parity": {
+            "w1_bitwise_f64_vs_fleet_replay": True,
+            "reference_decisions_bitwise": True,
+            "reference_max_rel_error": ref_rel,
+        },
+        "pareto_dtype": "float64",
+        "pareto": {
+            str(w): {
+                str(a): {
+                    "latency_s": float(pareto["latency_s"][wi, gi]),
+                    "cost_usd": float(pareto["cost_usd"][wi, gi]),
+                    "waste_usd": float(pareto["waste_usd"][wi, gi]),
+                    "launched": int(pareto["launched"][wi, gi]),
+                    "committed": int(pareto["committed"][wi, gi]),
+                    "launched_candidates": float(
+                        pareto["launched_candidates"][wi, gi]),
+                    "cancelled_candidates": float(
+                        pareto["cancelled_candidates"][wi, gi]),
+                }
+                for gi, a in enumerate(alphas)
+            }
+            for wi, w in enumerate(widths)
+        },
+    }
+
+
 def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
                   seed: int = SEED, *, write: bool = True,
                   tenants: int = 8, scaling_devices=(1, 2, 4, 8),
@@ -705,7 +860,8 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
                   online_batch_sizes=(1, 64, 1024),
                   online_rows: int = 64,
                   online_reps: int = 20,
-                  online_require_speedup: float | None = 20.0) -> dict:
+                  online_require_speedup: float | None = 20.0,
+                  beam_widths=(1, 2, 4)) -> dict:
     """Measure scalar vs fleet wall time on the identical sweep — both the
     posterior-mean gate and the §7.5 credible-bound gate — plus the
     multi-tenant sharded-engine and online-decision-service records, and
@@ -819,6 +975,10 @@ def fleet_speedup(alphas=DEFAULT_ALPHAS, episodes: int = 200,
             reps=online_reps, seed=seed,
             require_speedup=online_require_speedup,
         ),
+        "beam": beam_record(
+            alphas=alphas, episodes=episodes, seed=seed,
+            widths=beam_widths,
+        ),
     }
     if write:
         BENCH_PATH.write_text(json.dumps(record, indent=2) + "\n")
@@ -837,7 +997,7 @@ def smoke() -> dict:
         write=False, tenants=3, scaling_devices=(),
         episode_sharded_episodes=48, episode_sharded_segments=3,
         online_batch_sizes=(1, 8), online_rows=8, online_reps=3,
-        online_require_speedup=None,
+        online_require_speedup=None, beam_widths=(1, 2, 3),
     )
 
 
@@ -904,5 +1064,17 @@ def benchmarks() -> list[tuple[str, float, str]]:
         f"{os_rec['rows']} rows; bitwise-f64 decide parity pre-timing; "
         f"{top['ticks_per_s']:.0f} ticks/s at B={top['B']}; {per_b} vs "
         f"scalar decide loop",
+    ))
+    bm = record["beam"]
+    n_bm = bm["episodes"] * bm["grid_points"] * len(bm["widths"])
+    w_hi, w_lo = str(max(bm["widths"])), str(min(bm["widths"]))
+    mid_a = str(DEFAULT_ALPHAS[len(DEFAULT_ALPHAS) // 2])
+    rows.append((
+        "workflow_beam_width_sweep", bm["one_call_s"] / n_bm * 1e6,
+        f"widths {bm['widths']} x {bm['grid_points']}G x {bm['episodes']}E "
+        f"in one call; w=1 bitwise-f64 vs fleet_replay pre-timing; "
+        f"{bm['speedup']:.1f}x vs per-width calls; committed@alpha{mid_a} "
+        f"w{w_lo}->{w_hi}: {bm['pareto'][w_lo][mid_a]['committed']}->"
+        f"{bm['pareto'][w_hi][mid_a]['committed']}",
     ))
     return rows

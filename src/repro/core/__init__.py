@@ -32,7 +32,16 @@ from .success import TierPolicy, check_success
 from .taxonomy import DependencyType, auto_assign, effective_k, structural_prior
 from .telemetry import SpeculationDecision, TelemetryLog
 from .workflow import Edge, Operation, Workflow
-from .planner import Plan, PlannerParams, plan_workflow
+from .planner import Plan, PlannerParams, enumerate_plans, plan_workflow
+from .beam import (
+    BeamDecisionResult,
+    BeamFleetReport,
+    beam_critical_k,
+    beam_evaluate,
+    beam_replay,
+    hit_rank_from_success,
+    reference_beam_replay,
+)
 from .executor import ExecutionReport, ExecutorConfig, execute
 from .fleet import (
     EpisodeChunks,
@@ -68,6 +77,7 @@ from .store import BucketPrior, PosteriorStore
 from .streaming import (
     RhoEstimator,
     StreamingReestimator,
+    expected_beam_waste,
     expected_speculation_waste,
     fractional_waste,
 )
@@ -90,8 +100,12 @@ __all__ = [
     "TierPolicy", "check_success", "AdmissibilityTag", "CommitBarrier",
     "NonSpeculableError",
     # §8
-    "Plan", "PlannerParams", "plan_workflow",
+    "Plan", "PlannerParams", "plan_workflow", "enumerate_plans",
     "ExecutorConfig", "ExecutionReport", "execute",
+    # top-k beam speculation (D4 generalized; repro.core.beam)
+    "BeamDecisionResult", "beam_evaluate", "beam_critical_k",
+    "BeamFleetReport", "beam_replay", "reference_beam_replay",
+    "hit_rank_from_success", "expected_beam_waste",
     # §12 fleet-scale replay (beyond-paper fast path)
     "FleetLowered", "FleetReport", "lower_workflow", "fleet_replay",
     "FleetStack", "MultiTenantReport", "stack_tenants",

@@ -32,6 +32,9 @@ __all__ = [
     "critical_k_grid",
     "batch_chunk_cancel",
     "batch_fractional_waste",
+    "beam_gate",
+    "beam_counterfactual_grid",
+    "critical_k_surface",
 ]
 
 
@@ -466,3 +469,131 @@ def _kcrit(L_value, C_spec, alphas):
 def critical_k_grid(L_value, C_spec, alphas):
     """k_crit(alpha) over an alpha grid (§7.6) in one call."""
     return np.asarray(_kcrit(_f(L_value), _f(C_spec), _f(alphas)))
+
+
+# --------------------------------------------------- top-k beam (repro.core.beam)
+def beam_gate(P_gate, conf, width, alpha, lam, latency_s, in_tok, out_tok,
+              in_price, out_price, zero=None):
+    """Traceable top-k D4 gate — :func:`d4_gate` generalized to a beam of
+    candidates over a shared dollar budget (repro.core.beam docstring).
+
+    ``conf`` carries per-candidate confidences on a trailing axis (sorted
+    non-increasing, summing to <= 1); ``width`` caps launches per row.
+    Candidate 1 is admitted unconditionally and candidates ``j >= 2``
+    while the marginal EV ``p_j (L_value + C_spec) - C_spec`` stays
+    non-negative (tie -> include), so at ``width == 1`` with a certain
+    first candidate the EV / threshold / flag come out bitwise equal to
+    :func:`d4_gate` (same ``zero`` pinning contract).
+
+    Returns ``(EV, threshold, speculate, C_spec, L_value, w_eff, p_cum)``
+    where ``w_eff`` is the admitted beam width and ``p_cum`` the beam-
+    cumulative commit probability the gate ran on.
+    """
+    rnd = (lambda x: x) if zero is None else (lambda x: x + zero)
+    C_spec = rnd(in_tok * in_price) + rnd(out_tok * out_price)
+    L_value = latency_s * lam
+    p = conf * P_gate[..., None]
+    j = jnp.arange(conf.shape[-1])
+    marginal_ok = (
+        p * (L_value + C_spec)[..., None] - C_spec[..., None] >= 0.0
+    )
+    inc = (j == 0) | marginal_ok
+    prefix = jnp.cumsum(jnp.logical_not(inc), axis=-1) == 0
+    sel = prefix & (j < width[..., None])
+    w_eff = sel.sum(-1)
+    w_eff_f = w_eff.astype(C_spec.dtype)
+    p_cum = jnp.where(sel, p, 0.0).sum(-1)
+    EV = rnd(p_cum * L_value) - rnd((w_eff_f - p_cum) * C_spec)
+    threshold = rnd((1.0 - alpha) * C_spec)
+    return EV, threshold, EV >= threshold, C_spec, L_value, w_eff, p_cum
+
+
+@jax.jit
+def _beam_grid(P, conf, lat, cost, alphas, lams, widths, rho):
+    # decisions[w, a, l, n]: the §12.1 grid with beam width as a third
+    # axis.  Candidate admission depends on lambda (through L_value) but
+    # not alpha; selection is computed once per (lambda, row, candidate)
+    # and broadcast over alpha / width.
+    Lv = lat[None, :] * lams[:, None]                        # (L, N)
+    p = conf * P[:, None]                                    # (N, W)
+    j = jnp.arange(conf.shape[-1])
+    marginal_ok = (
+        p[None] * (Lv + cost[None, :])[:, :, None]
+        - cost[None, :, None] >= 0.0
+    )                                                        # (L, N, W)
+    inc = (j == 0) | marginal_ok
+    prefix = jnp.cumsum(jnp.logical_not(inc), axis=-1) == 0
+    sel = prefix[None] & (j < widths[:, None, None, None])   # (Wd, L, N, W)
+    w_eff = sel.sum(-1).astype(lat.dtype)                    # (Wd, L, N)
+    p_cum = jnp.where(sel, p[None, None], 0.0).sum(-1)       # (Wd, L, N)
+    EV = p_cum * Lv[None] - (w_eff - p_cum) * cost[None, None, :]
+    thr = (1.0 - alphas[:, None, None]) * cost[None, None, :]  # (A, L, N)
+    spec = EV[:, None] >= thr[None]                          # (Wd, A, L, N)
+    frac = spec.astype(lat.dtype).mean(axis=-1)
+    # any committed candidate saves the edge's latency; all launched
+    # losers are billed at rho (§9.3 expected form)
+    exp_lat = jnp.where(
+        spec, (lat[None, :] * (1.0 - p_cum))[:, None], lat[None, None, None, :]
+    ).mean(-1)
+    waste = (spec * ((w_eff - p_cum)[:, None] * cost[None, None, None, :])
+             * rho).sum(-1)
+    exp_cost = cost.sum() + waste
+    return frac, exp_lat, exp_cost, waste
+
+
+def beam_counterfactual_grid(P, conf, latencies, costs, alphas, lambdas,
+                             widths, rho=0.5):
+    """§12.1 counterfactual grid with beam width as a third axis.
+
+    ``conf`` is (N, W) per-row candidate confidences (rows sorted
+    non-increasing); ``widths`` the beam widths to sweep.  Returns a dict
+    of (len(widths), len(alphas), len(lambdas)) arrays under the same
+    keys as :func:`counterfactual_grid`; the ``width == 1`` slice of a
+    single-certain-candidate ``conf`` reproduces that grid exactly
+    (pinned by tests/test_beam.py).
+    """
+    conf = np.asarray(conf, float)
+    if conf.ndim != 2:
+        raise ValueError("conf must be (N, W)")
+    if (conf < 0).any() or (conf > 1).any():
+        raise ValueError("candidate confidences must be in [0, 1]")
+    if (conf[:, 1:] > conf[:, :-1]).any():
+        raise ValueError("conf rows must be sorted non-increasing")
+    if (conf.sum(1) > 1.0 + 1e-9).any():
+        raise ValueError("conf rows must sum to <= 1")
+    widths = np.atleast_1d(np.asarray(widths))
+    if not np.issubdtype(widths.dtype, np.integer) or (widths < 1).any():
+        raise ValueError("widths must be integers >= 1")
+    frac, exp_lat, exp_cost, waste = _beam_grid(
+        _f(P), _f(conf), _f(latencies), _f(costs), _f(alphas), _f(lambdas),
+        jnp.asarray(widths, jnp.int32), _f(rho),
+    )
+    return {
+        "speculate_fraction": np.asarray(frac),
+        "expected_latency_s": np.asarray(exp_lat),
+        "expected_cost_usd": np.asarray(exp_cost),
+        "expected_waste_usd": np.asarray(waste),
+    }
+
+
+@jax.jit
+def _kcrit_surface(L_value, C_spec, alphas, widths):
+    w = widths[:, None]
+    return w * (L_value + C_spec) / ((w + 1.0 - alphas[None, :]) * C_spec)
+
+
+def critical_k_surface(L_value, C_spec, alphas, widths):
+    """§7.6 self-limiting closed form extended to beam width: the
+    (len(widths), len(alphas)) surface
+
+        k_crit(alpha, w) = w (L + C) / ((w + 1 - alpha) C)
+
+    (see ``repro.core.beam.beam_critical_k``).  The ``w == 1`` row equals
+    :func:`critical_k_grid`; the surface is monotone in ``w`` with
+    ceiling ``(L + C) / C``.
+    """
+    widths = np.atleast_1d(np.asarray(widths))
+    if not np.issubdtype(widths.dtype, np.integer) or (widths < 1).any():
+        raise ValueError("widths must be integers >= 1")
+    return np.asarray(_kcrit_surface(
+        _f(L_value), _f(C_spec), _f(alphas), _f(widths)))

@@ -1,0 +1,693 @@
+"""Top-k beam speculation engine — D4 generalized to multi-candidate.
+
+The single-candidate engine speculates one predicted upstream output per
+edge.  The closest published systems (B-PASTE's beam-aware pattern
+speculation, SPORK's self-speculative forking — see PAPERS.md) speculate
+over *k* candidates.  This module generalizes the §6 expected-value rule
+to a beam of candidate predictions per edge:
+
+* each edge carries candidate confidences ``c_1 >= c_2 >= ... >= c_W``
+  (sorted descending, summing to <= 1) over a **shared** Beta posterior
+  ``P`` — candidate j commits with probability ``p_j = c_j * P`` and the
+  events are disjoint (at most one candidate can match the upstream's
+  actual output);
+* the dollar budget is shared across the beam: every launched candidate
+  pays ``C_spec`` and at most one is refunded by a commit, so the
+  failure-weighted cost term sums over *launched* candidates —
+
+      EV(w)     = P_w * L_value - (w_eff - P_w) * C_spec
+      threshold = (1 - alpha) * C_spec          (unchanged, §6.3)
+
+  with ``P_w = sum_{j in beam} p_j`` and ``w_eff`` the number actually
+  launched;
+* candidates are admitted greedily in confidence order: candidate 1
+  unconditionally (so ``w = 1`` is *exactly* the classic rule — the gate
+  expression reduces bitwise to ``decision.evaluate``), candidate
+  ``j >= 2`` only while its marginal EV is non-negative,
+
+      p_j * (L_value + C_spec) - C_spec >= 0        (tie -> include),
+
+  which with sorted confidences is a prefix rule (once one candidate
+  fails the marginal, all later ones do too);
+* streaming semantics cancel **all losers on first commit** — at the
+  upstream finish the winner commits and every other launched candidate
+  is cancelled, billed its actuals through the §9.3 fractional-waste
+  rule (``streaming.expected_beam_waste`` is the planner-side expected
+  form).
+
+§7.6 closed form extended to a critical-k **surface** (pinned by
+tests/test_beam.py next to tests/test_self_limiting.py): under a uniform
+prior over ``k`` branches (``p_j = 1/k``), the beam rule SPECULATEs iff
+
+    k <= k_crit(alpha, w) = w * (L_value + C_spec)
+                            / ((w + 1 - alpha) * C_spec)
+
+— monotone increasing in ``w`` with ceiling ``(L_value + C_spec) /
+C_spec`` (a wider beam tolerates more branching, but never past the
+point where even a certain commit cannot pay the losers), and reducing
+to the classic ``k_crit(alpha) = (L+C)/((2-alpha) C)`` at ``w = 1``.
+
+Fleet lowering: :func:`beam_replay` sweeps beam width as a **third grid
+axis** next to (alpha, lambda) — ``lax.scan`` over episodes with the
+Beta posterior carried per (width, grid) cell, ``vmap`` over widths x
+grid points, inner ``lax.scan`` over topo-ordered ops.  The ``w = 1``
+path is bitwise-f64 equal to :func:`repro.core.fleet.fleet_replay`
+(asserted before any timing claim, the repo-wide discipline);
+``w > 1`` is matched against the pure-numpy
+:func:`reference_beam_replay` twin.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .batch_decision import _f
+from .betainc import betaincinv
+from .decision import (
+    Decision,
+    DecisionInputs,
+    DecisionResult,
+    _validate_alpha,
+    _validate_p,
+)
+from .fleet import FleetLowered, _normalize_grid
+
+__all__ = [
+    "BeamDecisionResult",
+    "beam_evaluate",
+    "beam_critical_k",
+    "validate_confidences",
+    "BeamFleetReport",
+    "beam_replay",
+    "reference_beam_replay",
+    "hit_rank_from_success",
+]
+
+
+# ------------------------------------------------------------- scalar rule
+def validate_confidences(confidences: Sequence[float]) -> tuple[float, ...]:
+    """Validate a candidate-confidence vector: each in [0, 1], sorted
+    non-increasing, summing to <= 1 (disjoint candidate events over the
+    shared posterior).  Returns it as a tuple."""
+    conf = tuple(float(c) for c in confidences)
+    if not conf:
+        raise ValueError("confidences must be non-empty")
+    for c in conf:
+        if not (0.0 <= c <= 1.0):
+            raise ValueError(f"candidate confidence must be in [0, 1], got {c}")
+    if any(a < b for a, b in zip(conf, conf[1:])):
+        raise ValueError("confidences must be sorted non-increasing")
+    if sum(conf) > 1.0 + 1e-9:
+        raise ValueError("confidences must sum to <= 1 (disjoint candidates)")
+    return conf
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamDecisionResult(DecisionResult):
+    """A :class:`~repro.core.decision.DecisionResult` plus the beam
+    bookkeeping.  ``P_used`` is the beam-cumulative commit probability
+    ``P_w`` the gate ran on; ``launched`` is ``w_eff`` on SPECULATE and 0
+    on WAIT — the per-candidate USD attribution hook."""
+
+    width: int = 1                  # requested beam width w
+    w_eff: int = 1                  # candidates admitted by the prefix rule
+    launched: int = 0               # candidates actually launched
+    p_candidates: tuple = ()        # per-candidate p_j = c_j * P
+    included: tuple = ()            # per-candidate admission mask
+
+    @property
+    def expected_losers(self) -> float:
+        """E[launched candidates that cancel] = launched - P_w."""
+        return self.launched - (self.P_used if self.launched else 0.0)
+
+
+def beam_evaluate(
+    inputs: DecisionInputs,
+    confidences: Sequence[float],
+    width: int,
+    *,
+    use_lower_bound: bool = False,
+) -> BeamDecisionResult:
+    """Run the top-k D4 gate (scalar reference path).
+
+    ``confidences`` are the per-candidate predictor confidences (sorted
+    descending; see module docstring); ``width`` caps how many the beam
+    may launch.  With ``width == 1`` and ``confidences[0] == 1.0`` the
+    result is **bitwise-f64 identical** to ``decision.evaluate`` — same
+    expression order, candidate 1 admitted unconditionally — pinned by
+    tests/test_beam.py.
+    """
+    conf = validate_confidences(confidences)
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    cm = inputs.cost_model()
+    C_spec = cm.cost(inputs.input_tokens, inputs.output_tokens)
+    L_value = inputs.latency_seconds * inputs.lambda_usd_per_s
+    P = inputs.P
+    if use_lower_bound:
+        if inputs.P_lower_bound is None:
+            raise ValueError("use_lower_bound=True requires P_lower_bound")
+        P = inputs.P_lower_bound
+    _validate_p(P)
+    _validate_alpha(inputs.alpha)
+
+    p_candidates = tuple(c * P for c in conf)
+    included = []
+    prefix_ok = True
+    w_eff = 0
+    p_cum = 0.0
+    for j, p_j in enumerate(p_candidates):
+        if j > 0:
+            # marginal rule (tie -> include, the §6.1 convention); with
+            # sorted confidences this is a prefix property
+            prefix_ok = prefix_ok and (
+                p_j * (L_value + C_spec) - C_spec >= 0.0
+            )
+        take = (j == 0 or prefix_ok) and j < width
+        included.append(take)
+        if take:
+            w_eff += 1
+            p_cum += p_j
+    w_eff_f = float(w_eff)
+    # shared-budget EV; at w_eff == 1 this is bitwise the classic
+    # P*L_value - (1.0 - P)*C_spec of decision.evaluate
+    EV = p_cum * L_value - (w_eff_f - p_cum) * C_spec
+    threshold = (1.0 - inputs.alpha) * C_spec
+    decision = Decision.SPECULATE if EV >= threshold else Decision.WAIT
+    return BeamDecisionResult(
+        decision=decision,
+        EV_usd=EV,
+        threshold_usd=threshold,
+        C_spec_usd=C_spec,
+        L_value_usd=L_value,
+        P_used=p_cum,
+        width=int(width),
+        w_eff=w_eff,
+        launched=w_eff if decision == Decision.SPECULATE else 0,
+        p_candidates=p_candidates,
+        included=tuple(included),
+    )
+
+
+# --------------------------------------------------------- §7.6 surface
+def beam_critical_k(L_value: float, C_spec: float, alpha: float,
+                    width: int) -> float:
+    """k_crit(alpha, w) = w * (L_value + C_spec) / ((w + 1 - alpha) * C_spec).
+
+    Under a uniform prior over k branches speculated with beam width
+    ``w <= k`` (each candidate ``p_j = 1/k``), the beam rule SPECULATEs
+    iff ``k <= k_crit(alpha, w)`` — including the marginal-admission edge
+    cases (for ``k > (L+C)/C`` the prefix rule trims the beam to one
+    candidate and the classic ``w = 1`` bound takes over, which is always
+    the tighter one).  Monotone increasing in ``w``; ceiling
+    ``(L_value + C_spec) / C_spec`` as ``w -> inf``; reduces to
+    ``decision.critical_k`` at ``w = 1``.
+    """
+    _validate_alpha(alpha)
+    if C_spec <= 0:
+        raise ValueError("C_spec must be positive for the critical-k form")
+    if width < 1:
+        raise ValueError(f"width must be >= 1, got {width}")
+    return width * (L_value + C_spec) / ((width + 1.0 - alpha) * C_spec)
+
+
+# ------------------------------------------------------------ fleet report
+@dataclasses.dataclass(frozen=True)
+class BeamFleetReport:
+    """Beam replay aggregates; shapes use E episodes, W beam widths,
+    G (alpha, lambda) grid points, V ops in topo order.
+
+    The shared-stat fields carry :class:`~repro.core.fleet.FleetReport`
+    semantics per width slice; ``launched`` / ``committed`` count *edges*
+    (so the ``widths == [1]`` slice is comparable to ``fleet_replay``),
+    while ``launched_candidates`` / ``cancelled_candidates`` attribute
+    every candidate in the beam.
+    """
+
+    alphas: np.ndarray              # (G,)
+    lambdas: np.ndarray             # (G,)
+    widths: np.ndarray              # (W,)
+    makespan_s: np.ndarray          # (E, W, G)
+    total_cost_usd: np.ndarray      # (E, W, G)
+    waste_usd: np.ndarray           # (E, W, G)
+    launched: np.ndarray            # (E, W, G) edges launched
+    committed: np.ndarray           # (E, W, G) edges committed
+    launched_candidates: np.ndarray   # (E, W, G) candidates launched
+    cancelled_candidates: np.ndarray  # (E, W, G) loser candidates billed
+    EV_usd: np.ndarray              # (E, W, G, V)
+    threshold_usd: np.ndarray       # (E, W, G, V)
+    speculate: np.ndarray           # (E, W, G, V)
+    w_eff: np.ndarray               # (E, W, G, V) admitted beam width
+    edge_launched: np.ndarray       # (E, W, G, V)
+    edge_committed: np.ndarray      # (E, W, G, V)
+    edge_waste_usd: np.ndarray      # (E, W, G, V)
+    start_s: np.ndarray             # (E, W, G, V)
+    finish_s: np.ndarray            # (E, W, G, V)
+    post_alpha: np.ndarray          # (E, W, G, V)
+    post_beta: np.ndarray           # (E, W, G, V)
+    ep_mask: np.ndarray = None      # (E,)
+
+    def width_slice(self, wi: int) -> dict:
+        """The per-(E, G) stat dict at one width index — the shape the
+        single-candidate parity suite compares against ``FleetReport``."""
+        out = {}
+        for f in dataclasses.fields(self):
+            if f.name in ("alphas", "lambdas", "widths", "ep_mask"):
+                continue
+            out[f.name] = getattr(self, f.name)[:, wi]
+        return out
+
+    def pareto(self) -> dict:
+        """Per-(width, grid) mean latency / cost / waste — the §12.3
+        Pareto with beam width as the third axis."""
+        rows = slice(None) if self.ep_mask is None else np.asarray(
+            self.ep_mask, bool)
+        return {
+            "alphas": self.alphas,
+            "lambdas": self.lambdas,
+            "widths": self.widths,
+            "latency_s": self.makespan_s[rows].mean(0),
+            "cost_usd": self.total_cost_usd[rows].mean(0),
+            "waste_usd": self.waste_usd[rows].mean(0),
+            "launched": self.launched[rows].sum(0),
+            "committed": self.committed[rows].sum(0),
+            "launched_candidates": self.launched_candidates[rows].sum(0),
+            "cancelled_candidates": self.cancelled_candidates[rows].sum(0),
+        }
+
+
+# ------------------------------------------------------------- fleet sweep
+def hit_rank_from_success(success: np.ndarray) -> np.ndarray:
+    """Lift a single-candidate (E, V) bool success log into beam hit
+    ranks: rank 0 where the (sole) candidate committed, -1 otherwise."""
+    success = np.asarray(success, bool)
+    return np.where(success, 0, -1).astype(np.int32)
+
+
+def _beam_conf(lowered: FleetLowered) -> np.ndarray:
+    conf = getattr(lowered, "beam_conf", None)
+    if conf is None:
+        # single-candidate default: one certain candidate per edge, so
+        # every width replays the classic engine exactly
+        conf = np.zeros((lowered.n_ops, 1))
+        conf[:, 0] = 1.0
+    return np.asarray(conf, float)
+
+
+def _pack_beam_static(lowered: FleetLowered):
+    return (
+        jnp.asarray(lowered.parent_mask),
+        jnp.asarray(lowered.u_onehot),
+        _f(lowered.dur), _f(lowered.op_cost),
+        jnp.asarray(lowered.has_edge),
+        _f(lowered.lat_save), _f(lowered.in_tok), _f(lowered.out_tok),
+        _f(lowered.in_price), _f(lowered.out_price), _f(lowered.pred_cost),
+        jnp.asarray(lowered.has_pred),
+        jnp.asarray(lowered.streams),
+    )
+
+
+def _beam_episode(static, beam_conf, discount, use_lower_bound, gamma,
+                  post_ab, alpha, lam, width, hit, pred_ok):
+    """One episode at one (width, grid) cell.  Expression order mirrors
+    ``fleet._episode`` exactly on the single-candidate path so the
+    ``w = 1`` results stay bitwise-f64 equal to ``fleet_replay``."""
+    (parent_mask, u_onehot, dur, op_cost, has_edge, lat_save, in_tok,
+     out_tok, in_price, out_price, pred_cost, has_pred, streams) = static
+    V = dur.shape[0]
+    W = beam_conf.shape[1]
+    a, b = post_ab[:, 0], post_ab[:, 1]
+    if use_lower_bound:
+        P = betaincinv(a, b, gamma)
+    else:
+        P = a / (a + b)
+    neg = jnp.asarray(-jnp.inf, dur.dtype)
+
+    # ---- top-k D4 gate over the shared dollar budget (module docstring)
+    C_spec = in_tok * in_price + out_tok * out_price
+    L_value = lat_save * lam
+    p = beam_conf * P[:, None]                              # (V, W)
+    j = jnp.arange(W)
+    marginal_ok = p * (L_value + C_spec)[:, None] - C_spec[:, None] >= 0.0
+    # candidate 1 unconditional (w=1 reduces to the classic gate); the
+    # marginal rule is a prefix property under sorted confidences
+    inc = (j == 0) | marginal_ok
+    prefix = jnp.cumsum(jnp.logical_not(inc), axis=1) == 0
+    sel = prefix & (j < width)
+    w_eff = sel.sum(1)
+    w_eff_f = w_eff.astype(dur.dtype)
+    p_cum = jnp.where(sel, p, 0.0).sum(1)
+    EV = p_cum * L_value - (w_eff_f - p_cum) * C_spec
+    threshold = (1.0 - alpha) * C_spec
+    spec_dec = EV >= threshold
+    c_in = in_tok * in_price
+    # a commit requires the matching candidate to be inside the launched
+    # prefix (§7.4 label generalized to a rank)
+    hit_ok = (hit >= 0) & (hit < w_eff)
+
+    def step(carry, xs):
+        start, finish = carry
+        (pmask, umask, dur_v, spec_v, pc_v, launch_gate_v, streams_v,
+         c_in_v, out_tok_v, out_price_v, w_eff_f_v, hit_ok_v, pred_ok_v,
+         vmask) = xs
+        t_ready = jnp.max(jnp.where(pmask, finish, neg), initial=0.0)
+        start_u = jnp.sum(jnp.where(umask, start, 0.0))
+        finish_u = jnp.sum(jnp.where(umask, finish, 0.0))
+        other_ready = jnp.max(jnp.where(pmask & ~umask, finish, neg),
+                              initial=0.0)
+        launched = spec_v & launch_gate_v & pred_ok_v
+        t_launch = jnp.maximum(start_u + pc_v, other_ready)
+
+        committed = launched & hit_ok_v
+        # timing mirrors fleet._episode: winner commits at max(spec
+        # finish, u finish); no winner -> re-execute after u
+        t1_commit = jnp.maximum(t_launch + dur_v, finish_u)
+        t0 = jnp.where(committed, t_launch,
+                       jnp.where(launched, finish_u, t_ready))
+        t1 = jnp.where(committed, t1_commit,
+                       jnp.where(launched, finish_u + dur_v,
+                                 t_ready + dur_v))
+
+        # §9.3: every loser is cancelled at the upstream finish (the
+        # first-commit / verification point) and billed its actuals —
+        # the same fractional-waste expression as the single path, times
+        # the loser count (w_eff minus the at-most-one winner)
+        elapsed_f = jnp.maximum(0.0, finish_u - t_launch)
+        frac_f = jnp.where(dur_v > 0.0,
+                           jnp.minimum(1.0, elapsed_f / dur_v), 1.0)
+        frac_f = jnp.where(streams_v, frac_f, 1.0)
+        per_loser = c_in_v + (frac_f * out_tok_v) * out_price_v
+        losers = w_eff_f_v - committed.astype(dur_v.dtype)
+        waste_v = jnp.where(launched, losers * per_loser, 0.0)
+        losers_v = jnp.where(launched, losers, 0.0)
+
+        start = jnp.where(vmask, t0, start)
+        finish = jnp.where(vmask, t1, finish)
+        outs = (launched, committed, losers_v, waste_v, t0, t1)
+        return (start, finish), outs
+
+    xs = (
+        parent_mask, u_onehot, dur, spec_dec, pred_cost,
+        has_edge & has_pred, streams, c_in, out_tok, out_price,
+        w_eff_f, hit_ok, pred_ok, jnp.eye(V, dtype=bool),
+    )
+    init = (jnp.zeros(V, dur.dtype), jnp.zeros(V, dur.dtype))
+    (start, finish), (launched, committed, losers, waste,
+                      t0s, t1s) = jax.lax.scan(step, init, xs)
+
+    # shared-posterior Bernoulli: the edge's trial succeeds iff any
+    # launched candidate committed (same discounted recurrence as
+    # fleet._episode / BetaPosterior.update)
+    suc_f = committed.astype(a.dtype)
+    a_new = jnp.where(launched, a * discount + suc_f, a)
+    b_new = jnp.where(launched, b * discount + (1.0 - suc_f), b)
+    post_new = jnp.stack([a_new, b_new], -1)
+
+    waste_total = waste.sum()
+    launched_f = launched.astype(a.dtype)
+    stats = {
+        "makespan_s": jnp.max(finish, initial=0.0),
+        "total_cost_usd": op_cost.sum() + waste_total,
+        "waste_usd": waste_total,
+        "launched": launched.sum(),
+        "committed": committed.sum(),
+        "launched_candidates": (w_eff_f * launched_f).sum(),
+        "cancelled_candidates": losers.sum(),
+        "EV_usd": EV,
+        "threshold_usd": threshold,
+        "speculate": spec_dec,
+        "w_eff": w_eff,
+        "edge_launched": launched,
+        "edge_committed": committed,
+        "edge_waste_usd": waste,
+        "start_s": t0s,
+        "finish_s": t1s,
+        "post_alpha": a_new,
+        "post_beta": b_new,
+    }
+    return post_new, stats
+
+
+@functools.partial(jax.jit, static_argnames=("use_lower_bound",))
+def _beam_scan(static, beam_conf, a0, b0, discount, alphas, lambdas,
+               widths, gamma, hit, pred_ok, ep_mask, use_lower_bound):
+    G = alphas.shape[0]
+    Wg = widths.shape[0]
+    V = a0.shape[0]
+    post0 = jnp.broadcast_to(
+        jnp.stack([a0, b0], -1)[None, None], (Wg, G, V, 2))
+    episode = functools.partial(
+        _beam_episode, static, beam_conf, discount, use_lower_bound, gamma)
+
+    def ep_step(post, xs):
+        hit_e, pred_e, mask_e = xs
+
+        def cell(p, al, lm, w):
+            return episode(p, al, lm, w, hit_e, pred_e)
+
+        over_grid = jax.vmap(cell, in_axes=(0, 0, 0, None))
+        post_new, stats = jax.vmap(
+            over_grid, in_axes=(0, None, None, 0)
+        )(post, alphas, lambdas, widths)
+        post_new = jnp.where(mask_e, post_new, post)
+        stats = {
+            k: jnp.where(mask_e, v, jnp.zeros_like(v))
+            for k, v in stats.items()
+        }
+        stats["post_alpha"] = jnp.where(mask_e, stats["post_alpha"],
+                                        post[..., 0])
+        stats["post_beta"] = jnp.where(mask_e, stats["post_beta"],
+                                       post[..., 1])
+        return post_new, stats
+
+    _, ys = jax.lax.scan(ep_step, post0, (hit, pred_ok, ep_mask))
+    return ys
+
+
+def beam_replay(
+    lowered: FleetLowered,
+    hit_rank: np.ndarray,
+    alphas,
+    lambdas,
+    widths,
+    *,
+    pred_ok: Optional[np.ndarray] = None,
+    ep_mask: Optional[np.ndarray] = None,
+) -> BeamFleetReport:
+    """Replay E episodes x W beam widths x G grid points in one jit'd
+    XLA call — the fleet lowering of the beam engine, with beam width as
+    the third grid axis.
+
+    Args:
+      lowered: output of :func:`repro.core.fleet.lower_workflow`; its
+        ``beam_conf`` (populated via ``beam_confidences=``) supplies the
+        per-edge sorted candidate confidences.  A lowering without one
+        replays the single-candidate default (``conf = [1.0]``) at every
+        width.
+      hit_rank: (E, V) int — per-episode rank of the candidate matching
+        the upstream's actual output (0 = top candidate), or -1 when none
+        matches (tier failure).  A bool array is accepted as the
+        single-candidate degenerate case (True -> rank 0).
+      widths: length-W beam widths (ints >= 1) to sweep.
+      pred_ok / ep_mask: as in :func:`repro.core.fleet.fleet_replay`.
+
+    The ``width == 1`` slice is bitwise-f64 equal to ``fleet_replay`` on
+    the same lowering and success log (tests/test_beam.py asserts it on
+    every shared statistic before the benchmark may claim timings).
+    """
+    alphas, lambdas = _normalize_grid(alphas, lambdas)
+    widths = np.atleast_1d(np.asarray(widths))
+    if widths.ndim != 1 or widths.shape[0] == 0:
+        raise ValueError("widths must be a non-empty 1-D sequence")
+    if not np.issubdtype(widths.dtype, np.integer):
+        raise ValueError("widths must be integers")
+    if (widths < 1).any():
+        raise ValueError("beam widths must be >= 1")
+    hit_rank = np.asarray(hit_rank)
+    if hit_rank.dtype == bool:
+        hit_rank = hit_rank_from_success(hit_rank)
+    hit_rank = hit_rank.astype(np.int32)
+    if hit_rank.ndim != 2 or hit_rank.shape[1] != lowered.n_ops:
+        raise ValueError(
+            f"hit_rank must have shape (E, {lowered.n_ops})")
+    E = hit_rank.shape[0]
+    conf = _beam_conf(lowered)
+    if conf.shape[0] != lowered.n_ops:
+        raise ValueError("beam_conf rows must align with ops")
+    if pred_ok is None:
+        pred_ok = np.broadcast_to(lowered.has_pred, (E, lowered.n_ops)).copy()
+    if ep_mask is None:
+        ep_mask = np.ones(E, bool)
+    else:
+        ep_mask = np.asarray(ep_mask, bool)
+        if ep_mask.shape != (E,):
+            raise ValueError(f"ep_mask must have shape ({E},)")
+    ys = _beam_scan(
+        _pack_beam_static(lowered), _f(conf),
+        _f(lowered.a0), _f(lowered.b0), _f(lowered.discount),
+        _f(alphas), _f(lambdas), jnp.asarray(widths, jnp.int32),
+        _f(lowered.gamma),
+        jnp.asarray(hit_rank), jnp.asarray(pred_ok, bool),
+        jnp.asarray(ep_mask), bool(lowered.use_lower_bound),
+    )
+    np_out = {k: np.asarray(v) for k, v in ys.items()}
+    return BeamFleetReport(alphas=alphas, lambdas=lambdas, widths=widths,
+                           ep_mask=ep_mask, **np_out)
+
+
+# ----------------------------------------------------- scalar reference twin
+def reference_beam_replay(
+    lowered: FleetLowered,
+    hit_rank: np.ndarray,
+    alphas,
+    lambdas,
+    widths,
+    *,
+    pred_ok: Optional[np.ndarray] = None,
+) -> dict:
+    """Pure-numpy scalar twin of :func:`beam_replay` — one episode, one
+    (width, grid) cell, one op at a time in Python floats, following the
+    documented expression orders.  The parity suite pins ``beam_replay``
+    against it: decisions / counts / ranks / event times bitwise, EV /
+    waste to 1 ULP (the established FMA allowance).  §7.5
+    ``use_lower_bound`` lowerings are not supported here (that mode's
+    parity is covered by the bitwise ``w = 1`` test against
+    ``fleet_replay``)."""
+    if lowered.use_lower_bound:
+        raise NotImplementedError(
+            "reference_beam_replay gates on the posterior mean; lower-"
+            "bound parity is pinned via the w=1 fleet_replay equivalence")
+    alphas, lambdas = _normalize_grid(alphas, lambdas)
+    widths = np.atleast_1d(np.asarray(widths, int))
+    hit_rank = np.asarray(hit_rank)
+    if hit_rank.dtype == bool:
+        hit_rank = hit_rank_from_success(hit_rank)
+    E, V = hit_rank.shape
+    conf = _beam_conf(lowered)
+    if pred_ok is None:
+        pred_ok = np.broadcast_to(lowered.has_pred, (E, V)).copy()
+    pred_ok = np.asarray(pred_ok, bool)
+    G, Wg = alphas.shape[0], widths.shape[0]
+    Wc = conf.shape[1]
+    parents = [np.flatnonzero(lowered.parent_mask[v]) for v in range(V)]
+    ups = [int(np.argmax(lowered.u_onehot[v])) if lowered.has_edge[v] else -1
+           for v in range(V)]
+
+    shape_eg = (E, Wg, G)
+    out = {
+        k: np.zeros(shape_eg) for k in (
+            "makespan_s", "total_cost_usd", "waste_usd", "launched",
+            "committed", "launched_candidates", "cancelled_candidates")
+    }
+    out.update({
+        k: np.zeros(shape_eg + (V,)) for k in (
+            "EV_usd", "threshold_usd", "edge_waste_usd", "start_s",
+            "finish_s", "post_alpha", "post_beta")
+    })
+    out["speculate"] = np.zeros(shape_eg + (V,), bool)
+    out["edge_launched"] = np.zeros(shape_eg + (V,), bool)
+    out["edge_committed"] = np.zeros(shape_eg + (V,), bool)
+    out["w_eff"] = np.zeros(shape_eg + (V,), int)
+
+    base_cost = float(lowered.op_cost.sum())
+    for wi, w in enumerate(widths):
+        for g in range(G):
+            alpha, lam = float(alphas[g]), float(lambdas[g])
+            a = [float(x) for x in lowered.a0]
+            b = [float(x) for x in lowered.b0]
+            for e in range(E):
+                start = [0.0] * V
+                finish = [0.0] * V
+                waste_total = 0.0
+                for v in range(V):
+                    dur_v = float(lowered.dur[v])
+                    P = a[v] / (a[v] + b[v])
+                    C_spec = (float(lowered.in_tok[v])
+                              * float(lowered.in_price[v])
+                              + float(lowered.out_tok[v])
+                              * float(lowered.out_price[v]))
+                    L_value = float(lowered.lat_save[v]) * lam
+                    prefix_ok = True
+                    w_eff = 0
+                    p_cum = 0.0
+                    for jc in range(Wc):
+                        p_j = float(conf[v, jc]) * P
+                        if jc > 0:
+                            prefix_ok = prefix_ok and (
+                                p_j * (L_value + C_spec) - C_spec >= 0.0)
+                        if (jc == 0 or prefix_ok) and jc < w:
+                            w_eff += 1
+                            p_cum += p_j
+                    w_eff_f = float(w_eff)
+                    EV = p_cum * L_value - (w_eff_f - p_cum) * C_spec
+                    threshold = (1.0 - alpha) * C_spec
+                    spec = EV >= threshold
+                    out["EV_usd"][e, wi, g, v] = EV
+                    out["threshold_usd"][e, wi, g, v] = threshold
+                    out["speculate"][e, wi, g, v] = spec
+                    out["w_eff"][e, wi, g, v] = w_eff
+
+                    t_ready = max((finish[p] for p in parents[v]),
+                                  default=0.0)
+                    t_ready = max(t_ready, 0.0)
+                    launched = (spec and bool(lowered.has_edge[v])
+                                and bool(lowered.has_pred[v])
+                                and bool(pred_ok[e, v]))
+                    if launched:
+                        u = ups[v]
+                        start_u, finish_u = start[u], finish[u]
+                        other = max(
+                            (finish[p] for p in parents[v] if p != u),
+                            default=0.0)
+                        other = max(other, 0.0)
+                        t_launch = max(start_u + float(lowered.pred_cost[v]),
+                                       other)
+                        hit = int(hit_rank[e, v])
+                        committed = 0 <= hit < w_eff
+                        if committed:
+                            t0 = t_launch
+                            t1 = max(t_launch + dur_v, finish_u)
+                        else:
+                            t0 = finish_u
+                            t1 = finish_u + dur_v
+                        elapsed_f = max(0.0, finish_u - t_launch)
+                        frac_f = (min(1.0, elapsed_f / dur_v)
+                                  if dur_v > 0.0 else 1.0)
+                        if not lowered.streams[v]:
+                            frac_f = 1.0
+                        per_loser = (
+                            float(lowered.in_tok[v])
+                            * float(lowered.in_price[v])
+                            + (frac_f * float(lowered.out_tok[v]))
+                            * float(lowered.out_price[v]))
+                        losers = w_eff_f - float(committed)
+                        waste_v = losers * per_loser
+                        waste_total += waste_v
+                        suc_f = float(committed)
+                        d = float(lowered.discount[v])
+                        a[v] = a[v] * d + suc_f
+                        b[v] = b[v] * d + (1.0 - suc_f)
+                        out["edge_launched"][e, wi, g, v] = True
+                        out["edge_committed"][e, wi, g, v] = committed
+                        out["edge_waste_usd"][e, wi, g, v] = waste_v
+                        out["launched"][e, wi, g] += 1
+                        out["committed"][e, wi, g] += committed
+                        out["launched_candidates"][e, wi, g] += w_eff_f
+                        out["cancelled_candidates"][e, wi, g] += losers
+                    else:
+                        t0 = t_ready
+                        t1 = t_ready + dur_v
+                    start[v], finish[v] = t0, t1
+                    out["start_s"][e, wi, g, v] = t0
+                    out["finish_s"][e, wi, g, v] = t1
+                    out["post_alpha"][e, wi, g, v] = a[v]
+                    out["post_beta"][e, wi, g, v] = b[v]
+                out["makespan_s"][e, wi, g] = max(finish) if V else 0.0
+                out["waste_usd"][e, wi, g] = waste_total
+                out["total_cost_usd"][e, wi, g] = base_cost + waste_total
+    return out

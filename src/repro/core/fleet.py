@@ -106,6 +106,10 @@ class FleetLowered:
     # Beta^{-1}(gamma; a, b) instead of the posterior mean
     use_lower_bound: bool = False
     gamma: float = 0.1
+    # top-k beam speculation (repro.core.beam): per-op candidate predictor
+    # confidences, sorted non-increasing along the row; None = the
+    # single-candidate engine (equivalent to one certain candidate)
+    beam_conf: Optional[np.ndarray] = None  # (V, W) or None
 
     @property
     def n_ops(self) -> int:
@@ -123,6 +127,7 @@ def lower_workflow(
     stream_refiners: Optional[dict] = None,
     *,
     default_chunks: int = 10,
+    beam_confidences: Optional[dict] = None,
 ) -> FleetLowered:
     """Lower a frozen workflow + planner params to dense episode arrays.
 
@@ -130,6 +135,12 @@ def lower_workflow(
     min(lat_u, lat_v), prices come from the downstream op's pricing entry,
     priors from ``params.posterior_for`` (so data-seeded / discounted
     posteriors carry over).
+
+    ``beam_confidences`` maps edge keys to per-candidate predictor
+    confidence vectors (sorted non-increasing, summing to <= 1) for the
+    top-k beam engine (``repro.core.beam``); edges without an entry keep
+    the single-candidate default ``[1.0]``.  Omitting the mapping leaves
+    ``beam_conf`` as None — the classic single-candidate lowering.
 
     §7.5 gating is taken from ``params.use_lower_bound`` / ``params.gamma``
     (the planner-side knobs).  The scalar executor reads its *own*
@@ -216,6 +227,22 @@ def lower_workflow(
         a0[i], b0[i] = post.alpha, post.beta
         discount[i] = post.discount
 
+    beam_conf = None
+    if beam_confidences:
+        from .beam import validate_confidences
+
+        rows = {}
+        for key, confs in beam_confidences.items():
+            v = key[1] if isinstance(key, tuple) else key
+            if v not in idx:
+                raise KeyError(f"beam_confidences names unknown op {v!r}")
+            rows[idx[v]] = validate_confidences(confs)
+        W = max(len(c) for c in rows.values())
+        beam_conf = np.zeros((V, W))
+        beam_conf[:, 0] = 1.0  # single certain candidate by default
+        for i, confs in rows.items():
+            beam_conf[i, : len(confs)] = confs
+
     return FleetLowered(
         names=tuple(topo), dur=dur, op_cost=op_cost, parent_mask=parent_mask,
         has_edge=has_edge, u_onehot=u_onehot, u_streams=u_streams,
@@ -225,6 +252,7 @@ def lower_workflow(
         a0=a0, b0=b0, discount=discount,
         use_lower_bound=bool(params.use_lower_bound),
         gamma=float(params.gamma),
+        beam_conf=beam_conf,
     )
 
 
@@ -617,6 +645,12 @@ def _pad_lowered(lowered: FleetLowered, V: int) -> FleetLowered:
         a0=fill(lowered.a0, 1.0), b0=fill(lowered.b0, 1.0),
         discount=fill(lowered.discount, 1.0),
         use_lower_bound=lowered.use_lower_bound, gamma=lowered.gamma,
+        beam_conf=None if lowered.beam_conf is None else np.concatenate(
+            [lowered.beam_conf,
+             np.concatenate(
+                 [np.ones((pad, 1)),
+                  np.zeros((pad, lowered.beam_conf.shape[1] - 1))], axis=1)]
+        ),
     )
 
 

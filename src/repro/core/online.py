@@ -52,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .batch_decision import _f, d4_gate
+from .batch_decision import _f, beam_gate, d4_gate
 from .betainc import betaincinv
 from .calibration import (
     CanaryReport,
@@ -87,7 +87,7 @@ __all__ = [
 # essentials): every served decision logged in dollars, one ring slot each.
 TELEMETRY_FIELDS = (
     "row", "speculate", "P_used", "P_mean", "EV_usd", "threshold_usd",
-    "margin_usd", "C_spec_usd", "L_value_usd",
+    "margin_usd", "C_spec_usd", "L_value_usd", "launched",
 )
 
 
@@ -123,9 +123,9 @@ class ServiceState(NamedTuple):
     counters: jax.Array  # (2,)   int32 [slots ever appended, real rows ever]
 
 
-def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
-               consecutive_n, rollcfg, use_lower_bound, check_drift,
-               use_rollout):
+def _tick_impl(state, zero, row, logrow, reqs, bconf, bwidth, out_row,
+               out_x, consecutive_n, rollcfg, use_lower_bound, check_drift,
+               use_rollout, use_beam):
     """One service tick, entirely in-graph.
 
     ``row`` / ``out_row`` use -1 as the padding sentinel (shape buckets)
@@ -135,6 +135,16 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
     ids so drained telemetry reports stable logical rows).  ``reqs``
     packs the per-request floats as columns
     [alpha, lambda, latency_s, in_tok, out_tok, in_price, out_price].
+
+    ``use_beam`` swaps the gate for the top-k beam rule
+    (``batch_decision.beam_gate``): ``bconf`` (Bp, W) carries per-request
+    candidate confidences and ``bwidth`` (Bp,) the beam width caps; the
+    telemetry "P_used" column then reports the beam-cumulative commit
+    probability the gate ran on, and "launched" the candidates launched
+    (``w_eff`` on served rows).  Non-beam ticks pass fixed zero-size
+    placeholders (never traced into the graph — the decision section of
+    the default executable is exactly the pre-beam one) and log
+    ``launched`` = served.
 
     Order (documented contract, mirrored by the parity tests):
 
@@ -182,9 +192,18 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
         P_used = betaincinv(g[:, 0], g[:, 1], rowcfg[ri, 0])
     else:
         P_used = P_mean
-    EV, thr, flag, C_spec, L_value = d4_gate(
-        P_used, reqs[:, 0], reqs[:, 1], reqs[:, 2], reqs[:, 3], reqs[:, 4],
-        reqs[:, 5], reqs[:, 6], zero)
+    if use_beam:
+        EV, thr, flag, C_spec, L_value, w_eff, p_cum = beam_gate(
+            P_used, bconf, bwidth, reqs[:, 0], reqs[:, 1], reqs[:, 2],
+            reqs[:, 3], reqs[:, 4], reqs[:, 5], reqs[:, 6], zero)
+        # the telemetry P_used column reports what the gate ran on — for
+        # a beam that is the cumulative commit probability
+        P_used = p_cum
+        w_eff_f = w_eff.astype(post.dtype)
+    else:
+        EV, thr, flag, C_spec, L_value = d4_gate(
+            P_used, reqs[:, 0], reqs[:, 1], reqs[:, 2], reqs[:, 3],
+            reqs[:, 4], reqs[:, 5], reqs[:, 6], zero)
     enabled_req = flags[ri, 0] > 0
     if use_rollout:
         # serving gated by the PRE-tick lifecycle state: SHADOW rows are
@@ -237,9 +256,11 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
     # memcpys — far cheaper than a modulo scatter on CPU); sentinel rows
     # (row == -1) are dropped at drain time.
     dt = post.dtype
+    served_f = served.astype(dt)
+    launched_col = served_f * w_eff_f if use_beam else served_f
     rows_out = jnp.stack([
-        logrow.astype(dt), served.astype(dt), P_used, P_mean,
-        EV, thr, EV - thr, C_spec, L_value,
+        logrow.astype(dt), served_f, P_used, P_mean,
+        EV, thr, EV - thr, C_spec, L_value, launched_col,
     ], axis=1)
     Bp = rows_out.shape[0]
     R = tel.shape[0]
@@ -260,7 +281,8 @@ def _tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
 # state buffers caps memory at two table copies — the double-buffer story
 # for HBM-resident million-row tables — but measurably slows CPU dispatch,
 # so the default follows multi_tenant_replay(donate=False).
-_TICK_STATICS = ("use_lower_bound", "check_drift", "use_rollout")
+_TICK_STATICS = ("use_lower_bound", "check_drift", "use_rollout",
+                 "use_beam")
 _tick = functools.partial(jax.jit, static_argnames=_TICK_STATICS)(_tick_impl)
 _tick_donated = functools.partial(
     jax.jit, static_argnames=_TICK_STATICS, donate_argnums=(0,))(_tick_impl)
@@ -372,6 +394,13 @@ class TickDecisions:
     @property
     def P_mean(self) -> np.ndarray:
         return self._col("P_mean")
+
+    @property
+    def launched(self) -> np.ndarray:
+        """Candidates launched per served decision: ``w_eff`` on beam
+        ticks, 0/1 on single-candidate ticks — the per-candidate USD
+        attribution column."""
+        return self._col("launched")
 
     @property
     def drift_triggered(self) -> np.ndarray:
@@ -632,6 +661,10 @@ class OnlineDecisionService:
             # placeholder rollout config operand for non-rollout ticks
             # (one fixed array — never churns the executable's operands)
             self._null_rollcfg = np.ones(9, np.int32)
+            # placeholder beam operands for non-beam ticks (zero-size and
+            # shape-stable: the use_beam=False executable never reads them)
+            self._null_beam = (np.zeros((0, 1), self._np_dtype),
+                               np.zeros(0, np.int32))
 
     def _ensure_state(self) -> ServiceState:
         self._ensure_ready()
@@ -703,6 +736,8 @@ class OnlineDecisionService:
         check_drift: bool = False,
         use_rollout: bool = False,
         rollout_cfg: Optional[np.ndarray] = None,
+        beam_confidences=None,
+        beam_width=None,
     ) -> TickDecisions:
         """Answer B decision requests in one donated XLA call.
 
@@ -716,6 +751,13 @@ class OnlineDecisionService:
         sentinel), so variable batch sizes share executables.  Host
         arrays are handed to the jit'd call directly in the working dtype
         — per-tick overhead is dispatch-bound, not transfer-bound.
+
+        ``beam_confidences`` (B, W) switches the tick to the top-k beam
+        gate (repro.core.beam): each request row carries its candidate
+        confidences (sorted non-increasing, summing to <= 1) and
+        ``beam_width`` (scalar or per-request) caps launches; the
+        telemetry "launched" column then attributes every launched
+        candidate in USD-traceable form.
         """
         self._ensure_ready()
         fdtype = self._np_dtype
@@ -730,6 +772,33 @@ class OnlineDecisionService:
                                input_tokens, output_tokens, input_price,
                                output_price)):
             reqs[:B, j] = np.asarray(x, fdtype)
+
+        bconf = bwidth = None
+        if beam_confidences is not None:
+            bc = np.asarray(beam_confidences, fdtype)
+            if bc.ndim != 2 or bc.shape[0] != B:
+                raise ValueError(
+                    f"beam_confidences must be ({B}, W), got {bc.shape}")
+            if (bc < 0).any() or (bc > 1).any():
+                raise ValueError("candidate confidences must be in [0, 1]")
+            if (bc[:, 1:] > bc[:, :-1]).any():
+                raise ValueError(
+                    "beam_confidences rows must be sorted non-increasing")
+            if (bc.sum(1) > 1.0 + 1e-9).any():
+                raise ValueError("beam_confidences rows must sum to <= 1")
+            if beam_width is None:
+                beam_width = bc.shape[1]
+            # padding rows: one certain candidate, width 1 (inert — the
+            # -1 row sentinel already drops their decisions)
+            bconf = np.zeros((Bp, bc.shape[1]), fdtype)
+            bconf[:, 0] = 1.0
+            bconf[:B] = bc
+            bwidth = np.ones(Bp, np.int32)
+            bwidth[:B] = np.asarray(beam_width, np.int32)
+            if (bwidth < 1).any():
+                raise ValueError("beam_width must be >= 1")
+        elif beam_width is not None:
+            raise ValueError("beam_width requires beam_confidences")
 
         out_row = out_x = None
         if outcomes is not None:
@@ -746,7 +815,8 @@ class OnlineDecisionService:
         return self.tick_packed(
             req_row, reqs, batch=B, out_row=out_row, out_x=out_x,
             use_lower_bound=use_lower_bound, check_drift=check_drift,
-            use_rollout=use_rollout, rollout_cfg=rollout_cfg)
+            use_rollout=use_rollout, rollout_cfg=rollout_cfg,
+            bconf=bconf, bwidth=bwidth)
 
     def tick_packed(
         self,
@@ -760,6 +830,8 @@ class OnlineDecisionService:
         check_drift: bool = False,
         use_rollout: bool = False,
         rollout_cfg: Optional[np.ndarray] = None,
+        bconf: Optional[np.ndarray] = None,
+        bwidth: Optional[np.ndarray] = None,
     ) -> TickDecisions:
         """The zero-copy hot path: the caller hands the packed request
         block its batcher accumulated between ticks — ``row`` (Bp,) int32
@@ -768,7 +840,9 @@ class OnlineDecisionService:
         out_tok, in_price, out_price] — and the tick dispatches with no
         per-request conversion or validation (out-of-range rows clamp;
         :meth:`tick` is the validating wrapper).  ``out_row``/``out_x``
-        are the equivalently packed settled outcomes."""
+        are the equivalently packed settled outcomes.  ``bconf`` (Bp, W)
+        / ``bwidth`` (Bp,) switch the tick to the beam gate (see
+        :meth:`tick`); both pre-packed to the bucket shape."""
         self._ensure_ready()
         if (not check_drift and not self._pending and row.shape[0] == 0
                 and (out_row is None or out_row.shape[0] == 0)):
@@ -824,11 +898,19 @@ class OnlineDecisionService:
         ulb = self.use_lower_bound if use_lower_bound is None else bool(use_lower_bound)
         rcfg = (self._null_rollcfg if rollout_cfg is None
                 else np.asarray(rollout_cfg, np.int32))
+        use_beam = bconf is not None
+        if use_beam:
+            if bwidth is None:
+                raise ValueError("bconf requires bwidth")
+            if bconf.shape[0] != row.shape[0] or bwidth.shape[0] != row.shape[0]:
+                raise ValueError("bconf/bwidth must match the packed batch")
+        else:
+            bconf, bwidth = self._null_beam
         fn = _tick_donated if self.donate else _tick
         new_state, rows_out, bools, drift, transitions, row_L = fn(
-            state, self._zero, srow, row, reqs, sout, out_x, self._cn,
-            rcfg, use_lower_bound=ulb, check_drift=check_drift,
-            use_rollout=bool(use_rollout),
+            state, self._zero, srow, row, reqs, bconf, bwidth, sout, out_x,
+            self._cn, rcfg, use_lower_bound=ulb, check_drift=check_drift,
+            use_rollout=bool(use_rollout), use_beam=use_beam,
         )
         self.store.adopt(new_state.post, new_state.rowcfg, new_state.flags,
                          new_state.roll)
@@ -898,6 +980,56 @@ class OnlineDecisionService:
             C_spec_usd=float(d.C_spec_usd[0]),
             L_value_usd=float(d.L_value_usd[0]),
             P_used=float(d.P_used[0]),
+        )
+
+    def decide_beam(
+        self,
+        edge: Optional[tuple[str, str]] = None,
+        *,
+        tenant: Optional[str] = None,
+        row: Optional[int] = None,
+        confidences,
+        width: int,
+        alpha: float,
+        lambda_usd_per_s: float,
+        latency_s: float,
+        input_tokens: int,
+        output_tokens: float,
+        input_price: float,
+        output_price: float,
+        use_lower_bound: Optional[bool] = None,
+    ):
+        """Single-request top-k convenience: a B=1 beam tick returning a
+        scalar ``repro.core.beam.BeamDecisionResult`` whose floats are
+        bitwise-f64 equal to ``beam_evaluate`` on the row's posterior
+        (same contraction-pinned lowering as :meth:`decide`)."""
+        from .beam import BeamDecisionResult
+
+        self._ensure_ready()
+        if row is None:
+            if edge is None:
+                raise ValueError("decide_beam needs edge or row")
+            row = self.row_index(edge, tenant)
+        d = self.tick(
+            [row], alpha=alpha, lambda_usd_per_s=lambda_usd_per_s,
+            latency_s=latency_s, input_tokens=input_tokens,
+            output_tokens=output_tokens, input_price=input_price,
+            output_price=output_price, use_lower_bound=use_lower_bound,
+            beam_confidences=np.asarray(confidences, self._np_dtype)[None, :],
+            beam_width=int(width),
+        )
+        speculate = bool(d.speculate[0])
+        launched = int(d.launched[0])
+        return BeamDecisionResult(
+            decision=Decision.SPECULATE if speculate else Decision.WAIT,
+            EV_usd=float(d.EV_usd[0]),
+            threshold_usd=float(d.threshold_usd[0]),
+            C_spec_usd=float(d.C_spec_usd[0]),
+            L_value_usd=float(d.L_value_usd[0]),
+            P_used=float(d.P_used[0]),
+            width=int(width),
+            w_eff=launched if speculate else 0,
+            launched=launched,
         )
 
     # ------------------------------------------------------------ telemetry

@@ -36,7 +36,7 @@ from typing import Optional
 from .decision import Decision, DecisionInputs, DecisionResult, evaluate
 from .posterior import BetaPosterior
 from .pricing import TwoRateTokenCost, get_pricing
-from .streaming import DEFAULT_RHO, expected_speculation_waste
+from .streaming import DEFAULT_RHO, expected_beam_waste, expected_speculation_waste
 from .workflow import Edge, Workflow
 
 __all__ = ["PlannerParams", "Plan", "plan_workflow", "enumerate_plans"]
@@ -58,6 +58,12 @@ class PlannerParams:
     gamma: float = 0.1
     # per-edge latency-savings override; default = overlap = min(lat_u, lat_v)
     latency_savings_s: dict[tuple[str, str], float] = dataclasses.field(default_factory=dict)
+    # top-k beam speculation (repro.core.beam): edges with an entry here
+    # carry that candidate-confidence vector (sorted non-increasing,
+    # summing to <= 1) and are gated with the beam rule at `beam_width`;
+    # edges without one keep the classic single-candidate rule.
+    beam_width: int = 1
+    beam_confidences: dict[tuple[str, str], tuple] = dataclasses.field(default_factory=dict)
 
     def posterior_for(self, edge: Edge) -> BetaPosterior:
         post = self.posteriors.get(edge.key)
@@ -88,6 +94,12 @@ class Plan:
     expected_waste_usd: float
     feasible: bool
     infeasibility: Optional[str] = None
+    # schedule-consistency record: edges whose Phase-2 SPECULATE verdict
+    # the schedule could not honor, mapped to the reason (e.g. a
+    # sequential plan has no slot to overlap into).  Their entries in
+    # ``decisions`` are downgraded to WAIT so ``speculated_edges()`` and
+    # the §8.3 user-visible estimate agree with what was actually costed.
+    schedule_overrides: dict[tuple[str, str], str] = dataclasses.field(default_factory=dict)
 
     @property
     def expected_cost_usd(self) -> float:
@@ -121,6 +133,12 @@ def _edge_decision(wf: Workflow, edge: Edge, params: PlannerParams) -> DecisionR
         output_price=pricing.output_price_per_token,
         P_lower_bound=post.lower_bound(params.gamma) if params.use_lower_bound else None,
     )
+    confs = params.beam_confidences.get(edge.key)
+    if confs is not None:
+        from .beam import beam_evaluate  # deferred: beam -> fleet -> planner
+
+        return beam_evaluate(inputs, confs, params.beam_width,
+                             use_lower_bound=params.use_lower_bound)
     return evaluate(inputs, use_lower_bound=params.use_lower_bound)
 
 
@@ -137,8 +155,14 @@ def _expected_schedule(
     speculated: set[tuple[str, str]],
     params: PlannerParams,
     concurrency: int,
+    commit_P: Optional[dict[tuple[str, str], float]] = None,
 ) -> dict[str, ScheduledOp]:
-    """Expected-time list schedule with c slots and speculative early starts."""
+    """Expected-time list schedule with c slots and speculative early starts.
+
+    ``commit_P`` optionally overrides the per-edge commit probability the
+    expected-finish mix uses (default: the posterior mean; the beam path
+    passes the beam-cumulative probability).
+    """
     topo = wf.topo_order()
     slots: list[float] = [0.0] * concurrency  # machine-ready times (min-heap)
     heapq.heapify(slots)
@@ -159,12 +183,26 @@ def _expected_schedule(
         t0 = max(dep_ready, slot_ready)
         lat = op.latency_est_s
         if is_spec:
-            # single speculated parent assumed dominant; P from its posterior
-            u = next(iter(spec_parents))
-            post = params.posterior_for(wf.edges[(u, name)])
-            P = post.mean
-            commit_ok = max(t0 + lat, finish[u])            # success path
-            commit_fail = finish[u] + lat                   # re-execute with i
+            # expected finish over *all* speculated parents: the early
+            # commit needs every speculated prediction to hit (joint P =
+            # product over edges), and both the success-verification and
+            # re-execute paths wait for the latest-finishing speculated
+            # parent.  Iterating in sorted order keeps the float product
+            # identical across interpreter runs (set order is hash-
+            # randomized); with one speculated parent this reduces
+            # bitwise to the old single-parent expression.
+            P = 1.0
+            spec_finish = None
+            for u in sorted(spec_parents):
+                if commit_P is not None and (u, name) in commit_P:
+                    P_u = commit_P[(u, name)]
+                else:
+                    P_u = params.posterior_for(wf.edges[(u, name)]).mean
+                P *= P_u
+                f_u = finish[u]
+                spec_finish = f_u if spec_finish is None else max(spec_finish, f_u)
+            commit_ok = max(t0 + lat, spec_finish)          # success path
+            commit_fail = spec_finish + lat                 # re-execute with i
             t1 = P * commit_ok + (1.0 - P) * commit_fail    # expected finish
         else:
             t1 = t0 + lat
@@ -189,9 +227,37 @@ def _build_plan(wf: Workflow, params: PlannerParams, concurrency: int) -> Plan:
     speculated = {
         k for k, d in decisions.items() if d.decision == Decision.SPECULATE
     }
-    if concurrency <= 1:
-        speculated = set()  # sequential plan cannot overlap anything
-    sched = _expected_schedule(wf, speculated, params, max(1, concurrency))
+    overrides: dict[tuple[str, str], str] = {}
+    if concurrency <= 1 and speculated:
+        # a sequential plan cannot overlap anything: downgrade the
+        # decision records too (EV numbers kept) so speculated_edges()
+        # and the schedule/waste below stay consistent (§8.3)
+        overrides = {k: "sequential" for k in sorted(speculated)}
+        for k in speculated:
+            d = decisions[k]
+            if hasattr(d, "launched"):
+                decisions[k] = dataclasses.replace(
+                    d, decision=Decision.WAIT, launched=0)
+            else:
+                decisions[k] = dataclasses.replace(d, decision=Decision.WAIT)
+        speculated = set()
+    # commit probability per speculated edge: posterior mean for the
+    # classic rule, beam-cumulative mean for beam edges (mirroring the
+    # gate-on-bound / expect-on-mean convention)
+    commit_P: dict[tuple[str, str], float] = {}
+    beam_stats: dict[tuple[str, str], tuple[float, int]] = {}
+    for k in speculated:
+        post = params.posterior_for(wf.edges[k])
+        d = decisions[k]
+        confs = params.beam_confidences.get(k)
+        if confs is not None and hasattr(d, "included"):
+            conf_sum = sum(c for c, inc in zip(confs, d.included) if inc)
+            commit_P[k] = conf_sum * post.mean
+            beam_stats[k] = (commit_P[k], d.w_eff)
+        else:
+            commit_P[k] = post.mean
+    sched = _expected_schedule(wf, speculated, params, max(1, concurrency),
+                               commit_P)
     latency = max((s.finish_s for s in sched.values()), default=0.0)
     base_cost = sum(_op_cost(wf, n) for n in wf.ops)
     waste = 0.0
@@ -199,14 +265,26 @@ def _build_plan(wf: Workflow, params: PlannerParams, concurrency: int) -> Plan:
         op = wf.ops[v]
         pricing = get_pricing(op.provider, op.model)
         post = params.posterior_for(wf.edges[(u, v)])
-        waste += expected_speculation_waste(
-            post.mean,
-            TwoRateTokenCost.from_entry(pricing),
-            op.input_tokens_est,
-            op.output_tokens_est,
-            rho=params.rho.get((u, v), DEFAULT_RHO),
-            streaming=op.streams,
-        )
+        if (u, v) in beam_stats:
+            p_cum, launched = beam_stats[(u, v)]
+            waste += expected_beam_waste(
+                p_cum,
+                launched,
+                TwoRateTokenCost.from_entry(pricing),
+                op.input_tokens_est,
+                op.output_tokens_est,
+                rho=params.rho.get((u, v), DEFAULT_RHO),
+                streaming=op.streams,
+            )
+        else:
+            waste += expected_speculation_waste(
+                post.mean,
+                TwoRateTokenCost.from_entry(pricing),
+                op.input_tokens_est,
+                op.output_tokens_est,
+                rho=params.rho.get((u, v), DEFAULT_RHO),
+                streaming=op.streams,
+            )
     plan = Plan(
         concurrency=concurrency,
         decisions=decisions,
@@ -215,11 +293,16 @@ def _build_plan(wf: Workflow, params: PlannerParams, concurrency: int) -> Plan:
         base_cost_usd=base_cost,
         expected_waste_usd=waste,
         feasible=True,
+        schedule_overrides=overrides,
     )
+    violations = []
     if params.max_budget_usd is not None and plan.expected_cost_usd > params.max_budget_usd:
-        plan.feasible, plan.infeasibility = False, "budget"
+        violations.append("budget")
     if params.max_latency_s is not None and plan.expected_latency_s > params.max_latency_s:
-        plan.feasible, plan.infeasibility = False, "latency"
+        violations.append("latency")
+    if violations:
+        # record every violated constraint, not just the last one checked
+        plan.feasible, plan.infeasibility = False, "+".join(violations)
     return plan
 
 
@@ -229,17 +312,43 @@ def enumerate_plans(wf: Workflow, params: PlannerParams) -> list[Plan]:
     if not wf.frozen:
         raise ValueError("plan_workflow requires a frozen workflow")
     n = len(wf.ops)
-    cap = params.max_concurrency or n
+    if params.max_concurrency is None:
+        cap = n
+    elif params.max_concurrency < 1:
+        # `or` used to swallow 0 as "unset"; an explicit non-positive cap
+        # is a configuration error, not a request for unbounded slots
+        raise ValueError(
+            f"max_concurrency must be >= 1, got {params.max_concurrency}")
+    else:
+        cap = params.max_concurrency
     levels = sorted({1, *(c for c in (2, 4, 8, 16) if c < min(n, cap)), min(n, cap)})
     return [_build_plan(wf, params, c) for c in levels]
 
 
+def _violation_usd(plan: Plan, params: PlannerParams) -> float:
+    """Constraint violation in USD: budget overshoot plus latency
+    overshoot priced at lambda — the 'least-violating' metric."""
+    v = 0.0
+    if params.max_budget_usd is not None:
+        v += max(0.0, plan.expected_cost_usd - params.max_budget_usd)
+    if params.max_latency_s is not None:
+        v += max(0.0, plan.expected_latency_s - params.max_latency_s) * params.lambda_usd_per_s
+    return v
+
+
 def plan_workflow(wf: Workflow, params: PlannerParams) -> tuple[Plan, list[Plan]]:
     """Phase 1 entry point.  Returns (best feasible plan, all candidates).
-    If no plan is feasible the least-violating plan is returned with
+    If no plan is feasible the least-violating plan — smallest USD-priced
+    constraint overshoot, objective as tie-break — is returned with
     feasible=False (caller decides whether to proceed)."""
     plans = enumerate_plans(wf, params)
     feasible = [p for p in plans if p.feasible]
-    pool = feasible or plans
-    best = min(pool, key=lambda p: p.objective(params.alpha, params.lambda_usd_per_s))
+    if feasible:
+        best = min(feasible,
+                   key=lambda p: p.objective(params.alpha, params.lambda_usd_per_s))
+    else:
+        best = min(plans, key=lambda p: (
+            _violation_usd(p, params),
+            p.objective(params.alpha, params.lambda_usd_per_s),
+        ))
     return best, plans

@@ -92,6 +92,23 @@ class HistoricalModalPredictor:
         (mode, n_mode), total = counts.most_common(1)[0], sum(counts.values())
         return Prediction(_thaw(mode), "historical", confidence=n_mode / total)
 
+    def predict_topk(self, upstream_input: Any, k: int,
+                     partial_output: Any = None) -> list[Prediction]:
+        """Top-k modal outputs with empirical confidences ``n_i / total``,
+        sorted non-increasing — the candidate beam for
+        ``repro.core.beam.beam_evaluate`` (confidences are disjoint event
+        probabilities over the shared posterior, so they sum to <= 1)."""
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        counts = self._history.get(self.bucket(upstream_input))
+        if not counts:
+            return []
+        total = sum(counts.values())
+        return [
+            Prediction(_thaw(o), "historical", confidence=n / total)
+            for o, n in counts.most_common(k)
+        ]
+
 
 @dataclasses.dataclass
 class StreamingPredictor:
@@ -112,22 +129,47 @@ class StreamingPredictor:
         return Prediction(i_hat, "stream_k", confidence=conf)
 
 
+_FREEZE_TAGS = ("__dict__", "__list__", "__tuple__", "__set__",
+                "__frozenset__", "__bytearray__")
+
+
 def _freeze(o: Any) -> Hashable:
+    """Canonical hashable form of a logged output.
+
+    Containers are tagged so :func:`_thaw` can invert them; unordered
+    containers (dicts, sets) and mixed-type dict keys are sorted by
+    ``repr`` of the frozen element — deterministic across interpreter
+    runs and total over any element mix, where natural ordering would
+    raise ``TypeError`` on e.g. ``{1, "a"}`` and kill ``observe``
+    mid-calibration.
+    """
     if isinstance(o, dict):
-        return ("__dict__", tuple(sorted((k, _freeze(v)) for k, v in o.items())))
+        return ("__dict__", tuple(sorted(
+            ((_freeze(k), _freeze(v)) for k, v in o.items()), key=repr)))
     if isinstance(o, list):
         return ("__list__", tuple(_freeze(x) for x in o))
     if isinstance(o, tuple):
         return ("__tuple__", tuple(_freeze(x) for x in o))
+    if isinstance(o, (set, frozenset)):
+        tag = "__set__" if isinstance(o, set) else "__frozenset__"
+        return (tag, tuple(sorted((_freeze(x) for x in o), key=repr)))
+    if isinstance(o, bytearray):
+        return ("__bytearray__", bytes(o))
     return o
 
 
 def _thaw(o: Any) -> Any:
-    if isinstance(o, tuple) and len(o) == 2 and o[0] in ("__dict__", "__list__", "__tuple__"):
+    if isinstance(o, tuple) and len(o) == 2 and o[0] in _FREEZE_TAGS:
         tag, body = o
         if tag == "__dict__":
-            return {k: _thaw(v) for k, v in body}
+            return {_thaw(k): _thaw(v) for k, v in body}
         if tag == "__list__":
             return [_thaw(x) for x in body]
+        if tag == "__set__":
+            return {_thaw(x) for x in body}
+        if tag == "__frozenset__":
+            return frozenset(_thaw(x) for x in body)
+        if tag == "__bytearray__":
+            return bytearray(body)
         return tuple(_thaw(x) for x in body)
     return o

@@ -31,6 +31,7 @@ from .pricing import CostModel
 __all__ = [
     "fractional_waste",
     "expected_speculation_waste",
+    "expected_beam_waste",
     "RhoEstimator",
     "StreamingReestimator",
     "ChunkVerdict",
@@ -79,6 +80,36 @@ def expected_speculation_waste(
         raise ValueError("rho must be in [0, 1]")
     c_in, c_out = cost_model.split(input_tokens, output_tokens)
     return (1.0 - P) * (c_in + rho * c_out)
+
+
+def expected_beam_waste(
+    P_cum: float,
+    launched: int,
+    cost_model: CostModel,
+    input_tokens: int,
+    output_tokens: float,
+    rho: float = DEFAULT_RHO,
+    *,
+    streaming: bool = True,
+) -> float:
+    """(launched - P_cum) * (C_input + rho * C_output) — the §9.3 expected
+    waste generalized to a top-k beam (repro.core.beam): ``launched``
+    candidates each pay the speculation cost, at most one (probability
+    ``P_cum``, the beam-cumulative commit probability) is refunded by a
+    commit, and every loser is cancelled on first commit at the expected
+    fraction ``rho``.  At ``launched == 1`` this is bitwise
+    :func:`expected_speculation_waste`.
+    """
+    if launched < 0:
+        raise ValueError("launched must be non-negative")
+    if not (0.0 <= P_cum <= 1.0) or P_cum > launched:
+        raise ValueError("P_cum must be a probability in [0, min(1, launched)]")
+    if not streaming:
+        rho = 1.0
+    if not (0.0 <= rho <= 1.0):
+        raise ValueError("rho must be in [0, 1]")
+    c_in, c_out = cost_model.split(input_tokens, output_tokens)
+    return (launched - P_cum) * (c_in + rho * c_out)
 
 
 @dataclasses.dataclass

@@ -40,10 +40,28 @@ def test_smoke_mode_parity_and_schema():
     assert osvc["parity"]["lower_bound_flags_match"] is True
     assert rec["pareto_dtype"] == "float64"
     assert rec["credible_bound"]["pareto_dtype"] == "float64"
+    # beam gate: the top-k engine's width=1 slice replayed bitwise-f64
+    # against fleet_replay, and the wide-beam sweep matched its pure-numpy
+    # reference twin (decisions bitwise, USD stats inside 1-ULP FMA
+    # tolerance), both before any timing was recorded
+    beam = rec["beam"]
+    assert beam["parity"]["w1_bitwise_f64_vs_fleet_replay"] is True
+    assert beam["parity"]["reference_decisions_bitwise"] is True
+    assert beam["parity"]["reference_max_rel_error"] <= 1e-12
+    assert beam["widths"][0] == 1 and len(beam["widths"]) >= 2
+    assert beam["pareto_dtype"] == "float64"
+    # the width axis is live: some grid cell launches more candidates
+    # (and bills more §9.3 waste) at the widest beam than at width 1
+    w_lo, w_hi = str(beam["widths"][0]), str(beam["widths"][-1])
+    assert any(
+        beam["pareto"][w_hi][a]["launched_candidates"]
+        > beam["pareto"][w_lo][a]["launched_candidates"]
+        for a in beam["pareto"][w_lo])
     # tiny sizes: the smoke path must never masquerade as the real record
     assert rec["episodes"] < 100
     assert es["episodes"] < 100
     assert max(b["B"] for b in osvc["batches"]) < 64
+    assert beam["episodes"] < 100
 
 
 def test_frontend_smoke_gate_parity_and_fault_matrix():
@@ -153,6 +171,27 @@ def test_checked_in_bench_files_carry_required_schema():
     # the published pareto rows carry the dtype of the parity tier
     assert fleet["pareto_dtype"] == "float64"
     assert fleet["credible_bound"]["pareto_dtype"] == "float64"
+    # acceptance shape: the beam-width sweep — width 1 first (the
+    # parity-gated slice), the w=1 bitwise gate and the reference twin
+    # both asserted pre-timing, and the published per-width Pareto
+    # attributing every launched/cancelled candidate in USD
+    beam = fleet["beam"]
+    assert beam["widths"] == [1, 2, 4]
+    assert beam["parity"]["w1_bitwise_f64_vs_fleet_replay"] is True
+    assert beam["parity"]["reference_decisions_bitwise"] is True
+    assert beam["parity"]["reference_max_rel_error"] <= 1e-12
+    assert beam["pareto_dtype"] == "float64"
+    assert beam["one_call_s"] > 0.0 and beam["per_width_calls_s"] > 0.0
+    # the checked-in record must show the width axis doing real work:
+    # strictly more candidates launched (and more USD waste billed) at
+    # the widest beam on at least one grid cell
+    w_lo, w_hi = str(beam["widths"][0]), str(beam["widths"][-1])
+    assert any(
+        beam["pareto"][w_hi][a]["launched_candidates"]
+        > beam["pareto"][w_lo][a]["launched_candidates"]
+        and beam["pareto"][w_hi][a]["waste_usd"]
+        > beam["pareto"][w_lo][a]["waste_usd"]
+        for a in beam["pareto"][w_lo])
 
 
 def test_checked_in_frontend_record_shape():

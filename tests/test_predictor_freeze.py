@@ -1,0 +1,120 @@
+"""Regression + property tests for predictor._freeze / _thaw: the
+canonical hashable form must be total over every container the §3.2
+predictors log (sets, frozensets, dicts with mixed-type keys, bytearrays,
+arbitrary nesting), invert exactly through _thaw, and be deterministic
+regardless of container iteration order.  The original implementation
+raised TypeError on any set/frozenset output (unhashable Counter key),
+killing observe() mid-calibration."""
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.predictor import HistoricalModalPredictor, _freeze, _thaw
+
+ATOMS = [None, True, False, 0, 1, -3, 2.5, float("inf"), "", "a", "topic",
+         b"bytes", (1, "t"), frozenset({1, 2})]
+
+
+def build_value(rng: random.Random, depth: int = 0):
+    """A random nested container over mixed-type atoms — the shapes a
+    logged upstream output can take."""
+    if depth >= 3 or rng.random() < 0.4:
+        return rng.choice(ATOMS)
+    kind = rng.randrange(5)
+    n = rng.randrange(4)
+    if kind == 0:
+        return [build_value(rng, depth + 1) for _ in range(n)]
+    if kind == 1:
+        return tuple(build_value(rng, depth + 1) for _ in range(n))
+    if kind == 2:
+        # dict keys: any frozen-able hashable atom mix
+        return {rng.choice(ATOMS): build_value(rng, depth + 1)
+                for _ in range(n)}
+    if kind == 3:
+        return {rng.choice(ATOMS) for _ in range(n)}
+    return bytearray(rng.randrange(8))
+
+
+class TestFreezeThaw:
+    @settings(max_examples=60)
+    @given(st.integers(min_value=0, max_value=10_000))
+    def test_roundtrip_and_hashability(self, seed):
+        """hash(_freeze(x)) never raises and _thaw inverts exactly, over
+        randomized nested containers with mixed-type elements."""
+        rng = random.Random(seed)
+        for _ in range(5):
+            value = build_value(rng)
+            frozen = _freeze(value)
+            hash(frozen)                      # Counter-key contract
+            assert _thaw(frozen) == value
+            assert type(_thaw(frozen)) is type(value)
+
+    @settings(max_examples=40)
+    @given(st.lists(st.integers(min_value=-50, max_value=50), max_size=8),
+           st.text(max_size=6))
+    def test_order_independence(self, ints, text):
+        """Sets / dicts freeze identically whatever order their elements
+        were inserted in (the determinism the modal Counter requires)."""
+        mixed = list(dict.fromkeys(ints + list(text)))  # dedup, keep mix
+        fwd, rev = set(mixed), set(reversed(mixed))
+        assert _freeze(fwd) == _freeze(rev)
+        d_fwd = {k: i for i, k in enumerate(mixed)}
+        d_rev = dict(reversed(list(d_fwd.items())))
+        assert _freeze(d_fwd) == _freeze(d_rev)
+
+    def test_mixed_type_set_does_not_raise(self):
+        """{1, "a"} has no natural sort order — sorting by repr of the
+        frozen element must keep _freeze total."""
+        frozen = _freeze({1, "a", (2, "b"), None})
+        hash(frozen)
+        assert _thaw(frozen) == {1, "a", (2, "b"), None}
+
+    def test_container_tags_distinguish_types(self):
+        """list vs tuple vs set vs frozenset of the same elements freeze
+        to distinct keys (distinct outputs must not alias in the modal
+        Counter)."""
+        variants = [[1, 2], (1, 2), {1, 2}, frozenset({1, 2}),
+                    bytearray(b"\x01\x02")]
+        frozen = [_freeze(v) for v in variants]
+        assert len(set(frozen)) == len(frozen)
+        for v, f in zip(variants, frozen):
+            got = _thaw(f)
+            assert got == v and type(got) is type(v)
+
+    def test_nested_dict_with_container_keys(self):
+        value = {("k", frozenset({1})): {"inner": [{1, "x"}, bytearray(b"z")]}}
+        assert _thaw(_freeze(value)) == value
+
+
+class TestPredictorWithSetOutputs:
+    def test_observe_set_output_regression(self):
+        """The original _freeze left sets unhashable — observe() raised
+        TypeError on the first set-valued upstream output."""
+        p = HistoricalModalPredictor()
+        p.observe("q", {"entity-1", "entity-2"})
+        p.observe("q", {"entity-2", "entity-1"})    # same set, other order
+        p.observe("q", {"entity-3"})
+        pred = p.predict("q")
+        assert pred.i_hat == {"entity-1", "entity-2"}
+        assert pred.confidence == pytest.approx(2 / 3)
+
+    def test_predict_topk_confidences(self):
+        p = HistoricalModalPredictor()
+        for out, n in ((frozenset({"a"}), 5), ({"b": 1}, 3), (["c"], 2)):
+            for _ in range(n):
+                p.observe("q", out)
+        top = p.predict_topk("q", 3)
+        assert [t.i_hat for t in top] == [frozenset({"a"}), {"b": 1}, ["c"]]
+        confs = [t.confidence for t in top]
+        assert confs == sorted(confs, reverse=True)
+        assert confs == pytest.approx([0.5, 0.3, 0.2])
+        assert sum(confs) <= 1.0 + 1e-12
+        # the top-1 of the beam is predict()
+        assert top[0].i_hat == p.predict("q").i_hat
+        assert p.predict_topk("q", 2) == top[:2]
+        # no history at all -> empty beam
+        assert HistoricalModalPredictor().predict_topk("q", 3) == []
+        with pytest.raises(ValueError):
+            p.predict_topk("q", 0)

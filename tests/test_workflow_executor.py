@@ -272,6 +272,151 @@ class TestDiamondDag:
         assert rep.makespan_s < 10.0
 
 
+class TestPlannerConsistency:
+    """Regression suite for the planner determinism / consistency sweep:
+    multi-spec-parent schedule order, sequential decision downgrades,
+    multi-constraint infeasibility labels, the max_concurrency=0 trap,
+    and least-violating infeasible plan selection."""
+
+    @staticmethod
+    def _two_parent_join(edge_order):
+        """a and b both feed join over speculation edges; ``edge_order``
+        permutes insertion so dict/set iteration order differs."""
+        wf = Workflow("join2")
+        wf.add_op(Operation("a", run=lambda x: "A", latency_est_s=4.0,
+                            metadata={"input": "go"}))
+        wf.add_op(Operation("b", run=lambda x: "B", latency_est_s=6.0,
+                            metadata={"input": "go"}))
+        wf.add_op(Operation("join", run=lambda a, b: f"{a}+{b}",
+                            latency_est_s=3.0, input_tokens_est=500,
+                            output_tokens_est=1000))
+        for u in edge_order:
+            wf.add_edge(Edge(u, "join",
+                             dep_type=DependencyType.LIST_OUTPUT_VARIABLE_LENGTH))
+        return wf.freeze()
+
+    def test_two_spec_parent_schedule_is_order_independent(self):
+        """The expected-finish mix over several speculated parents must
+        not depend on spec-edge iteration order (it used to read
+        next(iter(spec_parents)) — whichever parent hash order served
+        first)."""
+        lats, wastes = [], []
+        for order in (("a", "b"), ("b", "a")):
+            wf = self._two_parent_join(order)
+            params = PlannerParams(alpha=0.9, lambda_usd_per_s=0.05)
+            best, _ = plan_workflow(wf, params)
+            assert sorted(best.speculated_edges()) == [
+                ("a", "join"), ("b", "join")]
+            lats.append(best.expected_latency_s)
+            wastes.append(best.expected_waste_usd)
+        assert lats[0] == lats[1]        # bitwise: same sorted product
+        assert wastes[0] == wastes[1]
+
+    def test_two_spec_parent_expected_finish_closed_form(self):
+        """Joint commit needs both predictions (P = product); both the
+        verify and re-execute paths wait for the later parent."""
+        wf = self._two_parent_join(("a", "b"))
+        params = PlannerParams(alpha=0.9, lambda_usd_per_s=0.05)
+        best, _ = plan_workflow(wf, params)
+        P = 0.7 * 0.7                    # both LIST_OUTPUT priors
+        spec_finish = 6.0                # the later parent (b)
+        want = P * max(0.0 + 3.0, spec_finish) + (1 - P) * (spec_finish + 3.0)
+        assert best.schedule["join"].finish_s == pytest.approx(want)
+        assert best.expected_latency_s == pytest.approx(want)
+
+    def test_sequential_plan_downgrades_decision_records(self):
+        """concurrency=1 cannot overlap: the SPECULATE records must be
+        downgraded (not silently left contradicting the schedule), with
+        the override reason recorded."""
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.5, lambda_usd_per_s=0.01,
+                               max_concurrency=1)
+        best, plans = plan_workflow(wf, params)
+        assert [p.concurrency for p in plans] == [1]
+        assert best.speculated_edges() == []
+        assert best.decisions[("analyzer", "researcher")].decision == Decision.WAIT
+        assert best.schedule_overrides == {
+            ("analyzer", "researcher"): "sequential"}
+        assert best.expected_waste_usd == 0.0      # nothing launched
+        assert best.expected_latency_s == pytest.approx(10.0)
+        # a parallel plan on the same workflow keeps its SPECULATE record
+        free, _ = plan_workflow(wf, PlannerParams(alpha=0.5,
+                                                  lambda_usd_per_s=0.01))
+        assert free.schedule_overrides == {}
+        assert free.speculated_edges() == [("analyzer", "researcher")]
+
+    def test_infeasibility_reports_every_violated_constraint(self):
+        """Both constraints violated -> "budget+latency", not whichever
+        check happened to run last."""
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.0, lambda_usd_per_s=0.01,
+                               max_budget_usd=0.001, max_latency_s=8.0)
+        _, plans = plan_workflow(wf, params)
+        seq = next(p for p in plans if p.concurrency == 1)
+        par = next(p for p in plans if p.concurrency > 1)
+        assert not seq.feasible and seq.infeasibility == "budget+latency"
+        assert not par.feasible and par.infeasibility == "budget"
+
+    def test_max_concurrency_zero_raises(self):
+        """0 used to be swallowed by ``or`` into "unbounded"."""
+        wf = two_op_workflow()
+        with pytest.raises(ValueError):
+            plan_workflow(wf, PlannerParams(max_concurrency=0))
+        with pytest.raises(ValueError):
+            plan_workflow(wf, PlannerParams(max_concurrency=-2))
+
+    def test_least_violating_plan_wins_when_all_infeasible(self):
+        """With every plan infeasible, return the smallest USD-priced
+        constraint overshoot — not the minimum objective (which ignores
+        the constraints entirely and picked the *worst* violator here)."""
+        wf = two_op_workflow()
+        params = PlannerParams(alpha=0.0, lambda_usd_per_s=0.01,
+                               max_budget_usd=0.001, max_latency_s=8.0)
+        best, plans = plan_workflow(wf, params)
+        assert all(not p.feasible for p in plans)
+        # min-objective (alpha=0 -> pure cost) is the sequential plan...
+        by_obj = min(plans, key=lambda p: p.objective(0.0, 0.01))
+        assert by_obj.concurrency == 1
+        # ...but the parallel plan violates less in USD terms
+        assert best.concurrency > 1
+        assert best.infeasibility == "budget"
+
+    def test_beam_planner_path(self):
+        """PlannerParams.beam_confidences routes the edge through the
+        beam gate: the decision carries candidate bookkeeping and the
+        waste uses the beam form over launched candidates."""
+        from repro.core import beam_evaluate, expected_beam_waste
+        from repro.core.decision import DecisionInputs
+        from repro.core.pricing import TwoRateTokenCost
+
+        wf = two_op_workflow()
+        key = ("analyzer", "researcher")
+        confs = (0.6, 0.3)
+        params = PlannerParams(alpha=0.9, lambda_usd_per_s=0.05,
+                               beam_width=2,
+                               beam_confidences={key: confs})
+        best, _ = plan_workflow(wf, params)
+        d = best.decisions[key]
+        assert d.decision == Decision.SPECULATE
+        assert d.width == 2 and d.w_eff == 2 and d.launched == 2
+        # the gate is the scalar beam rule on the edge's posterior mean
+        post = params.posteriors[key]
+        ref = beam_evaluate(
+            DecisionInputs(P=post.mean, alpha=0.9, lambda_usd_per_s=0.05,
+                           latency_seconds=5.0, input_tokens=500,
+                           output_tokens=1000, input_price=3e-6,
+                           output_price=15e-6),
+            confs, 2)
+        assert d.EV_usd == ref.EV_usd and d.P_used == ref.P_used
+        p_cum = sum(confs) * post.mean
+        want = expected_beam_waste(p_cum, 2, TwoRateTokenCost(3e-6, 15e-6),
+                                   500, 1000)
+        assert best.expected_waste_usd == pytest.approx(want, rel=1e-12)
+        # schedule uses the beam-cumulative commit probability
+        want_finish = p_cum * 5.0 + (1 - p_cum) * 10.0
+        assert best.expected_latency_s == pytest.approx(want_finish)
+
+
 class TestFractionalWaste:
     def test_bills_actuals_past_the_plan(self):
         """Regression for the dead clamp in streaming.fractional_waste: the
