@@ -45,8 +45,10 @@ _MT_KEYS = {
 }
 _ES_KEYS = {
     "benchmark", "episodes", "segments", "grid_points", "unsharded_s",
-    "sharded_s", "speedup", "parity", "scaling",
+    "sharded_s", "speedup", "parity", "scaling", "pipelined",
 }
+_ES_PIPE_KEYS = {"pipelined_s", "speedup_vs_two_pass",
+                 "speedup_vs_unsharded", "parity"}
 _BEAM_KEYS = {
     "benchmark", "widths", "candidates", "confidences", "lambda_usd_per_s",
     "episodes", "grid_points", "one_call_s", "per_width_calls_s", "speedup",
@@ -74,6 +76,13 @@ _STORE_KEYS = {
     "decisions_per_s", "parity", "zero_recompile", "register", "decide",
     "memory", "cold_start",
 }
+
+# BENCH_kernels.json schema (see kernels_bench.kernels_record)
+_KERNELS_KEYS = {"benchmark", "backend", "interpret", "betaincinv",
+                 "online_tick"}
+_K_BII_KEYS = {"n", "parity", "sweep", "reference_us_per_call"}
+_K_TICK_KEYS = {"rows", "batch", "settles", "parity", "sweep",
+                "reference_us_per_tick"}
 
 # BENCH_rollout.json schema (see rollout_fleet.rollout_record)
 _ROLLOUT_KEYS = {
@@ -107,6 +116,11 @@ def validate_fleet_record(rec: dict, what: str = "fleet record") -> None:
               "grid_reroute_fraction_bitwise",
               "grid_reroute_max_rel_error"},
              f"{what}.episode_sharded.parity")
+    _require(es["pipelined"], _ES_PIPE_KEYS,
+             f"{what}.episode_sharded.pipelined")
+    if not es["pipelined"]["parity"].get("bitwise_f64_vs_fleet_replay"):
+        raise AssertionError(
+            f"{what}.episode_sharded.pipelined: parity gate recorded false")
     for row in es["scaling"]:
         _require(row, {"devices", "shards", "wall_s"},
                  f"{what}.episode_sharded.scaling")
@@ -195,6 +209,42 @@ def validate_store_record(rec: dict, what: str = "store record") -> None:
                  f"{what}.cold_start.curve")
 
 
+def validate_kernels_record(rec: dict, what: str = "kernels record") -> None:
+    """Assert the BENCH_kernels.json shape (full and --smoke records).
+
+    Both kernels must have recorded their parity gates as *passed*
+    (parity is asserted in-process before any timing row is taken, so a
+    record that exists at all implies the gates ran — this re-checks the
+    recorded outcome so a hand-edited file can't smuggle a timing row
+    past a failed gate)."""
+    _require(rec, _KERNELS_KEYS, what)
+    bii = rec["betaincinv"]
+    _require(bii, _K_BII_KEYS, f"{what}.betaincinv")
+    par = bii["parity"]
+    _require(par, {"max_rel_vs_core", "max_rel_vs_scipy", "asserted_rtol"},
+             f"{what}.betaincinv.parity")
+    if not (par["max_rel_vs_core"] <= par["asserted_rtol"]
+            and par["max_rel_vs_scipy"] <= par["asserted_rtol"]):
+        raise AssertionError(
+            f"{what}.betaincinv: recorded rel error exceeds asserted rtol")
+    if not bii["sweep"]:
+        raise AssertionError(f"{what}.betaincinv: empty block_n sweep")
+    for row in bii["sweep"]:
+        _require(row, {"block_n", "us_per_call"}, f"{what}.betaincinv.sweep")
+    tick = rec["online_tick"]
+    _require(tick, _K_TICK_KEYS, f"{what}.online_tick")
+    tpar = tick["parity"]
+    _require(tpar, {"mean_path_bitwise_f64", "lower_bound_max_rel"},
+             f"{what}.online_tick.parity")
+    if not tpar["mean_path_bitwise_f64"]:
+        raise AssertionError(
+            f"{what}.online_tick: mean-path parity gate recorded false")
+    if not tick["sweep"]:
+        raise AssertionError(f"{what}.online_tick: empty block_n sweep")
+    for row in tick["sweep"]:
+        _require(row, {"block_n", "us_per_tick"}, f"{what}.online_tick.sweep")
+
+
 def validate_rollout_record(rec: dict, what: str = "rollout record") -> None:
     """Assert the BENCH_rollout.json shape (full and --smoke records)."""
     _require(rec, _ROLLOUT_KEYS, what)
@@ -231,6 +281,8 @@ def validate_bench_files() -> list[str]:
         obj = json.loads(path.read_text())
         if path.name == "BENCH_fleet.json":
             validate_fleet_record(obj, path.name)
+        elif path.name == "BENCH_kernels.json":
+            validate_kernels_record(obj, path.name)
         elif path.name == "BENCH_frontend.json":
             validate_frontend_record(obj, path.name)
         elif path.name == "BENCH_store.json":
@@ -255,11 +307,17 @@ def smoke() -> dict:
     store gate (dense/scalar bitwise parity, zero-recompile churn,
     pooled cold start) AND the staged-rollout lifecycle gate (scenario
     determinism, scalar lifecycle parity, zero-recompile phase churn,
-    the acceptance flip) — all without touching any BENCH file."""
-    from . import frontend_load, rollout_fleet, store_scale, workflow_sim
+    the acceptance flip) AND the Pallas hot-path kernel gate (interpret
+    mode: betaincinv <=1e-10 vs the XLA inversion and scipy, fused tick
+    bitwise vs the jitted reference tick) — all without touching any
+    BENCH file."""
+    from . import (frontend_load, kernels_bench, rollout_fleet, store_scale,
+                   workflow_sim)
 
     rec = workflow_sim.smoke()
     validate_fleet_record(rec, "smoke record")
+    k_rec = kernels_bench.smoke()
+    validate_kernels_record(k_rec, "kernels smoke record")
     fe_rec = frontend_load.smoke()
     validate_frontend_record(fe_rec, "frontend smoke record")
     st_rec = store_scale.smoke()
@@ -287,8 +345,8 @@ def _persist(module_name: str, rows: list[tuple[str, float, str]]) -> None:
 
 
 def main(only: list[str] | None = None) -> None:
-    from . import (appendix_d, frontend_load, paper_tables, perf,
-                   rollout_fleet, roofline, store_scale, workflow_sim)
+    from . import (appendix_d, frontend_load, kernels_bench, paper_tables,
+                   perf, rollout_fleet, roofline, store_scale, workflow_sim)
 
     modules = {
         "paper_tables": paper_tables,
@@ -299,6 +357,7 @@ def main(only: list[str] | None = None) -> None:
         "frontend_load": frontend_load,
         "store_scale": store_scale,
         "rollout_fleet": rollout_fleet,
+        "kernels_bench": kernels_bench,
     }
     if only:
         unknown = sorted(set(only) - set(modules))

@@ -474,7 +474,15 @@ def episode_sharded_record(episodes: int = 1_000_000,
                                   getattr(sharded, f.name)):
                 raise AssertionError(
                     f"episode-sharded parity broke: field {f.name}")
-        del base, sharded
+        piped = episode_sharded_replay(
+            lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+            n_segments=segments, pipelined=True)
+        for f in dataclasses.fields(base):
+            if not np.array_equal(getattr(base, f.name),
+                                  getattr(piped, f.name)):
+                raise AssertionError(
+                    f"pipelined episode-sharded parity broke: field {f.name}")
+        del base, sharded, piped
 
     # --- grid-reroute parity: the log-axis-sharded counterfactual grid
     # (what offline_replay uses past its shard_threshold) vs the
@@ -524,6 +532,21 @@ def episode_sharded_record(episodes: int = 1_000_000,
                            n_segments=segments)
     sharded_s = time.perf_counter() - t0
 
+    # Pipelined variant: same math, but segment c's stats dispatch
+    # overlaps segment c+1's posterior handoff via JAX's async dispatch
+    # (and skips the last segment's handoff outright).  The trade: stats
+    # run one executable per segment instead of vmapped across segments,
+    # so on this 2-core container (no devices to overlap onto) the row
+    # records a *slower* wall than two-pass — kept as an honest baseline
+    # for multi-device hosts, where per-segment stats land on their own
+    # devices (parity was asserted above, pre-timing).
+    episode_sharded_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+                           n_segments=segments, pipelined=True)
+    t0 = time.perf_counter()
+    episode_sharded_replay(lowered, success, alphas_arr, LAMBDA_USD_PER_S,
+                           n_segments=segments, pipelined=True)
+    pipelined_s = time.perf_counter() - t0
+
     return {
         "benchmark": "autoreply_episode_sharded_replay",
         "episodes": episodes,
@@ -536,6 +559,12 @@ def episode_sharded_record(episodes: int = 1_000_000,
             "bitwise_f64_vs_fleet_replay": True,
             "grid_reroute_fraction_bitwise": True,
             "grid_reroute_max_rel_error": grid_rel,
+        },
+        "pipelined": {
+            "pipelined_s": pipelined_s,
+            "speedup_vs_two_pass": sharded_s / pipelined_s,
+            "speedup_vs_unsharded": unsharded_s / pipelined_s,
+            "parity": {"bitwise_f64_vs_fleet_replay": True},
         },
         "scaling": episode_sharded_scaling(
             scaling_devices, episodes, segments) if scaling_devices else [],

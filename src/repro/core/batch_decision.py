@@ -114,15 +114,27 @@ def _lower_bound(alpha, beta, gamma):
     return betaincinv(alpha, beta, gamma)
 
 
-def batch_lower_bound(alpha, beta, gamma=0.1):
+def _lower_bound_pallas(alpha, beta, gamma):
+    # Not jitted here: betaincinv(use_pallas=True) dispatches to the
+    # already-jitted kernel op, which resolves interpret/native outside
+    # the trace (kernels.ops._interpret()).
+    return betaincinv(alpha, beta, gamma, use_pallas=True)
+
+
+def batch_lower_bound(alpha, beta, gamma=0.1, use_pallas: bool = False):
     """§7.5 one-sided (1-gamma) lower credible bound, vectorized.
 
     ``Beta^{-1}(gamma; alpha, beta)`` across whole fleets of posterior
     parameters in one XLA call — the jax-native equivalent of
     ``BetaPosterior.lower_bound`` / ``scipy.stats.beta.ppf`` (agreement
     pinned to <= 1e-10 relative by tests/test_betaincinv.py).
+
+    ``use_pallas=True`` routes the inversion through the tiled Pallas
+    kernel (``repro.kernels.betaincinv_pallas``) — same <= 1e-10 tier vs
+    scipy, not bitwise vs the default path.
     """
-    return np.asarray(_lower_bound(_f(alpha), _f(beta), _f(gamma)))
+    fn = _lower_bound_pallas if use_pallas else _lower_bound
+    return np.asarray(fn(_f(alpha), _f(beta), _f(gamma)))
 
 
 @jax.jit

@@ -107,16 +107,33 @@ def _invert(a, b, q):
     return jnp.where(valid, x, jnp.nan)
 
 
-def betaincinv(a, b, q):
+def betaincinv(a, b, q, use_pallas: bool = False):
     """Inverse of ``jax.scipy.special.betainc`` in its third argument.
 
     Solves ``betainc(a, b, x) == q`` for ``x in [0, 1]``.  Inputs
     broadcast; computation runs at the widest enabled float (float64 under
     ``jax_enable_x64``, float32 otherwise), matching the ``_f`` convention
     of the batch decision engines.  Safe to call inside jit/vmap/scan.
+
+    ``use_pallas=True`` dispatches to the tiled Pallas kernel
+    (``repro.kernels.betaincinv_pallas``): same bracketed Halley
+    iteration, but with a kernel-resident betainc evaluator — results
+    agree to <= 1e-10 relative (the established tier), not bitwise.
+    Interpret-vs-native lowering follows ``kernels.ops._interpret()``.
     """
     dt = jnp.result_type(float)
     a, b, q = jnp.broadcast_arrays(
         jnp.asarray(a, dt), jnp.asarray(b, dt), jnp.asarray(q, dt)
     )
+    if use_pallas:
+        # Lazy import: core.betainc loads very early in repro.core and
+        # must not pull the kernels package in at module-import time.
+        from ..kernels.betaincinv_pallas import betaincinv_kernel_call
+        from ..kernels.ops import _interpret
+
+        shape = q.shape
+        out = betaincinv_kernel_call(
+            a.ravel(), b.ravel(), q.ravel(), interpret=_interpret()
+        )
+        return out.reshape(shape)
     return _invert(a, b, q)

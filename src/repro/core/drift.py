@@ -199,6 +199,7 @@ class DriftMonitor:
         L_value,
         gamma: float = 0.1,
         tenants: Optional[list] = None,
+        use_pallas: bool = False,
     ) -> list[Optional[TriggerEvent]]:
         """Trigger 2 across a fleet of edges in one vectorized call.
 
@@ -220,8 +221,10 @@ class DriftMonitor:
         within that margin of the floor can tick the breach run
         differently: do not interleave the scalar and batch checkers on
         the same monitor and expect identical counters at razor-edge
-        floors, and enable x64 when the floors are tight.  Returns one
-        event-or-None per edge.
+        floors, and enable x64 when the floors are tight.
+        ``use_pallas=True`` routes the inversion through the tiled
+        Pallas kernel (same <= 1e-10 tier; the razor-edge caveat above
+        applies identically).  Returns one event-or-None per edge.
         """
         from .batch_decision import batch_lower_bound
 
@@ -240,7 +243,8 @@ class DriftMonitor:
         alpha = np.broadcast_to(np.asarray(alpha, float), (n,))
         C_spec = np.broadcast_to(np.asarray(C_spec, float), (n,))
         L_value = np.broadcast_to(np.asarray(L_value, float), (n,))
-        P_lower = batch_lower_bound(post_alpha, post_beta, gamma)
+        P_lower = batch_lower_bound(post_alpha, post_beta, gamma,
+                                    use_pallas=use_pallas)
         floors = (1.0 - alpha) * C_spec / (L_value + C_spec)
         return [
             self._credible_breach_step(edge, bool(p < f), float(f), tenant)
@@ -309,6 +313,7 @@ class DriftMonitor:
         C_spec,
         L_value,
         gamma: float = 0.1,
+        use_pallas: bool = False,
     ) -> list[Optional[TriggerEvent]]:
         """Trigger 2 for a sharded fleet's posterior snapshot in one call.
 
@@ -319,6 +324,7 @@ class DriftMonitor:
             [e for _, e in tenant_edges], post_alpha, post_beta,
             alpha, C_spec, L_value, gamma,
             tenants=[t for t, _ in tenant_edges],
+            use_pallas=use_pallas,
         )
 
     # ------------------------------------------------------------ trigger 3

@@ -1169,6 +1169,18 @@ def _boundary_scan(static, post0, discount, alphas, lambdas, gamma,
     return starts, post_final
 
 
+# Per-segment entry points for the pipelined replay: the SAME scan bodies
+# as the two-pass engine (`_scan_core` / `_scan_posterior_only`), jitted
+# unvmapped so a host loop can interleave one segment's stats with the
+# next segment's posterior handoff (see episode_sharded_replay).
+_seg_stats_one = functools.partial(
+    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
+)(_scan_core)
+_seg_posterior_one = functools.partial(
+    jax.jit, static_argnames=("throttle_every", "K", "use_lower_bound")
+)(_scan_posterior_only)
+
+
 @functools.lru_cache(maxsize=None)
 def _seg_executable(mesh, axis_name, throttle_every, K, use_lower_bound):
     """Compile (and cache) the segment-vmapped, optionally shard_map'd
@@ -1249,6 +1261,7 @@ def episode_sharded_replay(
     mesh=None,
     axis_name: str = "fleet",
     return_boundaries: bool = False,
+    pipelined: bool = False,
 ) -> "FleetReport | tuple[FleetReport, np.ndarray]":
     """Replay a single tenant's E-episode log as C independent scan
     segments — the fleet engine's episode-axis analogue of
@@ -1281,6 +1294,27 @@ def episode_sharded_replay(
     the handoff to 1 ULP; under ``discount<1`` the forgetting recurrence
     makes the handoff of the (a, b) carry the only exact route, so the
     engine documents and uses this two-pass scheme for every discount.
+
+    ``pipelined=True`` removes the two-pass *latency* without touching
+    the handoff's sequential semantics: a host loop walks the segments
+    in order, dispatching segment c's stats scan (``_seg_stats_one`` —
+    the same ``_scan_core`` body the vmapped stats pass runs) the moment
+    c's boundary carry exists, then immediately advancing the carry for
+    segment c+1 (``_seg_posterior_one``).  JAX's async dispatch lets
+    segment c's stats overlap segment c+1's handoff instead of
+    completing ALL boundaries first, and the final segment needs no
+    handoff at all — the boundary pass shrinks from C to C-1 segments
+    and stops gating the first stats launch.  The carries are the same
+    ``_scan_posterior_only`` recurrence, so boundaries and stats stay
+    bitwise identical to the two-pass engine (asserted across the full
+    C/discount/lower-bound/cancel matrix in
+    tests/test_episode_sharding.py); ``mesh`` is ignored in this mode
+    (the overlap already owns the device queue).  The trade: stats run
+    one executable per segment rather than vmapped across segments, so
+    on a single device with spare vector lanes (this container) the
+    two-pass engine is faster — the mode pays off when segments can
+    land on separate devices and the handoff is the critical path
+    (EXPERIMENTS.md §Episode sharding).
 
     Parity contract (tests/test_episode_sharding.py): bitwise-f64 equal
     to :func:`fleet_replay` on the same log — decisions, flags, times,
@@ -1323,6 +1357,38 @@ def episode_sharded_replay(
     throttle_every = int(throttle_every)
     K = int(chunks.K)
     use_lb = bool(lowered.use_lower_bound)
+
+    if pipelined:
+        (discount_j, alphas_j, lambdas_j, gamma_j,
+         succ_j, pok_j, cP_j, em_j) = args
+        carry = post0
+        starts_list: list = []
+        stats_list: list = []
+        for c in range(C):
+            xs = (succ_j[c], pok_j[c], cP_j[c], em_j[c])
+            starts_list.append(carry)
+            # dispatch the stats scan first (async — it runs while the
+            # host enqueues the next handoff), then advance the carry,
+            # which is all segment c+1 is actually waiting on
+            _, ys_c = _seg_stats_one(
+                static, carry, discount_j, alphas_j, lambdas_j, gamma_j,
+                *xs, throttle_every=throttle_every, K=K,
+                use_lower_bound=use_lb)
+            stats_list.append(ys_c)
+            if c + 1 < C:
+                carry = _seg_posterior_one(
+                    static, carry, discount_j, alphas_j, lambdas_j,
+                    gamma_j, *xs, throttle_every=throttle_every, K=K,
+                    use_lower_bound=use_lb)
+        out = {}
+        for k in stats_list[0]:
+            out[k] = np.concatenate(
+                [np.asarray(ys_c[k]) for ys_c in stats_list], axis=0)[:E]
+        report = FleetReport(alphas=alphas, lambdas=lambdas,
+                             ep_mask=ep_mask_full, **out)
+        if return_boundaries:
+            return report, np.asarray(jnp.stack(starts_list))
+        return report
 
     starts, _ = _boundary_scan(static, post0, *args,
                                throttle_every=throttle_every, K=K,

@@ -288,6 +288,70 @@ _tick_donated = functools.partial(
     jax.jit, static_argnames=_TICK_STATICS, donate_argnums=(0,))(_tick_impl)
 
 
+def _fused_tick_impl(state, zero, row, logrow, reqs, out_row, out_x,
+                     consecutive_n, use_lower_bound, check_drift, block_n,
+                     interpret):
+    """The tick's steps 1-3 as ONE Pallas launch over the SoA row axis
+    (``repro.kernels.online_tick``: settle + D4 gate + drift fused),
+    plus the same step-4 telemetry append as ``_tick_impl``.
+
+    Contract: on the mean path (``use_lower_bound=False``) every output
+    — settled posteriors, decisions, drift runs, telemetry rows — is
+    bitwise-f64 equal to ``_tick_impl`` (the kernel preserves the traced
+    runtime-zero FMA pin and the arrival-order settle recurrence); the
+    lower-bound / drift quantile paths sit at the <= 1e-10 betaincinv
+    tier because the kernel carries its own betainc evaluator.  Rollout
+    and beam ticks are not fused — ``tick_packed`` falls back to
+    ``_tick_impl`` for those.
+    """
+    # trace-time import: keeps repro.core free of any module-level
+    # dependency on the kernels package (which imports back into core)
+    from ..kernels.online_tick import online_tick_kernel_call
+
+    post, rowcfg, flags, roll, tel, counters = state
+    (post, flags, P_used, P_mean, EV, thr, C_spec, L_value,
+     flagv, enreqv, trig) = online_tick_kernel_call(
+        post, rowcfg, flags, zero, row, reqs, out_row, out_x,
+        consecutive_n, use_lower_bound=use_lower_bound,
+        check_drift=check_drift, block_n=block_n, interpret=interpret)
+    flag = flagv > 0
+    enabled_req = enreqv > 0
+    served = flag & enabled_req
+    triggered = trig > 0
+
+    # ---- step 4 verbatim from _tick_impl (non-beam: launched = served)
+    dt = post.dtype
+    served_f = served.astype(dt)
+    rows_out = jnp.stack([
+        logrow.astype(dt), served_f, P_used, P_mean,
+        EV, thr, EV - thr, C_spec, L_value, served_f,
+    ], axis=1)
+    Bp = rows_out.shape[0]
+    R = tel.shape[0]
+    if Bp >= R:
+        tel = rows_out[Bp - R:]
+    else:
+        tel = jnp.concatenate([tel[Bp:], rows_out], 0)
+    counters = counters + jnp.stack(
+        [jnp.asarray(Bp, jnp.int32),
+         (row >= 0).sum(dtype=jnp.int32)])
+
+    new_state = ServiceState(post=post, rowcfg=rowcfg, flags=flags,
+                             roll=roll, tel=tel, counters=counters)
+    bools = jnp.stack([flag, enabled_req], 1)
+    return (new_state, rows_out, bools, triggered,
+            jnp.zeros(0, jnp.int32), jnp.zeros(0, dt))
+
+
+_FUSED_TICK_STATICS = ("use_lower_bound", "check_drift", "block_n",
+                       "interpret")
+_fused_tick = functools.partial(
+    jax.jit, static_argnames=_FUSED_TICK_STATICS)(_fused_tick_impl)
+_fused_tick_donated = functools.partial(
+    jax.jit, static_argnames=_FUSED_TICK_STATICS,
+    donate_argnums=(0,))(_fused_tick_impl)
+
+
 @jax.jit
 def _append_tel(tel, rows):
     """Append pre-encoded rows to the slide-buffer ring (same append +
@@ -506,10 +570,18 @@ class OnlineDecisionService:
         donate: bool = False,
         resident_rows: Optional[int] = None,
         store: Optional[PosteriorStore] = None,
+        use_fused_tick: bool = False,
+        fused_block_n: int = 1024,
     ) -> None:
         if telemetry_capacity < 1:
             raise ValueError("telemetry_capacity must be >= 1")
         self.use_lower_bound = use_lower_bound
+        # Pallas fused-tick dispatch (settle + gate + drift in one kernel
+        # launch; repro.kernels.online_tick).  Off by default: rollout /
+        # beam ticks always take the XLA path, and the mean path is the
+        # only fully bitwise tier (see _fused_tick_impl).
+        self.use_fused_tick = bool(use_fused_tick)
+        self.fused_block_n = int(fused_block_n)
         self.credible_consecutive_n = int(credible_consecutive_n)
         self.telemetry_capacity = int(telemetry_capacity)
         self.mesh = mesh
@@ -536,6 +608,10 @@ class OnlineDecisionService:
         # the deadline-driven batcher hits this path constantly, and even
         # an empty jit'd tick costs ~0.1 ms of dispatch
         self.idle_ticks_skipped = 0
+        # all-padding settle buckets downgrade to the S=0 executable at
+        # the trace key (the settle scan is a provable no-op on them);
+        # counts how often the cheaper executable was substituted
+        self.empty_settles_skipped = 0
 
     # ------------------------------------------------------------- registry
     def register_edge(
@@ -881,6 +957,14 @@ class OnlineDecisionService:
                 out_row, out_x = pad_r, pad_x
         elif out_row is None:
             out_row, out_x = self._empty_out
+        if out_row.shape[0] and not (out_row >= 0).any():
+            # all-padding settle bucket: the S>0 executable's settle scan
+            # would be a provable no-op (every lane masked), but S is part
+            # of the trace key, so substituting the S=0 bucket here skips
+            # both the scan trace and its per-tick dispatch cost — bitwise
+            # the same state (mirrors the idle_ticks_skipped fast path)
+            out_row, out_x = self._empty_out
+            self.empty_settles_skipped += 1
         if self.store.identity:
             srow, sout = row, out_row
         else:
@@ -906,12 +990,27 @@ class OnlineDecisionService:
                 raise ValueError("bconf/bwidth must match the packed batch")
         else:
             bconf, bwidth = self._null_beam
-        fn = _tick_donated if self.donate else _tick
-        new_state, rows_out, bools, drift, transitions, row_L = fn(
-            state, self._zero, srow, row, reqs, bconf, bwidth, sout, out_x,
-            self._cn, rcfg, use_lower_bound=ulb, check_drift=check_drift,
-            use_rollout=bool(use_rollout), use_beam=use_beam,
-        )
+        # fused Pallas tick: only the settle+gate+drift core is fused, so
+        # rollout / beam ticks always fall back to the XLA executable
+        use_fused = (self.use_fused_tick and not use_rollout
+                     and not use_beam)
+        if use_fused:
+            from ..kernels.ops import _interpret
+
+            fn = _fused_tick_donated if self.donate else _fused_tick
+            new_state, rows_out, bools, drift, transitions, row_L = fn(
+                state, self._zero, srow, row, reqs, sout, out_x,
+                self._cn, use_lower_bound=ulb, check_drift=check_drift,
+                block_n=self.fused_block_n, interpret=_interpret(),
+            )
+        else:
+            fn = _tick_donated if self.donate else _tick
+            new_state, rows_out, bools, drift, transitions, row_L = fn(
+                state, self._zero, srow, row, reqs, bconf, bwidth, sout,
+                out_x, self._cn, rcfg, use_lower_bound=ulb,
+                check_drift=check_drift, use_rollout=bool(use_rollout),
+                use_beam=use_beam,
+            )
         self.store.adopt(new_state.post, new_state.rowcfg, new_state.flags,
                          new_state.roll)
         self._tel = new_state.tel

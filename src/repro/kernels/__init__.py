@@ -1,9 +1,11 @@
 """repro.kernels — Pallas TPU kernels (validated under interpret=True on
 CPU against the pure-jnp oracles in ref.py)."""
 from .ops import (
+    betaincinv_op,
     decode_attention_op,
     flash_attention,
     on_tpu,
+    online_tick_op,
     replay_grid_op,
     rglru_scan_op,
     ssd_scan_op,
@@ -11,5 +13,6 @@ from .ops import (
 
 __all__ = [
     "flash_attention", "decode_attention_op", "rglru_scan_op",
-    "ssd_scan_op", "replay_grid_op", "on_tpu",
+    "ssd_scan_op", "replay_grid_op", "betaincinv_op", "online_tick_op",
+    "on_tpu",
 ]

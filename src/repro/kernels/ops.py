@@ -9,14 +9,17 @@ work); the scan kernels are forward-only ops used by serving paths.
 from __future__ import annotations
 
 import functools
+import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import ref as _ref
+from .betaincinv_pallas import betaincinv_kernel_call
 from .decode_attention import decode_attention_kernel_call
 from .flash_attention import flash_attention_fwd
+from .online_tick import online_tick_kernel_call
 from .replay_grid import replay_grid_kernel_call
 from .rglru_scan import rglru_scan_kernel_call
 from .ssd_scan import ssd_scan_kernel_call
@@ -27,8 +30,16 @@ __all__ = [
     "rglru_scan_op",
     "ssd_scan_op",
     "replay_grid_op",
+    "betaincinv_op",
+    "online_tick_op",
     "on_tpu",
 ]
+
+# Explicit override for the interpret/native switch.  Unset (the
+# default) -> backend autodetection: native lowering on TPU, interpret
+# elsewhere.  "1"/"true"/"yes"/"interpret" -> force interpret; any other
+# non-empty value -> force native.
+_INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
 
 def on_tpu() -> bool:
@@ -36,6 +47,16 @@ def on_tpu() -> bool:
 
 
 def _interpret() -> bool:
+    """Resolve the Pallas interpret flag: env override first, then
+    backend autodetection (native iff the default backend is TPU).
+
+    Resolved OUTSIDE jit by the ops below and passed as a static arg, so
+    flipping the env var between calls is honored rather than baked into
+    the first trace.
+    """
+    env = os.environ.get(_INTERPRET_ENV, "").strip().lower()
+    if env:
+        return env in ("1", "true", "yes", "interpret")
     return not on_tpu()
 
 
@@ -87,10 +108,55 @@ def ssd_scan_op(x, A, Bm, Cm, chunk: int = 128):
                                 interpret=_interpret())
 
 
-@functools.partial(jax.jit, static_argnames=("rho",))
+@functools.partial(jax.jit, static_argnames=("rho", "interpret"))
+def _replay_grid_jit(P, lat, cost, alphas, lambdas, rho, interpret):
+    return replay_grid_kernel_call(P, lat, cost, alphas, lambdas,
+                                   rho=rho, interpret=interpret)
+
+
 def replay_grid_op(P, lat, cost, alphas, lambdas, rho: float = 0.5):
     """§12.1 fused counterfactual (alpha, lambda) grid sweep: one kernel
     launch over all log rows x grid cells.  Returns (A, L) arrays
     (speculate_count, expected_latency_sum, expected_waste_sum)."""
-    return replay_grid_kernel_call(P, lat, cost, alphas, lambdas,
-                                   rho=rho, interpret=_interpret())
+    return _replay_grid_jit(P, lat, cost, alphas, lambdas, rho,
+                            _interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def _betaincinv_jit(a, b, q, block_n, interpret):
+    return betaincinv_kernel_call(a, b, q, block_n=block_n,
+                                  interpret=interpret)
+
+
+def betaincinv_op(a, b, q, block_n: int = 1024):
+    """Batched Beta quantile via the Pallas kernel: (n,) -> (n,).
+    <=1e-10 relative vs the `jax.scipy`-based `core.betainc.betaincinv`
+    (not bitwise — the kernel carries its own betainc evaluator)."""
+    return _betaincinv_jit(a, b, q, block_n, _interpret())
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("use_lower_bound", "check_drift", "block_n",
+                     "interpret"),
+)
+def _online_tick_jit(post, rowcfg, flags, zero, row, reqs, out_row, out_x,
+                     consecutive_n, use_lower_bound, check_drift, block_n,
+                     interpret):
+    return online_tick_kernel_call(
+        post, rowcfg, flags, zero, row, reqs, out_row, out_x,
+        consecutive_n, use_lower_bound=use_lower_bound,
+        check_drift=check_drift, block_n=block_n, interpret=interpret)
+
+
+def online_tick_op(post, rowcfg, flags, zero, row, reqs, out_row, out_x,
+                   consecutive_n, use_lower_bound: bool = False,
+                   check_drift: bool = False, block_n: int = 1024):
+    """Fused online-service tick (settle + D4 gate + drift) in one Pallas
+    launch over the SoA row axis.  Mean-path outputs are bitwise-f64
+    equal to `OnlineDecisionService._tick_impl`; the lower-bound / drift
+    quantile paths sit at the <=1e-10 betaincinv tier."""
+    return _online_tick_jit(
+        post, rowcfg, flags, zero, row, reqs, out_row, out_x,
+        consecutive_n, use_lower_bound, check_drift, block_n,
+        _interpret())

@@ -31,6 +31,9 @@ def test_smoke_mode_parity_and_schema():
     assert es["parity"]["grid_reroute_fraction_bitwise"] is True
     assert es["parity"]["grid_reroute_max_rel_error"] <= 1e-12
     assert es["segments"] > 1
+    # the pipelined replay (stats/handoff overlap) ran the same tiny log
+    # through its host-loop dispatch and matched fleet_replay bitwise too
+    assert es["pipelined"]["parity"]["bitwise_f64_vs_fleet_replay"] is True
     # online decision service gate: the batched tick must have passed the
     # bitwise-f64 decide parity (and §7.5 flag parity) before timing, and
     # the published pareto rows must carry the f64 dtype label matching
@@ -161,6 +164,10 @@ def test_checked_in_bench_files_carry_required_schema():
     assert es["parity"]["bitwise_f64_vs_fleet_replay"] is True
     assert [r["devices"] for r in es["scaling"]] == [1, 2, 4, 8]
     assert all(r["shards"] == r["devices"] for r in es["scaling"])
+    # the pipelined row is a timed measurement whose parity gate passed
+    # at the full episode count before its clock started
+    assert es["pipelined"]["pipelined_s"] > 0.0
+    assert es["pipelined"]["parity"]["bitwise_f64_vs_fleet_replay"] is True
     # acceptance shape: the online decision service row — B up to 1024,
     # bitwise decide parity asserted pre-timing, and the warm B=1024 tick
     # >= 20x faster per decision than the scalar decide loop
@@ -209,6 +216,47 @@ def test_checked_in_frontend_record_shape():
     assert set(fe["fault_matrix"]) >= bench_run._FRONTEND_FAULTS
 
 
+def test_kernels_smoke_gate_parity_before_timing():
+    from benchmarks import kernels_bench
+
+    rec = kernels_bench.smoke()
+    bench_run.validate_kernels_record(rec, "kernels smoke record")
+    # the betaincinv kernel sat inside the same 1e-10 envelope tier-1
+    # pins for the XLA inversion, against both references
+    bii = rec["betaincinv"]
+    assert bii["parity"]["max_rel_vs_core"] <= bii["parity"]["asserted_rtol"]
+    assert bii["parity"]["max_rel_vs_scipy"] <= bii["parity"]["asserted_rtol"]
+    assert [r["block_n"] for r in bii["sweep"]] == sorted(
+        {r["block_n"] for r in bii["sweep"]})
+    # the fused tick matched the default XLA tick bitwise-f64 on the
+    # mean path through the real service dispatch, and the §7.5 tier
+    # flag-matched with only betainc-implementation-level EV drift
+    tick = rec["online_tick"]
+    assert tick["parity"]["mean_path_bitwise_f64"] is True
+    assert tick["parity"]["lower_bound_max_rel"] <= 1e-9
+    # absent an explicit env override the kernels run in interpret mode
+    # off-TPU (Mosaic only lowers on TPU) and the record must say so
+    import os
+    if not os.environ.get("REPRO_PALLAS_INTERPRET"):
+        assert rec["interpret"] == (rec["backend"] != "tpu")
+    # tiny shapes: the smoke record never masquerades as the real one
+    assert bii["n"] < 1024 and tick["rows"] < 64
+
+
+def test_checked_in_kernels_record_shape():
+    checked = bench_run.validate_bench_files()
+    assert "BENCH_kernels.json" in checked
+    rec = json.loads((bench_run.ROOT / "BENCH_kernels.json").read_text())
+    # acceptance shape: a timed record (full batch, real sweeps) whose
+    # parity gates passed before its clock started
+    assert rec["betaincinv"]["n"] >= 1024
+    assert all(r["us_per_call"] > 0.0 for r in rec["betaincinv"]["sweep"])
+    assert rec["betaincinv"]["reference_us_per_call"] > 0.0
+    assert rec["online_tick"]["parity"]["mean_path_bitwise_f64"] is True
+    assert all(r["us_per_tick"] > 0.0 for r in rec["online_tick"]["sweep"])
+    assert rec["online_tick"]["reference_us_per_tick"] > 0.0
+
+
 def test_smoke_rejects_malformed_record():
     with pytest.raises(AssertionError, match="missing keys"):
         bench_run.validate_fleet_record({"benchmark": "x"})
@@ -216,6 +264,30 @@ def test_smoke_rejects_malformed_record():
         bench_run.validate_frontend_record({"benchmark": "x"})
     with pytest.raises(AssertionError, match="missing keys"):
         bench_run.validate_store_record({"benchmark": "x"})
+    with pytest.raises(AssertionError, match="missing keys"):
+        bench_run.validate_kernels_record({"benchmark": "x"})
+    # a hand-edited kernels record can't smuggle timing past a failed
+    # parity gate: the validator re-checks the recorded outcome
+    bad = {
+        "benchmark": "pallas_hot_path_kernels", "backend": "cpu",
+        "interpret": True,
+        "betaincinv": {
+            "n": 8,
+            "parity": {"max_rel_vs_core": 1e-3, "max_rel_vs_scipy": 0.0,
+                       "asserted_rtol": 1e-10},
+            "sweep": [{"block_n": 8, "us_per_call": 1.0}],
+            "reference_us_per_call": 1.0,
+        },
+        "online_tick": {
+            "rows": 8, "batch": 8, "settles": 8,
+            "parity": {"mean_path_bitwise_f64": True,
+                       "lower_bound_max_rel": 0.0},
+            "sweep": [{"block_n": 8, "us_per_tick": 1.0}],
+            "reference_us_per_tick": 1.0,
+        },
+    }
+    with pytest.raises(AssertionError, match="exceeds asserted rtol"):
+        bench_run.validate_kernels_record(bad)
 
 
 def test_rollout_smoke_gate_determinism_parity_zero_recompile():

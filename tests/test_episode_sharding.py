@@ -103,43 +103,50 @@ def test_sharded_lower_bound_parity(seed, n_segments):
         _assert_sharded_parity(base, sharded, ev_ulp=True)
 
 
+def _make_stream_case(E=10, K=4):
+    """The §9.1 streaming-cancel test vector: a chunked u -> v edge whose
+    replay mixes cancelled and surviving streams.  Returns (lowered,
+    success, cP)."""
+    rng = np.random.default_rng(7)
+    chunk_P = rng.uniform(0.05, 0.95, (E, K))
+
+    wf = Workflow("stream")
+    wf.add_op(Operation(
+        "u", run=lambda x: "chunked-output-string-for-u",
+        latency_est_s=2.0, input_tokens_est=100, output_tokens_est=50,
+        metadata={"input": "doc", "chunks": K},
+    ))
+    wf.add_op(Operation(
+        "v", run=lambda i: f"v({i})", latency_est_s=1.5,
+        input_tokens_est=400, output_tokens_est=900,
+    ))
+    wf.add_edge(Edge("u", "v"))
+    wf = wf.freeze()
+    key = ("u", "v")
+    params = PlannerParams(
+        alpha=0.4, lambda_usd_per_s=0.08,
+        posteriors={key: BetaPosterior.from_prior_mean(0.9)},
+    )
+    pred = {key: TemplatePredictor(
+        template=lambda i, p=None: "chunked-output-string-for-u")}
+    lowered = lower_workflow(
+        wf, params, predictors=pred,
+        stream_refiners={key: lambda i, p: (None, 0.0)},
+    )
+    vi = lowered.names.index("v")
+    success = np.ones((E, lowered.n_ops), bool)
+    cP = np.ones((E, lowered.n_ops, K))
+    cP[:, vi, :] = chunk_P
+    return lowered, success, cP
+
+
 @pytest.mark.parametrize("n_segments", SEGMENTS)
 def test_sharded_streaming_cancel_parity(n_segments):
     """§9.1 mid-stream cancellation (chunk_P + stream refiner): chunk
     verdicts, fractional waste and makespans survive episode sharding
     bitwise — including when a cancel lands in a ragged last chunk."""
     with enable_x64():
-        E, K = 10, 4
-        rng = np.random.default_rng(7)
-        chunk_P = rng.uniform(0.05, 0.95, (E, K))
-
-        wf = Workflow("stream")
-        wf.add_op(Operation(
-            "u", run=lambda x: "chunked-output-string-for-u",
-            latency_est_s=2.0, input_tokens_est=100, output_tokens_est=50,
-            metadata={"input": "doc", "chunks": K},
-        ))
-        wf.add_op(Operation(
-            "v", run=lambda i: f"v({i})", latency_est_s=1.5,
-            input_tokens_est=400, output_tokens_est=900,
-        ))
-        wf.add_edge(Edge("u", "v"))
-        wf = wf.freeze()
-        key = ("u", "v")
-        params = PlannerParams(
-            alpha=0.4, lambda_usd_per_s=0.08,
-            posteriors={key: BetaPosterior.from_prior_mean(0.9)},
-        )
-        pred = {key: TemplatePredictor(
-            template=lambda i, p=None: "chunked-output-string-for-u")}
-        lowered = lower_workflow(
-            wf, params, predictors=pred,
-            stream_refiners={key: lambda i, p: (None, 0.0)},
-        )
-        vi = lowered.names.index("v")
-        success = np.ones((E, lowered.n_ops), bool)
-        cP = np.ones((E, lowered.n_ops, K))
-        cP[:, vi, :] = chunk_P
+        lowered, success, cP = _make_stream_case()
         base = fleet_replay(lowered, success, [0.4], [0.08], chunk_P=cP)
         assert base.cancelled.any() and not base.cancelled.all(), \
             "test vector should mix cancelled and surviving streams"
@@ -227,6 +234,86 @@ def test_chunk_episodes_rejects_empty_log_and_bad_segments():
     ch = chunk_episodes(lowered, success, 3, pred_ok=pred_ok)
     assert (ch.n_segments, ch.seg_len, ch.n_episodes) == (3, 2, 4)
     assert ch.ep_mask.sum() == 4 and not ch.ep_mask[-1, -1]
+
+
+class TestPipelinedReplay:
+    """``pipelined=True``: the host-loop overlap (segment c's stats
+    dispatched the moment its boundary carry exists, the carry advanced
+    immediately after) must not change a single bit relative to the
+    two-pass engine or the unsharded scan — same per-segment scan
+    bodies, same sequential handoff semantics, only the dispatch order
+    differs."""
+
+    @pytest.mark.parametrize("n_segments", SEGMENTS)
+    @pytest.mark.parametrize("seed", range(2))
+    def test_random_dag_bitwise(self, seed, n_segments):
+        with enable_x64():
+            lowered, success, pred_ok = _lower_dag(
+                make_random_dag(seed, episodes=10))
+            base = fleet_replay(lowered, success, GRID_ALPHAS, GRID_LAMS,
+                                pred_ok=pred_ok)
+            piped = episode_sharded_replay(
+                lowered, success, GRID_ALPHAS, GRID_LAMS, pred_ok=pred_ok,
+                n_segments=n_segments, pipelined=True)
+            _assert_sharded_parity(base, piped)
+
+    @pytest.mark.parametrize("n_segments", SEGMENTS)
+    def test_discounted(self, n_segments):
+        """discount<1: the forgetting carry hands off exactly — the
+        regime with no associative fallback, so the pipelined handoff
+        must be the same sequential recurrence."""
+        with enable_x64():
+            lowered, success, pred_ok = _lower_dag(
+                make_random_dag(100, episodes=10, discount=0.9))
+            assert np.any(lowered.discount[lowered.has_edge] < 1.0)
+            base = fleet_replay(lowered, success, GRID_ALPHAS, GRID_LAMS,
+                                pred_ok=pred_ok)
+            piped = episode_sharded_replay(
+                lowered, success, GRID_ALPHAS, GRID_LAMS, pred_ok=pred_ok,
+                n_segments=n_segments, pipelined=True)
+            _assert_sharded_parity(base, piped)
+
+    @pytest.mark.parametrize("n_segments", SEGMENTS)
+    def test_lower_bound(self, n_segments):
+        """§7.5 credible-bound gating through the pipelined path: same
+        EV convention as the two-pass engine (1 ULP for the betaincinv
+        fusion), everything else bitwise."""
+        with enable_x64():
+            lowered, success, pred_ok = _lower_dag(
+                make_random_dag(1, episodes=10, use_lower_bound=True))
+            assert lowered.use_lower_bound
+            base = fleet_replay(lowered, success, GRID_ALPHAS, GRID_LAMS,
+                                pred_ok=pred_ok)
+            piped = episode_sharded_replay(
+                lowered, success, GRID_ALPHAS, GRID_LAMS, pred_ok=pred_ok,
+                n_segments=n_segments, pipelined=True)
+            _assert_sharded_parity(base, piped, ev_ulp=True)
+
+    @pytest.mark.parametrize("n_segments", SEGMENTS)
+    def test_streaming_cancel(self, n_segments):
+        with enable_x64():
+            lowered, success, cP = _make_stream_case()
+            base = fleet_replay(lowered, success, [0.4], [0.08],
+                                chunk_P=cP)
+            piped = episode_sharded_replay(
+                lowered, success, [0.4], [0.08], chunk_P=cP,
+                n_segments=n_segments, pipelined=True)
+            _assert_sharded_parity(base, piped)
+
+    def test_boundaries_and_stats_match_two_pass(self):
+        """Direct pipelined-vs-two-pass check: identical segment-start
+        carries (return_boundaries) and identical stat blocks."""
+        with enable_x64():
+            lowered, success, pred_ok = _lower_dag(
+                make_random_dag(5, episodes=12))
+            two_pass, b2 = episode_sharded_replay(
+                lowered, success, GRID_ALPHAS, GRID_LAMS, pred_ok=pred_ok,
+                n_segments=4, return_boundaries=True)
+            piped, bp = episode_sharded_replay(
+                lowered, success, GRID_ALPHAS, GRID_LAMS, pred_ok=pred_ok,
+                n_segments=4, pipelined=True, return_boundaries=True)
+            np.testing.assert_array_equal(b2, bp)
+            _assert_sharded_parity(two_pass, piped)
 
 
 def test_sharded_pareto_matches_unsharded():

@@ -593,3 +593,105 @@ def test_online_calibration_batch_empty_signals():
     assert rep.tier2_false_accept_rate is None
     assert rep.token_cov is None and not rep.uncertain_cost
     assert not rep.lambda_refresh_due
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas tick (kernels.online_tick behind use_fused_tick) and the
+# empty-settle dispatch skip
+# ---------------------------------------------------------------------------
+def test_fused_tick_defaults_off_and_matches_default_bitwise():
+    """The fused settle+gate+drift kernel is opt-in (flag defaults off)
+    and, when on, is numerically invisible: every decision field, the
+    posterior table, the telemetry ring and the drift counters match the
+    default XLA tick bitwise-f64 across a mixed tick stream."""
+    with enable_x64():
+        a = _service(n_rows=8)
+        assert a.use_fused_tick is False
+        b = _service(n_rows=8, use_fused_tick=True)
+        rng = np.random.default_rng(7)
+        for t in range(4):
+            req = _random_requests(rng, 24, 8)
+            outs = [(int(r), bool(s)) for r, s in zip(
+                rng.integers(0, 8, 5), rng.integers(0, 2, 5))]
+            da = _tick(a, req, outcomes=outs, check_drift=(t % 2 == 1))
+            db = _tick(b, req, outcomes=outs, check_drift=(t % 2 == 1))
+            np.testing.assert_array_equal(da.EV_usd, db.EV_usd)
+            np.testing.assert_array_equal(da.threshold_usd, db.threshold_usd)
+            np.testing.assert_array_equal(da.margin_usd, db.margin_usd)
+            np.testing.assert_array_equal(da.speculate, db.speculate)
+            np.testing.assert_array_equal(
+                da.drift_triggered, db.drift_triggered)
+        np.testing.assert_array_equal(
+            a.posterior_snapshot(), b.posterior_snapshot())
+        np.testing.assert_array_equal(np.asarray(a._tel), np.asarray(b._tel))
+        np.testing.assert_array_equal(a.breach_runs(), b.breach_runs())
+
+
+def test_fused_tick_lower_bound_flags_match():
+    """§7.5 tier through the fused kernel: flags must agree exactly; EV
+    inherits only the in-kernel-betainc vs XLA-custom-call allowance."""
+    with enable_x64():
+        a = _service(n_rows=8)
+        b = _service(n_rows=8, use_fused_tick=True)
+        rng = np.random.default_rng(11)
+        req = _random_requests(rng, 32, 8)
+        da = _tick(a, req, use_lower_bound=True)
+        db = _tick(b, req, use_lower_bound=True)
+        np.testing.assert_array_equal(da.speculate, db.speculate)
+        np.testing.assert_allclose(da.EV_usd, db.EV_usd, rtol=1e-9)
+
+
+def test_fused_tick_rollout_falls_back_to_xla():
+    """Rollout ticks aren't fused: a fused-enabled service must answer
+    them through the default executable, identically to a default
+    service (a silent fused dispatch would diverge or crash here)."""
+    with enable_x64():
+        a = _service(n_rows=4)
+        b = _service(n_rows=4, use_fused_tick=True)
+        rng = np.random.default_rng(5)
+        row = (np.arange(8) % 4).astype(np.int32)
+        reqs = np.zeros((8, 7), np.float64)
+        reqs[:, 0] = rng.uniform(0, 1, 8)
+        reqs[:, 1] = rng.uniform(1e-3, 0.5, 8)
+        reqs[:, 2] = rng.uniform(0.05, 4.0, 8)
+        reqs[:, 3], reqs[:, 4] = 32, 160
+        reqs[:, 5], reqs[:, 6] = 3e-6, 15e-6
+        da = a.tick_packed(row, reqs, use_rollout=True, check_drift=True)
+        db = b.tick_packed(row, reqs, use_rollout=True, check_drift=True)
+        np.testing.assert_array_equal(da.EV_usd, db.EV_usd)
+        np.testing.assert_array_equal(da.speculate, db.speculate)
+        np.testing.assert_array_equal(
+            a.posterior_snapshot(), b.posterior_snapshot())
+
+
+def test_empty_settle_bucket_skipped_at_dispatch():
+    """An all-padding settle bucket is substituted with the S=0 bucket
+    before dispatch (S is part of the trace key, so this skips a whole
+    scan trace + its per-tick cost), counted, and bitwise invisible."""
+    with enable_x64():
+        a = _service(n_rows=4)
+        b = _service(n_rows=4)
+        rng = np.random.default_rng(3)
+        row = (np.arange(8) % 4).astype(np.int32)
+        reqs = np.zeros((8, 7), np.float64)
+        reqs[:, 0] = rng.uniform(0, 1, 8)
+        reqs[:, 1] = rng.uniform(1e-3, 0.5, 8)
+        reqs[:, 2] = rng.uniform(0.05, 4.0, 8)
+        reqs[:, 3], reqs[:, 4] = 32, 160
+        reqs[:, 5], reqs[:, 6] = 3e-6, 15e-6
+        pad_row = np.full(6, -1, np.int32)
+        pad_x = np.zeros(6, np.float64)
+        da = a.tick_packed(row, reqs, out_row=pad_row, out_x=pad_x)
+        db = b.tick_packed(row, reqs)
+        assert a.empty_settles_skipped == 1
+        assert b.empty_settles_skipped == 0
+        np.testing.assert_array_equal(da.EV_usd, db.EV_usd)
+        np.testing.assert_array_equal(da.speculate, db.speculate)
+        np.testing.assert_array_equal(
+            a.posterior_snapshot(), b.posterior_snapshot())
+        np.testing.assert_array_equal(np.asarray(a._tel), np.asarray(b._tel))
+        # a bucket with any real outcome must still dispatch the settle
+        real_row = np.array([0, -1, -1, -1], np.int32)
+        real_x = np.array([1.0, 0.0, 0.0, 0.0])
+        a.tick_packed(row, reqs, out_row=real_row, out_x=real_x)
+        assert a.empty_settles_skipped == 1
